@@ -1,0 +1,53 @@
+"""Paper Fig 10: speedup of the optimized flow across workload shapes.
+
+The paper sweeps GC configs and finds the benchmarks with the greatest
+(key, value)-pair pressure (HG: 768 keys × 1.4e9 values; WC) improve most,
+while SM (4 keys × 910 values) does not.  We sweep the (key_space, pairs)
+grid directly with a synthetic sum-reducer workload and report the
+combine/reduce speedup surface — the same monotonic trend, parameterized."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import MapReduce, MapReduceApp
+
+
+def make_app(key_space, lmax):
+    class App(MapReduceApp):
+        pass
+
+    a = App()
+    a.key_space = key_space
+    a.value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    a.max_values_per_key = lmax
+    a.emit_capacity = 8
+    a.map = lambda item, emit: emit(item, jnp.ones_like(item))
+    a.reduce = lambda k, v, c: jnp.sum(v)
+    return a
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("# paper Fig 10: speedup surface over (keys × pairs) pressure")
+    for K in (4, 256, 4096):
+        for n_pairs in (1 << 10, 1 << 14):
+            toks = rng.integers(0, K, size=(n_pairs // 8, 8)).astype(np.int32)
+            lmax = int(np.bincount(toks.reshape(-1), minlength=K).max())
+            lmax = max(8, 1 << int(np.ceil(np.log2(lmax + 1))))
+            app = make_app(K, lmax)
+            items = jnp.asarray(toks)
+            t_c = time_fn(lambda x: MapReduce(app).run(x).counts, items,
+                          iters=5)
+            t_r = time_fn(
+                lambda x: MapReduce(app, flow="reduce").run(x).counts,
+                items, iters=5)
+            print(row(f"flow_sweep_K{K}_N{n_pairs}", t_c * 1e6,
+                      f"speedup={t_r / t_c:.2f}x"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Figs 8/9: heap pressure -> intermediate-bytes pressure.
+
+The JVM figures show GC time collapsing when the optimizer removes the
+per-key value lists.  The TPU-native analogue: bytes accessed + peak buffer
+residency of the collector path, derived from the compiled HLO of each flow
+(same workload, same map).  Also reports the analytic intermediate sizes:
+reduce flow materializes O(N) pairs + an O(K·Lmax) window gather; combine
+flow holds O(K) holders.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import apps
+from benchmarks.common import row
+from repro.core import MapReduce
+from repro.roofline import hlo_parser
+
+
+def flow_footprint(mr: MapReduce, items):
+    lowered = mr.lower(items)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = hlo_parser.analyze_text(compiled.as_text(), default_group=1)
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+            mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    return {"bytes_accessed": cost.bytes_accessed, "peak_bytes": float(peak)}
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("# paper Figs 8/9: collector memory pressure per flow "
+          "(GC-time analogue: bytes through the memory system)")
+    for name in ("WC", "HG", "SM"):
+        app, items = apps.build(name, rng)
+        f_r = flow_footprint(MapReduce(app, flow="reduce"), items)
+        f_c = flow_footprint(MapReduce(app, flow="auto"), items)
+        print(row(f"memory_{name}_reduce_peak_bytes", f_r["peak_bytes"]))
+        print(row(f"memory_{name}_combine_peak_bytes", f_c["peak_bytes"],
+                  f"peak_ratio={f_r['peak_bytes']/max(f_c['peak_bytes'],1):.1f}x"))
+        print(row(f"memory_{name}_reduce_bytes_accessed",
+                  f_r["bytes_accessed"]))
+        print(row(f"memory_{name}_combine_bytes_accessed",
+                  f_c["bytes_accessed"],
+                  f"traffic_ratio={f_r['bytes_accessed']/max(f_c['bytes_accessed'],1):.1f}x"))
+
+
+if __name__ == "__main__":
+    main()

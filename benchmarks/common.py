@@ -1,0 +1,29 @@
+"""Timing + reporting helpers shared by the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:
+    """Median wall seconds per call (jit-compiled callable).
+
+    The paper uses 5 warmup + 10 timed iterations; we use 3+10 with a
+    median (single-core container, background noise)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

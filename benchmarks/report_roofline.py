@@ -1,0 +1,66 @@
+"""Assemble the EXPERIMENTS.md roofline tables from results/dryrun/*.json."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(results_dir="results/dryrun"):
+    cells = {}
+    for f in glob.glob(os.path.join(results_dir, "*.json")):
+        r = json.load(open(f))
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return cells
+
+
+def table(cells, mesh="pod"):
+    hdr = ("| arch | shape | peak GiB (tpu-adj) | compute s | memory s | "
+           "collective s | dominant | useful ratio | MFU@roofline |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | "
+                         f"SKIP: {r['reason'][:48]} | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | ERROR {r['error'][:60]} |")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]
+        lines.append(
+            f"| {arch} | {shape} | {mem['peak_per_chip_gib']:.1f} "
+            f"({mem.get('peak_tpu_adjusted_gib', mem['peak_per_chip_gib']):.1f}) "
+            f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+            f"| {rl['collective_s']:.3f} | {rl['dominant']} "
+            f"| {rl['useful_ratio']:.3f} | {rl['mfu']:.4f} |")
+    return "\n".join(lines)
+
+
+def collective_table(cells):
+    lines = ["| arch | shape | pod collectives (count / GiB wire per chip) |",
+             "|---|---|---|"]
+    for (arch, shape, m), r in sorted(cells.items()):
+        if m != "pod" or r["status"] != "ok":
+            continue
+        ops = {k: v for k, v in r["roofline"]["collective_ops"].items()
+               if not k.startswith("_")}
+        desc = ", ".join(
+            f"{k}:{int(v['count'])}/{v['bytes']/2**30:.2f}"
+            for k, v in sorted(ops.items()))
+        lines.append(f"| {arch} | {shape} | {desc} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    cells = load()
+    print("## single-pod (16×16 = 256 chips)\n")
+    print(table(cells, "pod"))
+    print("\n## multi-pod (2×16×16 = 512 chips)\n")
+    print(table(cells, "multipod"))
+    print("\n## collective breakdown (pod)\n")
+    print(collective_table(cells))

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+  bench_phoenix_suite     Figs 6/7  (the up-to-2.0x optimizer claim)
+  bench_memory            Figs 8/9  (heap/GC pressure -> bytes pressure)
+  bench_optimizer_overhead  §4.3    (81us detect / 7.6ms transform)
+  bench_flow_sweep        Fig 10    (speedup vs (key,value) pressure)
+  bench_scalability       Fig 5     (scaling -> collective-bytes scaling)
+  bench_integrations      beyond paper (grad-accum / MoE / decode combiners)
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_flow_sweep, bench_integrations,
+                            bench_memory, bench_optimizer_overhead,
+                            bench_phoenix_suite, bench_scalability)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_phoenix_suite, bench_memory,
+                bench_optimizer_overhead, bench_flow_sweep,
+                bench_scalability, bench_integrations):
+        try:
+            mod.main()
+        except Exception:
+            print(f"{mod.__name__}_FAILED,0,", file=sys.stdout)
+            traceback.print_exc()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's Fig 2 word-count in MR4X.
+
+The user writes map + reduce; the semantic-aware optimizer derives the
+combiner and switches to the combine flow automatically.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MapReduce, MapReduceApp
+from repro.data.pipeline import tokenize_words
+
+TEXT = """the quick brown fox jumps over the lazy dog
+the dog barks and the fox runs the end"""
+VOCAB = 4096
+
+
+class WordCount(MapReduceApp):
+    key_space = VOCAB
+    value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    emit_capacity = 8
+    max_values_per_key = 64
+
+    def map(self, window, emit):          # window: [8] token ids
+        emit(window, jnp.ones_like(window))
+
+    def reduce(self, key, values, count):  # what the user writes...
+        return jnp.sum(values)             # ...the combiner is DERIVED
+
+
+ids = tokenize_words(TEXT, VOCAB)
+pad = (-len(ids)) % 8
+windows = np.pad(ids, (0, pad), constant_values=VOCAB).reshape(-1, 8)
+
+mr = MapReduce(WordCount())
+print(f"optimizer plan: {mr.plan.flow} ({mr.plan.reason})")
+d = mr.plan.derivation
+print(f"  detect {d.detect_s*1e6:.0f}us | synthesize {d.transform_s*1e6:.0f}us "
+      f"| validate {d.validate_s*1e3:.1f}ms  (paper: 81us / 7.6ms)")
+
+res = mr.run(jnp.asarray(windows))
+inv = {}
+for w in TEXT.split():
+    inv[int(tokenize_words(w, VOCAB)[0])] = w.lower()
+counts = {inv[k]: int(v) for k, v in res.to_dict().items() if k in inv}
+print("word counts:", dict(sorted(counts.items(), key=lambda kv: -kv[1])))
+assert counts["the"] == 5

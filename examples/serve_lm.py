@@ -1,0 +1,16 @@
+"""Serve a small model with batched requests: prefill + greedy decode with
+an int8 KV cache (the serving-side combiner integrations).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-moe-30b-a3b", "--reduced",
+                "--batch", "4", "--prompt-len", "12", "--max-new", "12",
+                "--kv-dtype", "int8"]
+    serve_main()

@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on CPU with the combiner-based gradient accumulation,
+checkpointing every 50 steps.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+(defaults to 40 steps so the example completes quickly; pass --steps 300
+for the full run)
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    args, _ = ap.parse_known_args()
+    sys.argv = [sys.argv[0], "--arch", "llama3-8b", "--reduced",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "64",
+                "--microbatches", "4", "--ckpt-dir", "/tmp/mr4x_ckpt",
+                "--ckpt-every", "50"]
+    train_main()

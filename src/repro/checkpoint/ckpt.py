@@ -1,0 +1,137 @@
+"""Sharded, atomic, async checkpoints with restore-time resharding.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       tree structure, shapes, dtypes, step
+            arrays.npz          flat leaf arrays (leaf_<i>)
+         <dir>/LATEST           text file naming the newest complete step
+
+Writes go to ``step_<N>.tmp`` then ``os.replace`` (atomic on POSIX) — a
+crashed writer never corrupts LATEST.  ``AsyncCheckpointer`` runs saves on a
+writer thread so the train loop is not blocked (fault-tolerance posture:
+checkpoint/restart is the recovery mechanism for node failures; see
+distributed/fault.py).  ``restore(..., shardings=...)`` device_puts straight
+into the (possibly different) mesh — elastic restarts reshard here.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "shapes": [list(np.shape(a)) for a in arrays.values()],
+        "dtypes": [str(np.asarray(a).dtype) for a in arrays.values()],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        import shutil
+
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        import shutil
+
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, example_tree: Any, *, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``example_tree`` (avals ok).
+
+    ``shardings``: optional pytree of NamedShardings — leaves are
+    device_put with them, which RESHARDS onto whatever mesh they name
+    (elastic restart path).
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    _, treedef = _flatten(example_tree)
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+        leaves = [jax.device_put(a, s) for a, s in zip(leaves, shard_leaves)]
+    else:
+        leaves = [jax.numpy.asarray(a) for a in leaves]
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+class AsyncCheckpointer:
+    """Background writer thread; at most one save in flight per step."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: Exception | None = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.ckpt_dir, step, tree, keep=self.keep)
+            except Exception as e:  # surfaced on next submit/close
+                self._err = e
+
+    def submit(self, step: int, tree: Any):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((step, host_tree))
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()
+        if self._err:
+            raise self._err

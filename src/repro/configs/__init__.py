@@ -1,0 +1,143 @@
+"""Assigned architectures × input shapes (+ the paper's own benchmarks).
+
+``get_config(name)`` returns the exact published ModelConfig;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch × shape) cell — weak-type-correct, shardable, no
+device allocation (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "qwen1.5-32b": "qwen1p5_32b",
+    "llama3-8b": "llama3_8b",
+    "qwen2.5-14b": "qwen2p5_14b",
+    "gemma2-27b": "gemma2_27b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "whisper-medium": "whisper_medium",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "internvl2-26b": "internvl2_26b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = _MODULES.get(name, name.replace("-", "_").replace(".", "p"))
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+#: archs whose decode path is full (or global-alternating) softmax attention:
+#: long_500k is skipped for these (DESIGN.md §Arch-applicability).
+FULL_ATTENTION_ARCHS = frozenset({
+    "qwen1.5-32b", "llama3-8b", "qwen2.5-14b", "gemma2-27b",
+    "whisper-medium", "llama4-scout-17b-a16e", "qwen3-moe-30b-a3b",
+    "internvl2-26b",
+})
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+        return False, "long_500k needs sub-quadratic attention (skip; DESIGN.md)"
+    return True, ""
+
+
+def all_cells():
+    """The 40 (arch × shape) cells, with skip annotations."""
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            ok, why = cell_supported(a, s)
+            out.append((a, s, ok, why))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins per (arch × shape)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *, kv_dtype=None) -> dict:
+    """Model inputs for the cell's step function (no state; see state_specs).
+
+    train  -> {"tokens", "labels"} (+frames/patches per frontend stub)
+    prefill-> {"tokens"} (+frames/patches)
+    decode -> {"tokens": [B]} single step
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {
+                "frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((B, cfg.dec_len), i32),
+                "labels": _sds((B, cfg.dec_len), i32),
+            }
+        if cfg.family == "vlm":
+            Pn = cfg.num_patches
+            return {
+                "tokens": _sds((B, S - Pn), i32),
+                "patches": _sds((B, Pn, cfg.d_model), jnp.bfloat16),
+                "labels": _sds((B, S), i32),
+            }
+        return {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": _sds((B, 1), i32)}
+        if cfg.family == "vlm":
+            Pn = cfg.num_patches
+            return {"tokens": _sds((B, S - Pn), i32),
+                    "patches": _sds((B, Pn, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": _sds((B, S), i32)}
+
+    if shape.kind == "decode":
+        return {"tokens": _sds((B,), i32)}
+    raise ValueError(shape.kind)
+
+
+def state_specs(cfg: ModelConfig, shape: ShapeSpec, *, kv_dtype=None):
+    """Decode-state avals (KV caches / SSM states) for serve cells."""
+    from repro.models.registry import get_model
+
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, shape.seq_len,
+                                        kv_dtype=kv_dtype))
+
+
+def default_kv_dtype(arch: str, shape_name: str):
+    """int8 KV where bf16 exceeds the single-pod HBM budget (DESIGN.md)."""
+    if arch == "qwen1.5-32b" and shape_name == "decode_32k":
+        return jnp.int8
+    return None

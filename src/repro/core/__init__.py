@@ -1,0 +1,23 @@
+"""MR4X core: the paper's contribution as a composable JAX module."""
+
+from repro.core.api import (  # noqa: F401
+    Emitter,
+    MapReduce,
+    MapReduceApp,
+    MapReduceResult,
+    make_app,
+)
+from repro.core.combiner import (  # noqa: F401
+    CombinerSpec,
+    Monoid,
+    count_spec,
+    logsumexp_spec,
+    max_spec,
+    mean_spec,
+    min_spec,
+    monoid_spec,
+    product_spec,
+    sum_spec,
+)
+from repro.core.optimizer import Derivation, derive_combiner  # noqa: F401
+from repro.core.plan import ExecutionPlan, plan_execution  # noqa: F401

@@ -1,0 +1,139 @@
+"""Public MR4X API — mirrors the paper's Fig 2 user code shape.
+
+The user supplies only a :class:`Mapper` and :class:`Reducer` (or subclasses
+:class:`MapReduceApp`) and calls :meth:`MapReduce.run`.  Everything else —
+combiner derivation, flow selection, lowering, distribution — is the
+framework's job, "transparently to the user" (paper abstract).
+
+Word count, for comparison with the paper's Fig 2::
+
+    class WordCount(MapReduceApp):
+        key_space = VOCAB
+        value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def map(self, item, emit):          # item: [window] token ids
+            emit(item, jnp.ones_like(item)) # one (word, 1) pair per token
+
+        def reduce(self, key, values, count):
+            return jnp.sum(values)
+
+    result = MapReduce(WordCount()).run(token_windows)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collector as col
+from repro.core import engine as eng
+from repro.core import combiner as C
+from repro.core.optimizer import Derivation, derive_combiner
+from repro.core.plan import ExecutionPlan, plan_execution
+
+
+class MapReduceApp:
+    """Subclass and provide map/reduce; set the class attributes.
+
+    Attributes
+    ----------
+    key_space: dense key-id capacity K (keys are int32 in [0, K)).
+    value_aval: ShapeDtypeStruct of one emitted value.
+    pad_value: padding used for the reduce-flow value windows.
+    max_values_per_key: static Lmax bound for the reduce flow.
+    emit_capacity: max pairs one ``map(item, ...)`` call may emit.
+    """
+
+    key_space: int = 0
+    value_aval: jax.ShapeDtypeStruct = jax.ShapeDtypeStruct((), jnp.float32)
+    pad_value: Any = 0
+    max_values_per_key: int = 64
+    emit_capacity: int = 16
+
+    # -- user hooks ---------------------------------------------------------
+    def map(self, item, emit) -> None:
+        raise NotImplementedError
+
+    def reduce(self, key, values, count):
+        raise NotImplementedError
+
+    # optional: supply a hand-written combiner (Phoenix-style) to bypass the
+    # optimizer — used in benchmarks to compare manual vs derived combiners.
+    manual_combiner: C.CombinerSpec | None = None
+
+
+# Functional-style construction (paper Fig 2 uses anonymous classes).
+def make_app(map_fn: Callable, reduce_fn: Callable, **attrs) -> MapReduceApp:
+    app = MapReduceApp()
+    app.map = map_fn  # type: ignore[method-assign]
+    app.reduce = reduce_fn  # type: ignore[method-assign]
+    for k, v in attrs.items():
+        setattr(app, k, v)
+    return app
+
+
+#: re-exported: the emitter type handed to user map functions.
+Emitter = eng.Emitter
+
+
+@dataclasses.dataclass
+class MapReduceResult:
+    keys: jax.Array  # [K] = arange(K)
+    values: Any  # [K, ...]
+    counts: jax.Array  # [K]; 0 == key never emitted
+    plan: "ExecutionPlan | None" = None
+
+    def to_dict(self) -> dict:
+        """Host-side {key: value} for present keys (tests / small results)."""
+        import numpy as np
+
+        counts = np.asarray(self.counts)
+        vals = np.asarray(self.values)
+        return {int(k): vals[k] for k in np.nonzero(counts > 0)[0]}
+
+
+class MapReduce:
+    """``MapReduce(app).run(items)`` — the framework entry point.
+
+    flow:
+      * "auto"    derive a combiner; combine flow if possible, else reduce
+                  (exactly the paper's optimizer behaviour)
+      * "reduce"  force the baseline flow (paper's un-optimized MR4J)
+      * "combine" force the combine flow (error if not derivable)
+    """
+
+    def __init__(
+        self,
+        app: MapReduceApp,
+        *,
+        flow: str = "auto",
+        trust_semantics: bool = False,
+        combine_impl: str = "auto",
+        use_kernels: bool = False,
+        donate: bool = False,
+    ):
+        if app.key_space <= 0:
+            raise ValueError("app.key_space must be positive")
+        self.app = app
+        self.flow = flow
+        self.combine_impl = combine_impl
+        self.use_kernels = use_kernels
+        self.plan = plan_execution(app, flow=flow,
+                                   trust_semantics=trust_semantics)
+        self._run = jax.jit(partial(eng.run_local, app, self.plan,
+                                    combine_impl=combine_impl,
+                                    use_kernels=use_kernels))
+
+    def run(self, items) -> MapReduceResult:
+        keys, values, counts = self._run(items)
+        return MapReduceResult(keys, values, counts, plan=self.plan)
+
+    # Lowering hooks for benchmarks / dry-run analysis.
+    def lower(self, items):
+        return jax.jit(partial(eng.run_local, self.app, self.plan,
+                               combine_impl=self.combine_impl,
+                               use_kernels=self.use_kernels)).lower(items)

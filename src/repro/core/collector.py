@@ -1,0 +1,271 @@
+"""Intermediate (key, value) collectors — the two execution flows.
+
+Paper §2.4/§3.1: MR4J's collector is a thread-safe hash table; a new key
+instantiates a new value *list* (reduce flow) or a new *holder* (combine
+flow).  The TPU-native equivalents:
+
+* :func:`reduce_flow`  — **materializing collector**: the full pair stream is
+  written out, sorted by key, grouped, and the user reduce is applied per key
+  over gathered padded windows.  Costs O(N) pair buffer + a sort + an
+  O(K·Lmax) window gather — the HBM analogue of the JVM heap pressure the
+  paper measures in Figs 8/9.
+
+* :func:`combine_flow` — **combining collector**: each emitted value is folded
+  into a per-key holder table at emit time.  O(K) state, single pass, no sort,
+  no reduce phase.  Lowers to (in preference order)
+    - MXU one-hot matmul      (additive monoids, small key space),
+    - ``table.at[keys].op()`` scatter-combine (any scatter monoid),
+    - vectorized first-occurrence gather (the first-element idiom),
+    - sorted segment fold     (generic streaming combiners, e.g. scan folds).
+
+Keys are dense int32 ids in ``[0, key_space)``; invalid emissions use the
+sentinel ``key_space`` and are dropped by out-of-bounds scatter semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import combiner as C
+
+SENTINEL = "sentinel"  # invalid-pair key == key_space
+
+
+@dataclasses.dataclass(frozen=True)
+class PairStream:
+    """Flat emitted pairs. keys[i] == key_space marks an invalid slot."""
+
+    keys: jax.Array  # [N] int32 in [0, key_space]
+    values: jax.Array  # [N, *value_shape]
+    key_space: int
+
+    @property
+    def valid(self) -> jax.Array:
+        return self.keys < self.key_space
+
+
+@dataclasses.dataclass(frozen=True)
+class Grouped:
+    """Result table over the dense key space."""
+
+    keys: jax.Array  # [K] == arange(K)
+    values: Any  # [K, *out_shape] (pytree)
+    counts: jax.Array  # [K] int32; count == 0 -> key never emitted
+
+
+# ---------------------------------------------------------------------------
+# Reduce flow (baseline; the paper's un-optimized execution flow)
+# ---------------------------------------------------------------------------
+
+
+def reduce_flow(
+    reduce_fn: Callable,
+    stream: PairStream,
+    *,
+    max_values_per_key: int,
+    pad_value,
+) -> Grouped:
+    """Materialize → sort → group → per-key reduce.
+
+    ``max_values_per_key`` is the static bound Lmax on values per key (the
+    paper's Phoenix buffers have the same role); counts are clipped to it.
+    """
+    K = stream.key_space
+    Lmax = max_values_per_key
+    keys = stream.keys
+    values = stream.values
+    n = keys.shape[0]
+
+    order = jnp.argsort(keys)  # sentinel keys sort last
+    skeys = keys[order]
+    svals = jax.tree.map(lambda v: v[order], values)
+
+    counts = jnp.bincount(keys, length=K + 1)[:K].astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+
+    def pad_tail(v):
+        pad_shape = (Lmax,) + v.shape[1:]
+        pad = jnp.full(pad_shape, pad_value, v.dtype)
+        return jnp.concatenate([v, pad], axis=0)
+
+    svals_p = jax.tree.map(pad_tail, svals)
+
+    def one_key(k, off, cnt):
+        def win_of(v):
+            w = lax.dynamic_slice_in_dim(v, off, Lmax, axis=0)
+            mask = (jnp.arange(Lmax) < cnt)
+            bshape = (Lmax,) + (1,) * (w.ndim - 1)
+            return jnp.where(mask.reshape(bshape), w,
+                             jnp.asarray(pad_value, w.dtype))
+        win = jax.tree.map(win_of, svals_p)
+        cc = jnp.minimum(cnt, Lmax)
+        return reduce_fn(k, win, cc)
+
+    out = jax.vmap(one_key)(jnp.arange(K, dtype=jnp.int32), offsets, counts)
+    return Grouped(jnp.arange(K, dtype=jnp.int32), out, counts)
+
+
+# ---------------------------------------------------------------------------
+# Combine flow (the optimizer's execution flow)
+# ---------------------------------------------------------------------------
+
+
+def _premap_stream(spec: C.CombinerSpec, values) -> tuple:
+    """vmap the per-value premap over the pair stream."""
+    return jax.vmap(spec.premap)(values)
+
+
+def combine_scatter(spec: C.CombinerSpec, stream: PairStream) -> tuple[Any, jax.Array]:
+    """Holder tables via ``table.at[keys].<monoid-op>`` scatter-combine."""
+    assert spec.monoids is not None
+    K = stream.key_space
+    mapped = _premap_stream(spec, stream.values)
+    leaf_avals = [jax.ShapeDtypeStruct(m.shape[1:], m.dtype) for m in mapped]
+    tables = []
+    for mono, chan, aval in zip(spec.monoids, mapped, leaf_avals):
+        init = jnp.broadcast_to(mono.identity_like(aval), (K,) + tuple(aval.shape))
+        upd = getattr(init.at[stream.keys], mono.scatter_method)
+        tables.append(upd(chan, mode="drop"))
+    counts = jnp.zeros((K,), jnp.int32).at[stream.keys].add(
+        stream.valid.astype(jnp.int32), mode="drop")
+    return tuple(tables), counts
+
+
+def combine_onehot(
+    spec: C.CombinerSpec,
+    stream: PairStream,
+    *,
+    onehot_fn: Callable | None = None,
+    block_pairs: int = 1024,
+) -> tuple[Any, jax.Array]:
+    """Additive monoids on the MXU: ``one_hot(keys)ᵀ @ premap(values)``.
+
+    ``onehot_fn(keys, mat, K)`` may be the Pallas kernel (kernels/ops.py);
+    defaults to a jnp einsum with the same semantics.
+    """
+    assert spec.mxu_lowerable
+    K = stream.key_space
+    mapped = _premap_stream(spec, stream.values)
+    counts_chan = stream.valid.astype(jnp.float32)
+
+    def default_onehot(keys, mat, k):
+        oh = jax.nn.one_hot(keys, k, dtype=mat.dtype)  # sentinel -> all-zero
+        return jnp.einsum("nk,nd->kd", oh, mat)
+
+    f = onehot_fn or default_onehot
+    tables = []
+    for chan in mapped:
+        flat = chan.reshape(chan.shape[0], -1).astype(jnp.float32)
+        tab = f(stream.keys, flat, K)
+        tables.append(tab.reshape((K,) + chan.shape[1:]).astype(chan.dtype))
+    counts = f(stream.keys, counts_chan[:, None], K)[:, 0].astype(jnp.int32)
+    return tuple(tables), counts
+
+
+def combine_first(spec: C.CombinerSpec, stream: PairStream) -> tuple[Any, jax.Array]:
+    """First-element idiom, vectorized: scatter-min of arrival order."""
+    K = stream.key_space
+    n = stream.keys.shape[0]
+    mapped = _premap_stream(spec, stream.values)
+    order = jnp.arange(n, dtype=jnp.int32)
+    first_pos = jnp.full((K,), n, jnp.int32).at[stream.keys].min(
+        order, mode="drop")
+    safe = jnp.minimum(first_pos, n - 1)
+    counts = jnp.zeros((K,), jnp.int32).at[stream.keys].add(
+        stream.valid.astype(jnp.int32), mode="drop")
+    tables = tuple(chan[safe] for chan in mapped)
+    return tables, counts
+
+
+def combine_segment(spec: C.CombinerSpec, stream: PairStream) -> tuple[Any, jax.Array]:
+    """Generic streaming combiner: sort by key, sequential fold per segment.
+
+    Correctness fallback for non-scatter combiners (scan folds, coupled
+    holders).  One ``lax.scan`` over the sorted stream; holder written back
+    on segment close.
+    """
+    K = stream.key_space
+    n = stream.keys.shape[0]
+    order = jnp.argsort(stream.keys)
+    skeys = stream.keys[order]
+    svals = jax.tree.map(lambda v: v[order], stream.values)
+
+    vaval = jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), svals)
+    h0 = spec.init(vaval)
+    tables0 = jax.tree.map(
+        lambda l: jnp.tile(l[None], (K,) + (1,) * jnp.ndim(l)), h0)
+    counts0 = jnp.zeros((K,), jnp.int32)
+
+    def step(carry, xs):
+        tables, counts = carry
+        k, v = xs
+        valid = k < K
+        ks = jnp.minimum(k, K - 1)
+        # holders live in the table: gather the key's holder, fold, scatter
+        # back (sequential over the sorted stream, so no conflicts).
+        h = jax.tree.map(lambda t: t[ks], tables)
+        nk = counts[ks]
+        h2 = spec.combine(h, spec.premap(v), nk)
+        tables = jax.tree.map(
+            lambda t, new, old: t.at[ks].set(jnp.where(valid, new, old)),
+            tables, h2, h)
+        counts = counts.at[ks].add(valid.astype(jnp.int32))
+        return (tables, counts), None
+
+    (tables, counts), _ = lax.scan(step, (tables0, counts0), (skeys, svals))
+    return tables, counts
+
+
+def finalize_tables(spec: C.CombinerSpec, tables, counts, key_space: int) -> Grouped:
+    keys = jnp.arange(key_space, dtype=jnp.int32)
+    vals = jax.vmap(spec.finalize)(keys, tables, counts)
+    return Grouped(keys, vals, counts)
+
+
+def combine_flow(
+    spec: C.CombinerSpec,
+    stream: PairStream,
+    *,
+    impl: str = "auto",
+    onehot_fn: Callable | None = None,
+    onehot_max_keys: int = 2048,
+) -> Grouped:
+    """Run the combining collector with the best available lowering."""
+    if impl == "auto":
+        if spec.strategy == C.STRATEGY_SIZE:
+            impl = "scatter"  # counts only; scatter path handles it
+        elif spec.strategy == C.STRATEGY_FIRST:
+            impl = "first"
+        elif (spec.mxu_lowerable and stream.key_space <= onehot_max_keys
+              and onehot_fn is not None):
+            impl = "onehot"
+        elif spec.scatter_lowerable:
+            impl = "scatter"
+        else:
+            impl = "segment"
+
+    if impl == "scatter":
+        if spec.strategy == C.STRATEGY_SIZE:
+            counts = jnp.zeros((stream.key_space,), jnp.int32).at[
+                stream.keys].add(stream.valid.astype(jnp.int32), mode="drop")
+            tables = ()
+        else:
+            tables, counts = combine_scatter(spec, stream)
+    elif impl == "onehot":
+        tables, counts = combine_onehot(spec, stream, onehot_fn=onehot_fn)
+    elif impl == "first":
+        tables, counts = combine_first(spec, stream)
+    elif impl == "segment":
+        tables, counts = combine_segment(spec, stream)
+    else:
+        raise ValueError(f"unknown combine impl {impl!r}")
+    return finalize_tables(spec, tables, counts, stream.key_space)

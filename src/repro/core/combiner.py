@@ -1,0 +1,432 @@
+"""CombinerSpec: the load-bearing abstraction of the reproduction.
+
+The paper's semantic-aware optimizer rewrites a user ``reduce`` method into a
+triple ``initialize() -> Holder``, ``combine(Holder, V)``, ``finalize(Holder)
+-> V`` (MR4J §3.1.1).  In this JAX port the triple (plus a cross-shard
+``merge`` and an elementwise ``premap``) is reified as :class:`CombinerSpec`.
+
+The spec is consumed by:
+  * the MapReduce engine's combine flow (``core/engine.py``),
+  * gradient accumulation (``training/grad_accum.py``),
+  * MoE combine-back (``models/moe.py``),
+  * vocab-parallel cross entropy (``training/losses.py``),
+  * flash-decode attention (``kernels/flash_decode.py``).
+
+The paper *assumes* associativity from MapReduce semantics ("assuming that the
+operation is associative due to the semantics of the MapReduce framework",
+§3.2 step 4).  We keep that contract but additionally provide cheap numeric
+probes (:func:`validate_combiner`) used by the optimizer unless
+``trust_semantics=True``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Monoid identities for the reduction primitives the semantic analyzer
+# recognizes.  Mirrors MR4J's Holder initialization ("provides an initial
+# intermediate representation for values").
+# ---------------------------------------------------------------------------
+
+
+def _min_identity(dtype) -> Any:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.array(jnp.iinfo(dtype).max, dtype)
+    if dtype == jnp.bool_:
+        return jnp.array(True, dtype)
+    raise TypeError(f"no min identity for {dtype}")
+
+
+def _max_identity(dtype) -> Any:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.array(jnp.iinfo(dtype).min, dtype)
+    if dtype == jnp.bool_:
+        return jnp.array(False, dtype)
+    raise TypeError(f"no max identity for {dtype}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """A binary associative operation with identity, on a single array leaf."""
+
+    name: str
+    op: Callable[[jax.Array, jax.Array], jax.Array]
+    identity: Callable[[Any], jax.Array]  # dtype -> scalar identity
+    #: jnp.ndarray.at[...] method name usable for scatter-combine, if any.
+    scatter_method: str | None = None
+    #: whether ``op`` distributes as a plain sum (enables MXU one-hot matmul).
+    is_additive: bool = False
+
+    def identity_like(self, aval: jax.ShapeDtypeStruct) -> jax.Array:
+        return jnp.full(aval.shape, self.identity(aval.dtype), aval.dtype)
+
+
+ADD = Monoid("add", jnp.add, lambda dt: jnp.zeros((), dt), "add", is_additive=True)
+MUL = Monoid("mul", jnp.multiply, lambda dt: jnp.ones((), dt), "multiply")
+MAX = Monoid("max", jnp.maximum, _max_identity, "max")
+MIN = Monoid("min", jnp.minimum, _min_identity, "min")
+AND = Monoid("and", jnp.logical_and, lambda dt: jnp.ones((), jnp.bool_), "min")
+OR = Monoid("or", jnp.logical_or, lambda dt: jnp.zeros((), jnp.bool_), "max")
+
+MONOIDS = {m.name: m for m in (ADD, MUL, MAX, MIN, AND, OR)}
+
+
+# ---------------------------------------------------------------------------
+# CombinerSpec
+# ---------------------------------------------------------------------------
+
+#: How the spec was obtained — mirrors the paper's transformation cases.
+STRATEGY_MONOID = "monoid"  # full jaxpr extraction: premap . monoid-reduce . finalize
+STRATEGY_FIRST = "idiom_first"  # paper idiom: reducer uses only values[0]
+STRATEGY_SIZE = "idiom_size"  # paper idiom: reducer uses only the count
+STRATEGY_SCAN = "scan_fold"  # reducer is a lax.scan/fori fold over values
+STRATEGY_REAPPLY = "reapply"  # Hadoop-style: reduce re-applied to partials
+STRATEGY_MANUAL = "manual"  # user-supplied spec (escape hatch)
+
+
+@dataclasses.dataclass(frozen=True)
+class CombinerSpec:
+    """initialize/combine/finalize triple plus cross-shard merge and premap.
+
+    Shapes: a "value" is one emitted value (any pytree of arrays); a "holder"
+    is the intermediate accumulation state for one key (any pytree).  The
+    engine vectorizes holders into dense tables ``[K_cap, *leaf.shape]``.
+
+    * ``init(value_aval) -> holder``            identity holder
+    * ``premap(value) -> mapped``               elementwise pre-map (map-side)
+    * ``combine(holder, mapped, n) -> holder``  fold one mapped value; ``n`` is
+                                                the number already folded (used
+                                                by the first-element idiom)
+    * ``merge(a, b, na, nb) -> holder``         associative merge of partial
+                                                holders with their fold counts
+                                                (cross-tile / cross-shard);
+                                                ``None`` if only local folding
+                                                is sound (rare: scan folds that
+                                                failed the reapply probe)
+    * ``finalize(key, holder, count) -> value`` convert holder to final value
+    """
+
+    strategy: str
+    init: Callable[[PyTree], PyTree]
+    premap: Callable[[PyTree], PyTree]
+    combine: Callable[[PyTree, PyTree, jax.Array], PyTree]
+    merge: Callable[[PyTree, PyTree, jax.Array, jax.Array], PyTree] | None
+    finalize: Callable[[Any, PyTree, jax.Array], PyTree]
+    #: per-holder-leaf monoids when strategy == monoid (enables scatter /
+    #: one-hot-matmul lowering in the collector and Pallas kernels).
+    monoids: tuple[Monoid, ...] | None = None
+    #: human-readable provenance for logs / EXPERIMENTS.md.
+    describe: str = ""
+    #: when merge is None: cross-shard merge may re-apply the user reduce to
+    #: finalized partials (Hadoop combiner contract), validated by probe.
+    reapply_ok: bool = False
+
+    @property
+    def scatter_lowerable(self) -> bool:
+        """True if the combine can lower to ``table.at[keys].<op>`` scatters."""
+        return self.monoids is not None and all(
+            m.scatter_method is not None for m in self.monoids
+        )
+
+    @property
+    def mxu_lowerable(self) -> bool:
+        """True if the combine is a pure sum (one-hot matmul on the MXU)."""
+        return self.monoids is not None and all(m.is_additive for m in self.monoids)
+
+    def holder_avals(self, value_aval: PyTree) -> PyTree:
+        """Shape/dtype of the holder for a given value aval."""
+        return jax.eval_shape(lambda v: self.init(v), value_aval)
+
+
+def monoid_spec(
+    monoid: Monoid | str,
+    *,
+    premap: Callable = lambda v: v,
+    finalize: Callable | None = None,
+    describe: str = "",
+) -> CombinerSpec:
+    """Convenience constructor for single-monoid combiners (sum, max, ...)."""
+    m = MONOIDS[monoid] if isinstance(monoid, str) else monoid
+
+    def init(value_aval):
+        mapped = jax.eval_shape(premap, value_aval)
+        return jax.tree.map(m.identity_like, mapped)
+
+    def combine(holder, mapped, n):
+        del n
+        return jax.tree.map(m.op, holder, mapped)
+
+    def merge(a, b, na, nb):
+        del na, nb
+        return jax.tree.map(m.op, a, b)
+
+    def default_finalize(key, holder, count):
+        del key, count
+        return holder
+
+    return CombinerSpec(
+        strategy=STRATEGY_MONOID,
+        init=init,
+        premap=premap,
+        combine=combine,
+        merge=merge,
+        finalize=finalize or default_finalize,
+        monoids=(m,),
+        describe=describe or f"monoid<{m.name}>",
+    )
+
+
+def product_spec(specs: Sequence[CombinerSpec], finalize, describe="") -> CombinerSpec:
+    """Product of combiners: holder is a tuple of the component holders.
+
+    This is how multi-statistic reducers (mean = (sum, count), variance =
+    (sum, sumsq), k-means centroid = (coord-sum, point-count)) are expressed —
+    the paper's K-Means case ("the combiner or the intermediate value contain
+    the running sum", §4.1.3).
+    """
+    specs = tuple(specs)
+
+    def init(value_aval):
+        return tuple(s.init(value_aval) for s in specs)
+
+    def premap(value):
+        return tuple(s.premap(value) for s in specs)
+
+    def combine(holder, mapped, n):
+        return tuple(s.combine(h, m, n) for s, h, m in zip(specs, holder, mapped))
+
+    def merge(a, b, na, nb):
+        return tuple(s.merge(x, y, na, nb) for s, x, y in zip(specs, a, b))
+
+    mono: tuple[Monoid, ...] | None = ()
+    for s in specs:
+        if s.monoids is None:
+            mono = None
+            break
+        mono = mono + s.monoids  # type: ignore[operator]
+
+    return CombinerSpec(
+        strategy=STRATEGY_MONOID if mono is not None else STRATEGY_SCAN,
+        init=init,
+        premap=premap,
+        combine=combine,
+        merge=merge if all(s.merge is not None for s in specs) else None,
+        finalize=finalize,
+        monoids=mono,
+        describe=describe or "product(" + ",".join(s.describe for s in specs) + ")",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Well-known specs used across the framework (beyond-paper consumers).
+# ---------------------------------------------------------------------------
+
+
+def sum_spec(**kw) -> CombinerSpec:
+    return monoid_spec(ADD, describe="sum", **kw)
+
+
+def max_spec(**kw) -> CombinerSpec:
+    return monoid_spec(MAX, describe="max", **kw)
+
+
+def min_spec(**kw) -> CombinerSpec:
+    return monoid_spec(MIN, describe="min", **kw)
+
+
+def mean_spec() -> CombinerSpec:
+    def finalize(key, holder, count):
+        del key
+        c = jnp.maximum(count, 1).astype(holder.dtype)
+        return holder / c
+
+    return monoid_spec(ADD, finalize=finalize, describe="mean")
+
+
+def count_spec() -> CombinerSpec:
+    """The size-only idiom: the result is a function of the count alone."""
+
+    def init(value_aval):
+        return ()
+
+    def combine(holder, mapped, n):
+        return ()
+
+    def finalize(key, holder, count):
+        del key, holder
+        return count
+
+    return CombinerSpec(
+        strategy=STRATEGY_SIZE,
+        init=init,
+        premap=lambda v: (),
+        combine=combine,
+        merge=lambda a, b, na, nb: (),
+        finalize=finalize,
+        monoids=(),
+        describe="count",
+    )
+
+
+def logsumexp_spec() -> CombinerSpec:
+    """(m, l) running-max / rescaled-sum monoid.
+
+    The numerically stable streaming logsumexp used by the vocab-parallel
+    cross-entropy and (extended with an accumulator) by flash-decode.
+    """
+
+    def init(value_aval):
+        dt = value_aval.dtype
+        return (
+            jnp.full(value_aval.shape, -jnp.inf, dt),
+            jnp.zeros(value_aval.shape, dt),
+        )
+
+    def premap(v):
+        return (v, jnp.ones_like(v))
+
+    def _merge2(a, b):
+        ma, la = a
+        mb, lb = b
+        m = jnp.maximum(ma, mb)
+        # exp(-inf - -inf) guard: where both -inf, contribute 0.
+        sa = jnp.where(jnp.isneginf(ma), 0.0, la * jnp.exp(ma - m))
+        sb = jnp.where(jnp.isneginf(mb), 0.0, lb * jnp.exp(mb - m))
+        return (m, sa + sb)
+
+    def _merge(a, b, na, nb):
+        del na, nb
+        return _merge2(a, b)
+
+    def combine(holder, mapped, n):
+        del n
+        return _merge2(holder, mapped)
+
+    def finalize(key, holder, count):
+        del key, count
+        m, l = holder
+        return m + jnp.log(l)
+
+    return CombinerSpec(
+        strategy=STRATEGY_MONOID,
+        init=init,
+        premap=premap,
+        combine=combine,
+        merge=_merge,
+        finalize=finalize,
+        monoids=None,  # not scatter-lowerable: two-leaf coupled update
+        describe="logsumexp",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Algebraic validation probes.
+# ---------------------------------------------------------------------------
+
+
+def _rand_values(rng: np.random.Generator, aval: jax.ShapeDtypeStruct, n: int):
+    shape = (n,) + tuple(aval.shape)
+    if jnp.issubdtype(aval.dtype, jnp.floating):
+        return jnp.asarray(rng.standard_normal(shape), aval.dtype)
+    if jnp.issubdtype(aval.dtype, jnp.integer):
+        return jnp.asarray(rng.integers(-4, 5, size=shape), aval.dtype)
+    if aval.dtype == jnp.bool_:
+        return jnp.asarray(rng.integers(0, 2, size=shape).astype(bool))
+    raise TypeError(aval.dtype)
+
+
+def fold_values(spec: CombinerSpec, values: jax.Array, key=0) -> PyTree:
+    """Reference streaming fold of ``values[0..n)`` through the spec."""
+    aval = jax.ShapeDtypeStruct(values.shape[1:], values.dtype)
+    holder = spec.init(aval)
+
+    def body(carry, v):
+        h, n = carry
+        h = spec.combine(h, spec.premap(v), n)
+        return (h, n + 1), None
+
+    (holder, _), _ = jax.lax.scan(body, (holder, jnp.int32(0)), values)
+    return holder
+
+
+def finalize_fold(spec: CombinerSpec, values: jax.Array, key=0) -> PyTree:
+    h = fold_values(spec, values, key)
+    return spec.finalize(key, h, jnp.int32(values.shape[0]))
+
+
+def validate_combiner(
+    spec: CombinerSpec,
+    reduce_fn: Callable,
+    value_aval: jax.ShapeDtypeStruct,
+    *,
+    key_sample: Any = 0,
+    trials: int = 4,
+    n_values: int = 9,
+    rtol: float = 1e-4,
+    atol: float = 1e-4,
+    seed: int = 0,
+) -> bool:
+    """Numeric probes that the derived combiner reproduces the user reduce.
+
+    Checks, on random value batches:
+      1. fold equivalence  — finalize(fold(values)) == reduce(key, values, n)
+      2. split-merge       — merge(fold(A), fold(B)) == fold(A ++ B)
+      3. permutation safety — reduce invariant under value permutation
+                              (the MapReduce contract the paper relies on).
+                              Skipped for the first-element idiom, whose
+                              contract is "any representative value".
+    """
+    rng = np.random.default_rng(seed)
+
+    def close(a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        if len(la) != len(lb):
+            return False
+        return all(
+            np.allclose(np.asarray(x, np.float64), np.asarray(y, np.float64),
+                        rtol=rtol, atol=atol)
+            for x, y in zip(la, lb)
+        )
+
+    for _ in range(trials):
+        vals = _rand_values(rng, value_aval, n_values)
+        n = jnp.int32(n_values)
+        want = reduce_fn(key_sample, vals, n)
+
+        # 1. fold equivalence
+        got = finalize_fold(spec, vals, key_sample)
+        if not close(got, want):
+            return False
+
+        # 3. permutation invariance of the user reduce itself
+        if spec.strategy != STRATEGY_FIRST:
+            perm = rng.permutation(n_values)
+            want_p = reduce_fn(key_sample, vals[perm], n)
+            if not close(want, want_p):
+                return False
+
+        # 2. split-merge
+        if spec.merge is not None:
+            k = n_values // 2
+            ha = fold_values(spec, vals[:k], key_sample)
+            hb = fold_values(spec, vals[k:], key_sample)
+            hm = spec.merge(ha, hb, jnp.int32(k), jnp.int32(n_values - k))
+            got_m = spec.finalize(key_sample, hm, n)
+            if not close(got_m, want):
+                return False
+    return True

@@ -1,0 +1,345 @@
+"""Execution engine: map phase + local and distributed runs of both flows.
+
+Distribution (beyond the paper's multicore scope, toward the 1000-node
+posture):
+
+* combine flow — each shard folds its local pairs into holder tables; tables
+  merge across the data axis with monoid-aware collectives (psum/pmax/pmin,
+  or an all-gather fold for generic merges).  Collective volume: **O(K)**.
+* reduce flow — raw pairs are key-partitioned and exchanged with
+  ``lax.all_to_all`` (fixed-capacity buckets, Phoenix-buffer style), then each
+  shard sorts/groups/reduces its key range.  Collective volume: **O(N)**.
+
+The contrast is the distributed version of the paper's observation that the
+combiner "minimizes data transfers before the reduce phase" (§2.2.1), and is
+measured by the dry-run collective roofline term.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collector as col
+from repro.core import combiner as C
+
+# ---------------------------------------------------------------------------
+# Emitter + map phase
+# ---------------------------------------------------------------------------
+
+
+class Emitter:
+    """Fixed-capacity recording emitter handed to ``map``.
+
+    ``emit(keys, values, valid=None)`` accepts scalars or 1-D vectors; calls
+    append (at trace time) into the per-item pair buffer.  Total emitted slots
+    must not exceed the capacity.  Invalid slots carry the sentinel key
+    ``key_space`` and are dropped by the collectors.
+    """
+
+    def __init__(self, capacity: int, key_space: int,
+                 value_aval: jax.ShapeDtypeStruct):
+        self.capacity = capacity
+        self.key_space = key_space
+        self.value_aval = value_aval
+        self._keys: list[jax.Array] = []
+        self._vals: list[jax.Array] = []
+        self._used = 0
+
+    def __call__(self, keys, values, valid=None):
+        return self.emit(keys, values, valid)
+
+    def emit(self, keys, values, valid=None):
+        keys = jnp.asarray(keys, jnp.int32)
+        values = jnp.asarray(values, self.value_aval.dtype)
+        if keys.ndim == 0:
+            keys = keys[None]
+            values = values[None]
+        n = keys.shape[0]
+        if valid is not None:
+            valid = jnp.asarray(valid, bool)
+            if valid.ndim == 0:
+                valid = valid[None]
+            keys = jnp.where(valid, keys, self.key_space)
+        if self._used + n > self.capacity:
+            raise ValueError(
+                f"map emitted more than emit_capacity={self.capacity} pairs")
+        expected = (n,) + tuple(self.value_aval.shape)
+        if tuple(values.shape) != expected:
+            raise ValueError(f"emitted values shape {values.shape} != {expected}")
+        self._keys.append(keys)
+        self._vals.append(values)
+        self._used += n
+
+    def pairs(self):
+        Pcap = self.capacity
+        vs_shape = tuple(self.value_aval.shape)
+        ks = (jnp.concatenate(self._keys) if self._keys
+              else jnp.zeros((0,), jnp.int32))
+        vs = (jnp.concatenate(self._vals) if self._vals
+              else jnp.zeros((0,) + vs_shape, self.value_aval.dtype))
+        pad_n = Pcap - ks.shape[0]
+        ks = jnp.concatenate([ks, jnp.full((pad_n,), self.key_space, jnp.int32)])
+        vs = jnp.concatenate([vs, jnp.zeros((pad_n,) + vs_shape, vs.dtype)])
+        ks = jnp.where((ks < 0) | (ks > self.key_space), self.key_space, ks)
+        return ks, vs
+
+
+def map_phase(app, items) -> col.PairStream:
+    """vmap the user map over input items -> flat PairStream."""
+
+    def one(item):
+        em = Emitter(app.emit_capacity, app.key_space, app.value_aval)
+        app.map(item, em)
+        return em.pairs()
+
+    keys, vals = jax.vmap(one)(items)
+    flat_keys = keys.reshape(-1)
+    flat_vals = vals.reshape((-1,) + vals.shape[2:])
+    return col.PairStream(flat_keys, flat_vals, app.key_space)
+
+
+# ---------------------------------------------------------------------------
+# Local run (single device / single shard)
+# ---------------------------------------------------------------------------
+
+
+def _onehot_kernel(use_kernels: bool) -> Callable | None:
+    if not use_kernels:
+        return None
+    from repro.kernels import ops  # lazy: kernels are optional at runtime
+
+    return ops.onehot_combine
+
+
+def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False):
+    stream = map_phase(app, items)
+    if plan.flow == "combine":
+        grouped = col.combine_flow(
+            plan.spec, stream, impl=combine_impl,
+            onehot_fn=_onehot_kernel(use_kernels))
+    else:
+        grouped = col.reduce_flow(
+            app.reduce, stream,
+            max_values_per_key=app.max_values_per_key,
+            pad_value=app.pad_value)
+    return grouped.keys, grouped.values, grouped.counts
+
+
+# ---------------------------------------------------------------------------
+# Distributed: combine flow (monoid collectives, O(K) traffic)
+# ---------------------------------------------------------------------------
+
+_PCOLLECTIVE = {"add": lax.psum, "max": lax.pmax, "min": lax.pmin}
+
+
+def merge_tables_collective(spec: C.CombinerSpec, tables, counts,
+                            axis_name: str, *, scatter: bool = False):
+    """Merge per-shard holder tables across ``axis_name``.
+
+    scatter=True uses psum_scatter (output sharded over keys) where legal —
+    halves the collective bytes versus a full all-reduce (hillclimb knob).
+    """
+    total_counts = lax.psum(counts, axis_name)
+
+    if spec.monoids is not None and len(spec.monoids) == len(jax.tree.leaves(tables)):
+        leaves, treedef = jax.tree.flatten(tables)
+        merged = []
+        for mono, leaf in zip(spec.monoids, leaves):
+            coll = _PCOLLECTIVE.get(mono.name)
+            if mono.name == "add" and scatter:
+                merged.append(lax.psum_scatter(leaf, axis_name, tiled=True))
+            elif coll is not None:
+                merged.append(coll(leaf, axis_name))
+            elif mono.name in ("and", "or"):
+                as_int = leaf.astype(jnp.int32)
+                red = (lax.pmin if mono.name == "and" else lax.pmax)(
+                    as_int, axis_name)
+                merged.append(red.astype(leaf.dtype))
+            else:  # mul & friends: gather + vectorized fold
+                g = lax.all_gather(leaf, axis_name)
+                merged.append(jnp.prod(g, axis=0) if mono.name == "mul"
+                              else g[0])
+        if scatter and any(m.name == "add" for m in spec.monoids):
+            total_counts = lax.psum_scatter(counts, axis_name, tiled=True)
+        return jax.tree.unflatten(treedef, merged), total_counts
+
+    # generic merge: gather all shard tables and fold with spec.merge
+    g_tables = jax.tree.map(lambda t: lax.all_gather(t, axis_name), tables)
+    g_counts = lax.all_gather(counts, axis_name)
+    S = g_counts.shape[0]
+
+    def fold(carry, xs):
+        acc, na = carry
+        tab, nb = xs
+        out = jax.vmap(spec.merge)(acc, tab, na, nb)
+        return (out, na + nb), None
+
+    first = jax.tree.map(lambda t: t[0], g_tables)
+    rest = jax.tree.map(lambda t: t[1:], g_tables)
+    (merged, _), _ = lax.scan(fold, (first, g_counts[0]),
+                              (rest, g_counts[1:]))
+    return merged, total_counts
+
+
+def _combine_shard_fn(app, spec, *, combine_impl, use_kernels, axis_name,
+                      scatter):
+    def fn(local_items):
+        stream = map_phase(app, local_items)
+        grouped_tab = col.combine_flow  # noqa: F841 (doc anchor)
+        # local fold to tables (un-finalized), then collective merge
+        if spec.strategy == C.STRATEGY_SIZE:
+            tables = ()
+            counts = jnp.zeros((app.key_space,), jnp.int32).at[stream.keys].add(
+                stream.valid.astype(jnp.int32), mode="drop")
+        elif spec.strategy == C.STRATEGY_FIRST:
+            tables, counts = col.combine_first(spec, stream)
+        elif spec.scatter_lowerable and combine_impl in ("auto", "scatter"):
+            tables, counts = col.combine_scatter(spec, stream)
+        elif spec.mxu_lowerable and combine_impl == "onehot":
+            tables, counts = col.combine_onehot(
+                spec, stream, onehot_fn=_onehot_kernel(use_kernels))
+        else:
+            tables, counts = col.combine_segment(spec, stream)
+
+        if spec.merge is not None:
+            tables, counts = merge_tables_collective(
+                spec, tables, counts, axis_name, scatter=scatter)
+            out = col.finalize_tables(spec, tables, counts,
+                                      counts.shape[0])
+            return out.keys, out.values, out.counts
+        if spec.reapply_ok:
+            # Hadoop contract: finalize local partials, re-reduce across shards
+            local = col.finalize_tables(spec, tables, counts, app.key_space)
+            g_vals = jax.tree.map(lambda v: lax.all_gather(v, axis_name),
+                                  local.values)
+            g_cnt = lax.all_gather(counts, axis_name)  # [S, K]
+            S = g_cnt.shape[0]
+
+            def per_key(k, vals_k, cnt_k):
+                # shards with zero count contribute pad values
+                order = jnp.argsort(cnt_k == 0)  # valid shards first
+                vals_s = jax.tree.map(
+                    lambda v: jnp.where(
+                        (cnt_k[order] > 0).reshape((-1,) + (1,) * (v.ndim - 1)),
+                        v[order], jnp.asarray(app.pad_value, v.dtype)),
+                    vals_k)
+                nvalid = jnp.sum(cnt_k > 0).astype(jnp.int32)
+                return app.reduce(k, vals_s, nvalid)
+
+            vals_t = jax.tree.map(lambda v: jnp.moveaxis(v, 0, 1), g_vals)
+            keys = jnp.arange(app.key_space, dtype=jnp.int32)
+            merged = jax.vmap(per_key)(keys, vals_t, g_cnt.T)
+            return keys, merged, jnp.sum(g_cnt, axis=0)
+        raise ValueError("combiner has no cross-shard merge strategy")
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Distributed: reduce flow (all-to-all shuffle, O(N) traffic)
+# ---------------------------------------------------------------------------
+
+
+def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity):
+    K = app.key_space
+    S = num_shards
+    K_local = -(-K // S)  # ceil
+
+    def fn(local_items):
+        stream = map_phase(app, local_items)
+        n = stream.keys.shape[0]
+        B = shuffle_capacity or -(-2 * n // S)
+
+        # range partitioning: key k -> shard k // ceil(K/S) (int32-safe)
+        tgt = jnp.where(stream.valid, stream.keys // K_local, S)
+        oh = (tgt[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
+        rank = jnp.take_along_axis(
+            jnp.cumsum(oh, axis=0), jnp.minimum(tgt, S - 1)[:, None],
+            axis=1)[:, 0] - 1
+        ok = stream.valid & (rank < B)
+        slot = jnp.where(ok, jnp.minimum(tgt, S - 1) * B + rank, S * B)
+
+        send_keys = jnp.full((S * B,), K, jnp.int32).at[slot].set(
+            stream.keys, mode="drop").reshape(S, B)
+        send_vals = jax.tree.map(
+            lambda v: jnp.zeros((S * B,) + v.shape[1:], v.dtype).at[slot].set(
+                v, mode="drop").reshape((S, B) + v.shape[1:]),
+            stream.values)
+
+        recv_keys = lax.all_to_all(send_keys, axis_name, split_axis=0,
+                                   concat_axis=0, tiled=True)
+        recv_vals = jax.tree.map(
+            lambda v: lax.all_to_all(v, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True),
+            send_vals)
+
+        me = lax.axis_index(axis_name)
+        lo = me * K_local
+        lkeys = jnp.where(recv_keys < K, recv_keys - lo, K_local)
+        lkeys = jnp.where((lkeys >= 0) & (lkeys <= K_local), lkeys, K_local)
+        lstream = col.PairStream(lkeys.reshape(-1),
+                                 jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]),
+                                              recv_vals),
+                                 K_local)
+
+        def reduce_global(k, vals, cnt):
+            return app.reduce(k + lo, vals, cnt)
+
+        grouped = col.reduce_flow(
+            reduce_global, lstream,
+            max_values_per_key=app.max_values_per_key,
+            pad_value=app.pad_value)
+        # output stays key-sharded: [K_local] per shard -> [S*K_local] global
+        return grouped.keys + lo, grouped.values, grouped.counts
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Top-level distributed entry point
+# ---------------------------------------------------------------------------
+
+
+def run_distributed(
+    app,
+    plan,
+    items,
+    *,
+    mesh,
+    data_axis: str = "data",
+    combine_impl: str = "auto",
+    use_kernels: bool = False,
+    scatter_output: bool = False,
+    shuffle_capacity: int | None = None,
+):
+    """shard_map the chosen flow over ``data_axis`` of ``mesh``.
+
+    Returns (keys, values, counts); combine flow results are replicated
+    (or key-sharded with ``scatter_output=True``), reduce flow results are
+    key-sharded over the data axis (padded to ceil(K/S)*S keys).
+    """
+    from jax.sharding import NamedSharding
+    from jax.experimental.shard_map import shard_map
+
+    S = mesh.shape[data_axis]
+    if plan.flow == "combine":
+        fn = _combine_shard_fn(app, plan.spec, combine_impl=combine_impl,
+                               use_kernels=use_kernels, axis_name=data_axis,
+                               scatter=scatter_output)
+        out_spec = (P(data_axis) if scatter_output else P(),
+                    P(data_axis) if scatter_output else P(),
+                    P(data_axis) if scatter_output else P())
+    else:
+        fn = _reduce_shard_fn(app, axis_name=data_axis, num_shards=S,
+                              shuffle_capacity=shuffle_capacity)
+        out_spec = (P(data_axis), P(data_axis), P(data_axis))
+
+    sm = shard_map(fn, mesh=mesh, in_specs=(P(data_axis),),
+                   out_specs=out_spec, check_rep=False)
+    return jax.jit(sm)(items)

@@ -1,0 +1,284 @@
+"""The semantic-aware optimizer (paper §3: OPTIMIZATION).
+
+Given a user ``reduce(key, values, count)`` this module attempts — exactly
+like MR4J's class-load-time transformation — to derive the combiner triple
+and switch the framework to the combining execution flow.  The transformation
+steps mirror the paper's §3.2 list:
+
+  1. Parse the reduce method into an IR           -> ``semantics.analyze``
+     (program dependency graph ≙ jaxpr + taint)
+  2. Identify the loop over values                -> reduction frontier
+  3. Initialization block, holder type            -> ``CombinerSpec.init``
+  4. Loop body -> combine (associativity assumed
+     from MapReduce semantics; we also *validate*
+     numerically unless ``trust_semantics``)      -> ``CombinerSpec.combine``
+  5. Finalization bytecode -> finalize            -> ``CombinerSpec.finalize``
+  6. Flip the flag enabling the combining flow    -> ``Derivation.spec``
+
+Strategies, in the order they are attempted:
+  * monoid extraction (premap ∘ reduce-prim ∘ finalize)
+  * the paper's two idioms (first-element, size-only)
+  * lax.scan fold extraction (streaming combine; cross-shard merge by
+    reapplication when the Hadoop-style reapply probe passes)
+  * reapply-only (reduce is its own combiner — used by the distributed
+    engine for shard-level pre-reduction even when streaming extraction fails)
+  * none: the framework keeps the paper's baseline reduce flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combiner as C
+from repro.core import semantics as S
+
+
+@dataclasses.dataclass
+class Derivation:
+    """Result of running the optimizer on one reducer."""
+
+    spec: C.CombinerSpec | None
+    strategy: str
+    #: reduce may be re-applied to partial results (Hadoop combiner contract);
+    #: lets the distributed engine pre-reduce per shard even without a spec.
+    reapply_ok: bool
+    validated: bool
+    detect_s: float  # analysis time      (paper: 81 us/class detection)
+    transform_s: float  # synthesis time  (paper: 7.6 ms/class transformation)
+    validate_s: float = 0.0  # probe time (beyond-paper; paper trusts semantics)
+    failure: str = ""
+
+    @property
+    def combinable(self) -> bool:
+        return self.spec is not None
+
+
+def _key_sample(key_aval):
+    if isinstance(key_aval, jax.ShapeDtypeStruct):
+        return jnp.zeros(key_aval.shape, key_aval.dtype)
+    return key_aval  # already a concrete sample
+
+
+def derive_combiner(
+    reduce_fn: Callable,
+    key_aval: Any,
+    value_aval: jax.ShapeDtypeStruct,
+    *,
+    max_len: int = 8,
+    trust_semantics: bool = False,
+    validate_trials: int = 3,
+    rtol: float = 1e-4,
+    atol: float = 1e-4,
+) -> Derivation:
+    """Run the optimizer on one reduce function."""
+    t0 = time.perf_counter()
+    try:
+        an = S.analyze(reduce_fn, key_aval, value_aval, max_len=max_len)
+        failure = ""
+    except S.ExtractionFailure as e:
+        an = None
+        failure = str(e)
+    detect_s = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    spec = None
+    strategy = "none"
+    if an is not None:
+        try:
+            spec, strategy = _synthesize(an)
+        except S.ExtractionFailure as e:
+            failure = str(e)
+    transform_s = time.perf_counter() - t1
+
+    t2 = time.perf_counter()
+    validated = False
+    ksamp = _key_sample(key_aval)
+    if spec is not None and not trust_semantics:
+        ok = C.validate_combiner(
+            spec, reduce_fn, value_aval, key_sample=ksamp,
+            trials=validate_trials, rtol=rtol, atol=atol)
+        if not ok:
+            failure = f"{strategy}: numeric validation probe failed"
+            spec, strategy = None, "none"
+        else:
+            validated = True
+    elif spec is not None:
+        validated = False  # trusted, per the paper's associativity assumption
+
+    # Hadoop-style reapply probe: can reduce combine its own partials?
+    reapply_ok = (False if trust_semantics else
+                  _probe_reapply(reduce_fn, ksamp, value_aval,
+                                 rtol=rtol, atol=atol))
+    if spec is not None and spec.merge is None and reapply_ok:
+        spec = dataclasses.replace(spec, reapply_ok=True)
+    validate_s = time.perf_counter() - t2
+
+    return Derivation(
+        spec=spec,
+        strategy=strategy,
+        reapply_ok=reapply_ok,
+        validated=validated,
+        detect_s=detect_s,
+        transform_s=transform_s,
+        validate_s=validate_s,
+        failure=failure,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spec synthesis from an Analysis
+# ---------------------------------------------------------------------------
+
+
+def _synthesize(an: S.Analysis) -> tuple[C.CombinerSpec, str]:
+    if not an.frontiers:
+        return _size_only(an), C.STRATEGY_SIZE
+    if an.frontiers[0].kind == "scan":
+        return _scan_fold(an), C.STRATEGY_SCAN
+    return _monoid_or_first(an)
+
+
+def _size_only(an: S.Analysis) -> C.CombinerSpec:
+    """Paper idiom 2: the reducer uses only the count (and key)."""
+    fin = S.build_finalize(an, holder_slots=[])
+
+    return C.CombinerSpec(
+        strategy=C.STRATEGY_SIZE,
+        init=lambda value_aval: (),
+        premap=lambda v: (),
+        combine=lambda h, m, n: (),
+        merge=lambda a, b, na, nb: (),
+        finalize=lambda key, holder, count: fin(key, (), count),
+        monoids=(),
+        describe="idiom:size-only",
+    )
+
+
+def _monoid_or_first(an: S.Analysis) -> tuple[C.CombinerSpec, str]:
+    chans = S.frontier_channels(an)  # [(frontier, invar)] — 1 per channel here
+    premap = S.build_premap(an)
+    fronts = [f for f, _ in chans]
+
+    def init(value_aval):
+        mapped = jax.eval_shape(premap, value_aval)
+        out = []
+        for f, m in zip(fronts, mapped):
+            if f.kind == "monoid":
+                out.append(f.monoid.identity_like(m))
+            else:  # first
+                out.append(jnp.zeros(m.shape, m.dtype))
+        return tuple(out)
+
+    def combine(holder, mapped, n):
+        out = []
+        for f, h, m in zip(fronts, holder, mapped):
+            if f.kind == "monoid":
+                out.append(f.monoid.op(h, m))
+            else:
+                out.append(jnp.where(n == 0, m, h))
+        return tuple(out)
+
+    def merge(a, b, na, nb):
+        out = []
+        for f, x, y in zip(fronts, a, b):
+            if f.kind == "monoid":
+                out.append(f.monoid.op(x, y))
+            else:
+                out.append(jnp.where(na > 0, x, y))
+        return tuple(out)
+
+    fin = S.build_finalize(an, holder_slots=[[f.eqn.outvars[0]]
+                                             for f in an.frontiers])
+
+    def finalize(key, holder, count):
+        return fin(key, [(h,) for h in holder], count)
+
+    all_monoid = all(f.kind == "monoid" for f in fronts)
+    monoids = tuple(f.monoid for f in fronts) if all_monoid else None
+    strategy = C.STRATEGY_MONOID if all_monoid else C.STRATEGY_FIRST
+    desc = "+".join(
+        (f"monoid<{f.monoid.name}>" if f.kind == "monoid" else "first")
+        for f in fronts)
+
+    return C.CombinerSpec(
+        strategy=strategy, init=init, premap=premap, combine=combine,
+        merge=merge, finalize=finalize, monoids=monoids,
+        describe=f"extracted:{desc}",
+    ), strategy
+
+
+def _scan_fold(an: S.Analysis) -> C.CombinerSpec:
+    (front,) = an.frontiers
+    e = front.eqn
+    nc, nk = e.params["num_consts"], e.params["num_carry"]
+    body = e.params["jaxpr"]  # ClosedJaxpr
+
+    const_vals = S.eval_const_operands(an, e.invars[:nc])
+    init_vals = tuple(jnp.asarray(v) for v in
+                      S.eval_const_operands(an, e.invars[nc:nc + nk]))
+    premap = S.build_premap(an)
+
+    def init(value_aval):
+        del value_aval
+        return init_vals
+
+    def combine(holder, mapped, n):
+        del n
+        outs = jax.core.eval_jaxpr(body.jaxpr, body.consts,
+                                   *const_vals, *holder, *mapped)
+        return tuple(outs[:nk])
+
+    fin = S.build_finalize(an, holder_slots=[e.outvars[:nk]])
+
+    def finalize(key, holder, count):
+        return fin(key, [tuple(holder)], count)
+
+    return C.CombinerSpec(
+        strategy=C.STRATEGY_SCAN, init=init, premap=premap, combine=combine,
+        merge=None,  # cross-shard merge by reapplication if the probe passes
+        finalize=finalize, monoids=None,
+        describe=f"extracted:scan_fold<carry={nk}>",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reapply probe (Hadoop combiner contract)
+# ---------------------------------------------------------------------------
+
+
+def _probe_reapply(reduce_fn, key_sample, value_aval, *, rtol, atol,
+                   trials: int = 3, seed: int = 1) -> bool:
+    """Check reduce(key, [reduce(A), reduce(B)], 2) == reduce(key, A++B)."""
+    import numpy as np
+
+    out_aval = jax.eval_shape(
+        lambda k, v, c: reduce_fn(k, v, c),
+        key_sample, jax.ShapeDtypeStruct((4,) + tuple(value_aval.shape),
+                                         value_aval.dtype),
+        jax.ShapeDtypeStruct((), jnp.int32))
+    # the partial result must be re-consumable as a value
+    leaves = jax.tree.leaves(out_aval)
+    if len(leaves) != 1:
+        return False
+    (o,) = leaves
+    if tuple(o.shape) != tuple(value_aval.shape) or o.dtype != value_aval.dtype:
+        return False
+
+    rng = np.random.default_rng(seed)
+    for _ in range(trials):
+        # deliberately UNEQUAL split: equal halves would let count-normalized
+        # reducers (mean) pass by accident.
+        vals = C._rand_values(rng, value_aval, 8)
+        whole = reduce_fn(key_sample, vals, jnp.int32(8))
+        ra = reduce_fn(key_sample, vals[:3], jnp.int32(3))
+        rb = reduce_fn(key_sample, vals[3:], jnp.int32(5))
+        re = reduce_fn(key_sample, jnp.stack([ra, rb]), jnp.int32(2))
+        if not np.allclose(np.asarray(whole, np.float64),
+                           np.asarray(re, np.float64), rtol=rtol, atol=atol):
+            return False
+    return True

@@ -1,0 +1,54 @@
+"""Execution planning: run the optimizer, pick the flow, record stats.
+
+The paper's runtime "sets the flag to return a constant of true ... to enable
+the optimized combining execution flow" (§3.2 step 6).  ``plan_execution`` is
+that decision point, plus the bookkeeping used by
+``benchmarks/bench_optimizer_overhead.py`` to reproduce the paper's
+81 µs detection / 7.6 ms transformation table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combiner as C
+from repro.core.optimizer import Derivation, derive_combiner
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    flow: str  # "combine" | "reduce"
+    derivation: Derivation | None
+    spec: C.CombinerSpec | None
+    reason: str = ""
+
+    @property
+    def optimized(self) -> bool:
+        return self.flow == "combine"
+
+
+def plan_execution(app, *, flow: str = "auto",
+                   trust_semantics: bool = False) -> ExecutionPlan:
+    if flow == "reduce":
+        return ExecutionPlan("reduce", None, None, reason="forced by user")
+
+    spec = getattr(app, "manual_combiner", None)
+    if spec is not None:
+        d = Derivation(spec=spec, strategy=C.STRATEGY_MANUAL, reapply_ok=False,
+                       validated=False, detect_s=0.0, transform_s=0.0)
+        return ExecutionPlan("combine", d, spec, reason="manual combiner")
+
+    key_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    d = derive_combiner(app.reduce, key_aval, app.value_aval,
+                        trust_semantics=trust_semantics)
+    if d.combinable:
+        return ExecutionPlan("combine", d, d.spec,
+                             reason=f"derived ({d.strategy})")
+    if flow == "combine":
+        raise ValueError(
+            f"combine flow forced but derivation failed: {d.failure}")
+    return ExecutionPlan("reduce", d, None,
+                         reason=f"not combinable: {d.failure}")

@@ -1,0 +1,57 @@
+"""Deterministic, stateless data pipeline.
+
+Design for 1000+ hosts: a batch is a pure function of (seed, step, host) —
+``global_batch(seed, step)`` is identical everywhere it is computed, and
+``host_batch`` slices the host's shard.  Restarts, elastic re-ranking and
+speculative (straggler backup) re-execution all reproduce exactly the same
+bytes with zero coordination (distributed/fault.py relies on this).
+
+Tokenization: string keys become dense int ids here (DESIGN.md §10) — the
+word-count pipeline hashes whitespace tokens into a fixed vocab, which is
+the collector's ``key_space``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab_size: int = 32000
+    seq_len: int = 1024
+    global_batch: int = 8
+    zipf_a: float = 1.2  # token distribution skew (WC-like workloads)
+
+
+def _rng_for(seed: int, step: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, step]))
+
+
+def global_batch(dc: DataConfig, step: int) -> dict:
+    """Synthetic LM batch: zipf-distributed tokens, shifted labels."""
+    rng = _rng_for(dc.seed, step)
+    toks = rng.zipf(dc.zipf_a, size=(dc.global_batch, dc.seq_len + 1))
+    toks = (toks % (dc.vocab_size - 1)) + 1
+    toks = toks.astype(np.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+
+def host_batch(dc: DataConfig, step: int, host: int, num_hosts: int) -> dict:
+    gb = global_batch(dc, step)
+    per = dc.global_batch // num_hosts
+    lo = host * per
+    return {k: v[lo:lo + per] for k, v in gb.items()}
+
+
+def tokenize_words(text: str, vocab: int) -> np.ndarray:
+    """Whitespace tokens -> stable dense ids in [0, vocab)."""
+    import zlib
+
+    return np.asarray(
+        [zlib.crc32(w.lower().encode()) % vocab for w in text.split()],
+        np.int32)

@@ -1,0 +1,103 @@
+"""Activation-sharding hints, settable by launchers, no-op otherwise.
+
+GSPMD occasionally re-shards long-sequence attention intermediates by heads
+and REPLICATES the batch dim (the "involuntary full rematerialization"
+path), blowing up prefill memory ~16×.  Model code is mesh-agnostic, so the
+launcher (dryrun/train/serve) registers the mesh here and the attention/MoE
+layers pin their intermediates:
+
+* ``batch_major(x)``   — dim 0 over the DP axes.
+* ``attn_weights(x)``  — [B, H, Sq, T] softmax logits/weights: batch over
+  DP, heads over 'model' when divisible, else the QUERY dim over 'model'
+  (sequence parallelism — always divisible for the assigned shapes).
+
+With no mesh registered (CPU tests) everything is a no-op.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def clear() -> None:
+    set_mesh(None)
+
+
+def _dp():
+    from repro.models.common import dp_axes
+
+    return dp_axes(_MESH)
+
+
+def batch_major(x):
+    """Constrain dim 0 to the DP axes, rest unconstrained."""
+    if _MESH is None or x.ndim == 0:
+        return x
+    dp = _dp()
+    n = 1
+    for a in dp:
+        n *= _MESH.shape[a]
+    if not dp or x.shape[0] % n:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(dp, *([None] * (x.ndim - 1))))
+
+
+def seq_major(x, axis: int = 1):
+    """Shard a sequence axis over 'model' (Megatron sequence parallelism).
+
+    Used for the q path of archs whose head count does not divide the model
+    axis (qwen 40-head family): flat-head sharding would cut inside a head,
+    so the query SEQUENCE carries the model-parallel dim instead."""
+    if _MESH is None or "model" not in _MESH.shape:
+        return x
+    if x.ndim <= axis or x.shape[axis] % _MESH.shape["model"]:
+        return x
+    dp = _dp()
+    ndp = 1
+    for a in dp:
+        ndp *= _MESH.shape[a]
+    b_ax = dp if (dp and x.shape[0] % ndp == 0) else None
+    spec = [b_ax] + [None] * (x.ndim - 1)
+    spec[axis] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def heads_even(n_heads: int) -> bool:
+    if _MESH is None or "model" not in _MESH.shape:
+        return True
+    return n_heads % _MESH.shape["model"] == 0
+
+
+def attn_weights(x):
+    """[B, Kv, G, Sq, T] attention logits/weights (native GQA layout).
+
+    Preference: KV heads over 'model' (matches head-sharded caches), else
+    query positions over 'model' (sequence parallelism; always divisible for
+    the assigned train/prefill shapes), else cache positions over 'model'
+    (decode with sequence-sharded KV — the flash-decode-combiner layout)."""
+    if _MESH is None or x.ndim != 5 or "model" not in _MESH.shape:
+        return batch_major(x)
+    dp = _dp()
+    ndp = 1
+    for a in dp:
+        ndp *= _MESH.shape[a]
+    m = _MESH.shape["model"]
+    b_ax = dp if (dp and x.shape[0] % ndp == 0) else None
+    if x.shape[1] % m == 0:
+        spec = P(b_ax, "model", None, None, None)
+    elif x.shape[3] % m == 0:
+        spec = P(b_ax, None, None, "model", None)
+    elif x.shape[4] % m == 0:
+        spec = P(b_ax, None, None, None, "model")
+    else:
+        spec = P(b_ax, None, None, None, None)
+    return jax.lax.with_sharding_constraint(x, spec)

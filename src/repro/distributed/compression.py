@@ -1,0 +1,76 @@
+"""Gradient compression for the DP-reduction path.
+
+Two layers:
+* :func:`fake_quant_int8` — quantize→dequantize with per-leaf scale applied
+  before the (GSPMD-inserted) gradient all-reduce under pjit.  Numerically
+  equivalent to transmitting int8 on the wire; the pjit program cannot
+  express the quantized collective itself, so bytes-on-wire savings are
+  realized only under the shard_map path below (the pjit path is used for
+  accuracy experiments / error-feedback studies).
+* :func:`compressed_psum` — the shard_map building block that actually moves
+  int8: all_gather(int8 + f32 scale) then dequant-sum locally.  Wire bytes:
+  ~N/4 of the f32 all-reduce (visible in the HLO as an int8 all-gather —
+  the dry-run roofline counts it).
+
+Error feedback (:class:`ErrorFeedback`) carries the quantization residual
+into the next step, the standard fix for biased compression.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _scale_of(x):
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+
+
+def quant_int8(x):
+    s = _scale_of(x)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def dequant_int8(q, s, dtype=jnp.float32):
+    return q.astype(dtype) * s
+
+
+def fake_quant_int8(x):
+    q, s = quant_int8(x.astype(jnp.float32))
+    return dequant_int8(q, s, jnp.float32)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-on-the-wire mean-preserving sum across ``axis_name``."""
+    q, s = quant_int8(x.astype(jnp.float32))
+    gq = lax.all_gather(q, axis_name)  # int8 bytes on the interconnect
+    gs = lax.all_gather(s, axis_name)
+    deq = gq.astype(jnp.float32) * gs.reshape(
+        (-1,) + (1,) * (gq.ndim - 1))
+    return jnp.sum(deq, axis=0)
+
+
+class ErrorFeedback:
+    """e_{t} = g_t + e_{t-1} - Q(g_t + e_{t-1}); carried as extra state."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads, residual):
+        """Returns (compressed grads to transmit, new residual)."""
+        def one(g, e):
+            x = g.astype(jnp.float32) + e
+            c = fake_quant_int8(x)
+            return c, x - c
+
+        out = jax.tree.map(one, grads, residual)
+        comp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return comp, res

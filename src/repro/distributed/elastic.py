@@ -1,0 +1,46 @@
+"""Elastic scaling: remesh to the surviving device count and reshard.
+
+Recovery path after losing nodes (or adding them):
+  1. rebuild a mesh over the live devices (largest (data, model) grid that
+     preserves the model axis if possible),
+  2. recompute all shardings against the new mesh (sharding.py rules are
+     mesh-relative, so this is automatic),
+  3. restore LATEST with ``restore(..., shardings=new)`` — device_put
+     reshards every leaf onto the new topology.
+
+Tested in tests/integration/test_elastic.py by running save on an 8-device
+fake mesh and restoring on a 4-device one in a subprocess.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.distributed import sharding as shd
+
+
+def best_mesh(devices=None, *, model_parallel: int | None = None,
+              axis_names=("data", "model")):
+    """Largest (data × model) mesh over the live devices."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    if model_parallel is None:
+        # keep model axis as large a power of two as fits
+        model_parallel = 1
+        while model_parallel * 2 <= min(n, 16) and n % (model_parallel * 2) == 0:
+            model_parallel *= 2
+    data = n // model_parallel
+    import numpy as np
+
+    arr = np.asarray(devices[: data * model_parallel]).reshape(
+        data, model_parallel)
+    from jax.sharding import Mesh
+
+    return Mesh(arr, axis_names)
+
+
+def elastic_restore(ckpt_dir: str, example_tree, mesh, *, fsdp: bool = True):
+    """Restore LATEST resharded onto ``mesh``. Returns (tree, step)."""
+    shardings = shd.param_shardings(example_tree, mesh, fsdp=fsdp)
+    return ckpt.restore(ckpt_dir, example_tree, shardings=shardings)

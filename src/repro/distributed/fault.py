@@ -1,0 +1,96 @@
+"""Fault tolerance: restart-from-checkpoint, heartbeats, stragglers.
+
+At 1000+ nodes the design assumptions are:
+
+* **State recovery** is checkpoint/restart (checkpoint/ckpt.py): any failure
+  collapses to "restart the job from LATEST on the surviving mesh"
+  (elastic.py reshards).  No in-band parameter reconstruction.
+* **Failure detection** is heartbeat-based: every host appends
+  ``(host_id, step, wall_time)``; the coordinator declares a host dead after
+  ``timeout_s`` silence.  In this single-process container the monitor is
+  exercised by tests with synthetic clocks; on a real cluster the same logic
+  runs over a shared filesystem or KV store.
+* **Straggler mitigation** is *stateless deterministic data assignment*:
+  shard = f(step, host_index, num_hosts) — a restarted or re-ranked host
+  computes its assignment locally, no coordination, and a backup host can
+  recompute any shard (speculative re-execution, MapReduce's own trick).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_step: int = -1
+    last_beat: float = 0.0
+
+
+class HeartbeatMonitor:
+    """Declares hosts dead after ``timeout_s`` without a heartbeat."""
+
+    def __init__(self, num_hosts: int, *, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self.hosts = {i: HostState(i) for i in range(num_hosts)}
+
+    def beat(self, host_id: int, step: int):
+        h = self.hosts[host_id]
+        h.last_step = step
+        h.last_beat = self.clock()
+
+    def dead_hosts(self) -> list[int]:
+        now = self.clock()
+        return [i for i, h in self.hosts.items()
+                if now - h.last_beat > self.timeout_s]
+
+    def alive_hosts(self) -> list[int]:
+        dead = set(self.dead_hosts())
+        return [i for i in self.hosts if i not in dead]
+
+    def stragglers(self, *, lag: int = 2) -> list[int]:
+        """Hosts alive but >= ``lag`` steps behind the front-runner."""
+        alive = self.alive_hosts()
+        if not alive:
+            return []
+        front = max(self.hosts[i].last_step for i in alive)
+        return [i for i in alive if front - self.hosts[i].last_step >= lag]
+
+
+def shard_for(step: int, host_index: int, num_hosts: int,
+              num_shards: int) -> list[int]:
+    """Deterministic, stateless shard assignment.
+
+    Rotates assignments across steps so a persistently slow host does not
+    pin the same shard (straggler decorrelation), and any host can compute
+    any other host's assignment for speculative backup execution.
+    """
+    per = num_shards // num_hosts
+    assert num_shards % num_hosts == 0
+    base = (host_index + step) % num_hosts
+    return [(base * per + i) % num_shards for i in range(per)]
+
+
+def backup_assignment(step: int, dead_host: int, num_hosts: int,
+                      num_shards: int) -> tuple[int, list[int]]:
+    """Which surviving host re-executes a dead host's shards: the next
+    alive rank (deterministic, no coordination)."""
+    backup = (dead_host + 1) % num_hosts
+    return backup, shard_for(step, dead_host, num_hosts, num_shards)
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    """Restart-from-latest semantics used by launch/train.py."""
+
+    max_restarts: int = 100
+    restarts: int = 0
+
+    def on_failure(self) -> bool:
+        self.restarts += 1
+        return self.restarts <= self.max_restarts

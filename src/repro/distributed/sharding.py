@@ -1,0 +1,175 @@
+"""Sharding rules: parameters, optimizer state, batches, decode state.
+
+Strategy (DESIGN.md §7): DP over ('pod','data'); Megatron-style TP over
+'model' (column→row pairs); ZeRO-3 FSDP of the non-TP param dim over the DP
+axes; expert parallelism over 'model'; KV caches head-sharded when the kv
+head count divides the model axis, else sequence-sharded (merged by the
+flash-decode combiner).  Every rule falls back to replication when a dim is
+not divisible — `pick` guarantees even shards, which jax requires for
+input shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, dp_axes, pick
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+
+def _rule_for(path: tuple[str, ...], shape: tuple[int, ...], mesh,
+              fsdp: bool) -> P:
+    """PartitionSpec for the TRAILING dims the rule understands; leading
+    stacking dims (layers / groups) are padded with None by the caller."""
+    dp = dp_axes(mesh) if fsdp else ()
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+
+    def fs(dim):
+        return pick(mesh, dim, dp or None, dp[-1] if dp else None)
+
+    def mp(dim):
+        return pick(mesh, dim, "model")
+
+    if name == "table":  # embedding [V, E]
+        v, e = shape
+        if mp(v) is not None:
+            return P(mp(v), fs(e))
+        return P(fs(v), mp(e))
+    if name == "w" and parent == "head":  # unembed [V, E]
+        v, e = shape
+        if mp(v) is not None:
+            return P(mp(v), fs(e))
+        return P(fs(v), mp(e))
+    if name in ("wq", "wk", "wv"):  # [E, H*D] column-parallel
+        return P(fs(shape[0]), mp(shape[1]))
+    if name == "wo":  # [H*D, E] row-parallel
+        return P(mp(shape[0]), fs(shape[1]))
+    if name in ("bq", "bk", "bv"):
+        return P(mp(shape[0]))
+    if name in ("w_gate", "w_up"):
+        if len(shape) == 3:  # MoE experts [X, E, F]
+            return P(mp(shape[0]), fs(shape[1]), None)
+        return P(fs(shape[0]), mp(shape[1]))  # dense [E, F]
+    if name == "w_down":
+        if len(shape) == 3:  # [X, F, E]
+            return P(mp(shape[0]), None, fs(shape[2]))
+        return P(mp(shape[0]), fs(shape[1]))  # [F, E]
+    if name == "router":  # [E, X]
+        return P(fs(shape[0]), None)
+    if name in ("w1", "w2"):  # whisper mlp
+        if name == "w1":
+            return P(fs(shape[0]), mp(shape[1]))
+        return P(mp(shape[0]), fs(shape[1]))
+    if name in ("b1",):
+        return P(mp(shape[0]))
+    if name in ("b2",):
+        return P(None)
+    if name == "in_proj":  # ssm [E, O]
+        return P(fs(shape[0]), mp(shape[1]))
+    if name == "out_proj":  # ssm [d_in, E]
+        return P(mp(shape[0]), fs(shape[1]))
+    if name == "conv_w":  # [W, Ch]
+        return P(None, mp(shape[1]))
+    if name == "conv_b":
+        return P(mp(shape[0]))
+    if name in ("A_log", "D", "dt_bias"):
+        return P(mp(shape[0]))
+    if name == "pos_dec":  # [dec_len, E]
+        return P(None, fs(shape[1]))
+    # norms / scalars: replicated
+    return P(*([None] * len(shape)))
+
+
+_STACK_KEYS = ("layers", "groups", "tail", "enc_layers", "dec_layers")
+
+
+def param_pspecs(params, mesh, *, fsdp: bool = True):
+    """Pytree of PartitionSpecs matching ``params``."""
+
+    def one(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", None))
+                     for p in path)
+        keys = tuple(str(k) for k in keys if k is not None)
+        n_stack = 0
+        for k in keys:
+            if k in _STACK_KEYS:
+                n_stack += 1
+                if k == "groups":
+                    n_stack += 1  # zamba groups are [G, k, ...]
+        shape = tuple(leaf.shape)
+        trailing = shape[n_stack:]
+        spec = _rule_for(keys, trailing, mesh, fsdp)
+        return P(*([None] * n_stack + list(spec)))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh, *, fsdp: bool = True):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, mesh, fsdp=fsdp))
+
+
+# ---------------------------------------------------------------------------
+# Batch / decode-state rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_avals, mesh):
+    """Shard the global batch dim over the DP axes; seq replicated."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        ax = pick(mesh, b, dp or None, dp[-1] if dp else None)
+        return P(*([ax] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_avals)
+
+
+def decode_state_pspecs(state_avals, mesh, cfg: ModelConfig):
+    """KV caches [L,B,S,Kv,D]: batch over DP; heads over model when
+    divisible, else sequence over model (flash-decode combiner merge).
+    SSM states [L,B,H,N,P]: heads over model.  pos: replicated."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        keys = tuple(str(getattr(p, "key", "")) for p in path)
+        name = keys[-1] if keys else ""
+        shp = leaf.shape
+        if name in ("k", "v", "k_scale", "v_scale") or name.startswith("cross_"):
+            # [L, B, S, Kv, D(|1)]
+            b_ax = pick(mesh, shp[1], dp or None, dp[-1] if dp else None)
+            if pick(mesh, shp[3], "model") is not None:
+                return P(None, b_ax, None, "model", None)
+            seq_axes = ("model",) if b_ax else ("data", "model")
+            s_ax = pick(mesh, shp[2], seq_axes if b_ax is None else "model")
+            return P(None, b_ax, s_ax, None, None)
+        if name == "ssm":  # [L, B, H, N, P]
+            b_ax = pick(mesh, shp[1], dp or None, dp[-1] if dp else None)
+            return P(None, b_ax, pick(mesh, shp[2], "model"), None, None)
+        if name == "conv":  # [L, B, W-1, Ch]
+            b_ax = pick(mesh, shp[1], dp or None, dp[-1] if dp else None)
+            return P(None, b_ax, None, pick(mesh, shp[3], "model"))
+        if name == "pos":
+            return P()
+        # fallback: shard dim 1 (batch-like) if possible
+        if leaf.ndim >= 2:
+            b_ax = pick(mesh, shp[1], dp or None, dp[-1] if dp else None)
+            return P(*([None, b_ax] + [None] * (leaf.ndim - 2)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, state_avals)
+
+
+def tokens_pspec(batch: int, mesh) -> P:
+    dp = dp_axes(mesh)
+    return P(pick(mesh, batch, dp or None, dp[-1] if dp else None))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the collector hot paths (+ flash decode).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU in interpret mode against the pure-jnp oracles in ref.py.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

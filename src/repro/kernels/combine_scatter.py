@@ -1,0 +1,81 @@
+"""General monoid combining collector: atomics-free "scatter" on TPU.
+
+GPUs implement the combining collector with atomic read-modify-write; TPU has
+no atomics.  The TPU-native rethink: the holder table ``[K, D]`` lives in
+VMEM as the kernel's accumulation block, and each emitted pair becomes a
+*masked broadcast update* — ``table = op(table, where(iota_K == key, value,
+identity))`` — executed on the VPU.  Pairs are streamed tile by tile from
+HBM; the table never leaves VMEM until the stream ends (grid accumulation).
+
+This path supports any scatter monoid (max/min as well as add).  For pure
+sums prefer the MXU one-hot kernel (onehot_combine.py), which turns the same
+update into matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_IDENT = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}
+_OPS = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
+
+
+def _kernel(keys_ref, vals_ref, out_ref, *, key_space: int, op: str,
+            inner: int):
+    i = pl.program_id(0)
+    ident = jnp.float32(_IDENT[op])
+    f = _OPS[op]
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    keys = keys_ref[...]  # [Tn]
+    vals = vals_ref[...]  # [Tn, D]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (key_space, 1), 0)  # [K, 1]
+
+    def body(p, table):
+        key_p = keys[p]
+        hit = (k_iota == key_p)  # [K, 1]
+        update = jnp.where(hit, vals[p][None, :], ident)  # [K, D] bcast row
+        return f(table, update)
+
+    out_ref[...] = jax.lax.fori_loop(0, inner, body, out_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("key_space", "op", "tile_n",
+                                             "interpret"))
+def combine_scatter(
+    keys: jax.Array,
+    values: jax.Array,
+    key_space: int,
+    op: str = "add",
+    *,
+    tile_n: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """[N] keys, [N, D] values -> [K, D] monoid-combined table (f32)."""
+    n, d = values.shape
+    tile_n = min(tile_n, max(n, 8))
+    pad_n = (-n) % tile_n
+    keys_p = jnp.pad(keys, (0, pad_n), constant_values=key_space)
+    vals_p = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, 0)),
+                     constant_values=_IDENT[op] if op != "add" else 0.0)
+    np_ = keys_p.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, key_space=key_space, op=op, inner=tile_n),
+        grid=(np_ // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((key_space, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((key_space, d), jnp.float32),
+        interpret=interpret,
+    )(keys_p, vals_p)
+    return out

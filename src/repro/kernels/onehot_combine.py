@@ -1,0 +1,78 @@
+"""MXU one-hot combiner: ``one_hot(keys)ᵀ @ values`` on the systolic array.
+
+This is the TPU-native lowering of the paper's combining collector for
+*additive* monoids: instead of a hash-table insert per emitted pair (the JVM
+mechanism) or an atomic scatter-add (the GPU mechanism), each tile of emitted
+pairs becomes a dense ``[K, Tn] @ [Tn, D]`` matmul that the MXU executes at
+peak; the per-key holder table ``[K, D]`` stays resident in VMEM across the
+whole pair stream (grid-accumulation), so the intermediate pairs are never
+re-read from HBM — the combine happens "at emit time", exactly the paper's
+execution-flow change.
+
+Preconditions: K*D*4 + Tn*(K + D)*4 bytes within VMEM budget (ops.py checks).
+Sentinel keys (== key_space) produce all-zero one-hot rows and are dropped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(keys_ref, vals_ref, out_ref, *, key_space: int, n_tiles: int):
+    i = pl.program_id(1)  # innermost: pair-stream tile index
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # [Tn] int32
+    vals = vals_ref[...]  # [Tn, Td] f32
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], key_space), 1)
+    onehot = (keys[:, None] == k_iota).astype(vals.dtype)  # [Tn, K]
+    # MXU: [K, Tn] @ [Tn, Td] accumulated into the VMEM-resident table
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("key_space", "tile_n", "tile_d",
+                                             "interpret"))
+def onehot_combine(
+    keys: jax.Array,
+    values: jax.Array,
+    key_space: int,
+    *,
+    tile_n: int = 512,
+    tile_d: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """[N] keys, [N, D] values -> [K, D] per-key sums (f32)."""
+    n, d = values.shape
+    tile_n = min(tile_n, max(n, 8))
+    tile_d = min(tile_d, d)
+
+    # pad N to a tile multiple (sentinel keys), D to a tile multiple (zeros)
+    pad_n = (-n) % tile_n
+    pad_d = (-d) % tile_d
+    keys_p = jnp.pad(keys, (0, pad_n), constant_values=key_space)
+    vals_p = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    np_, dp = vals_p.shape
+    n_tiles = np_ // tile_n
+
+    grid = (dp // tile_d, n_tiles)  # N innermost: table tile stays resident
+    out = pl.pallas_call(
+        functools.partial(_kernel, key_space=key_space, n_tiles=n_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n,), lambda j, i: (i,)),
+            pl.BlockSpec((tile_n, tile_d), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((key_space, tile_d), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((key_space, dp), jnp.float32),
+        interpret=interpret,
+    )(keys_p, vals_p)
+    return out[:, :d]

@@ -1,0 +1,106 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each wrapper validates preconditions, picks tile sizes against the VMEM
+budget, and exposes an ``interpret`` flag (True on CPU — this container —
+and False on real TPU, where the Mosaic pipeline compiles the same kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import combine_scatter as _cs
+from repro.kernels import flash_decode as _fd
+from repro.kernels import onehot_combine as _oc
+from repro.kernels import segment_reduce as _sr
+
+#: v5e VMEM budget we tile against (bytes); leave headroom for double buffers.
+VMEM_BUDGET = 96 * 1024 * 1024  # of 128 MiB
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def onehot_combine(keys, values, key_space, *, tile_n=512, tile_d=128,
+                   interpret=None):
+    """Additive combine via MXU one-hot matmul. [N],[N,D] -> [K,D] f32."""
+    if values.ndim != 2:
+        raise ValueError("values must be [N, D]")
+    d = values.shape[1]
+    table_bytes = key_space * min(tile_d, d) * 4
+    if table_bytes > VMEM_BUDGET:
+        raise ValueError(
+            f"key_space {key_space} too large for VMEM-resident table; use "
+            "combine_scatter with key blocking or the jnp scatter path")
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _oc.onehot_combine(keys, values, key_space, tile_n=tile_n,
+                              tile_d=tile_d, interpret=interpret)
+
+
+def combine_scatter(keys, values, key_space, op="add", *, tile_n=256,
+                    interpret=None):
+    """General monoid combine (masked broadcast update). -> [K, D] f32."""
+    if values.ndim != 2:
+        raise ValueError("values must be [N, D]")
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _cs.combine_scatter(keys, values, key_space, op, tile_n=tile_n,
+                               interpret=interpret)
+
+
+def segment_reduce(sorted_keys, sorted_values, key_space, op="add", *,
+                   tile_n=256, block_k=None, interpret=None):
+    """Baseline reduce phase over a key-sorted stream. -> [K, D] f32.
+
+    block_k=None lets the wrapper choose: the smallest power-of-two block
+    >= the max in-tile key spread (dynamic data -> computed on host if the
+    keys are concrete, else full key space).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if block_k is None:
+        try:  # concrete keys: exploit sorted locality
+            ks = np.asarray(sorted_keys)
+            n = ks.shape[0]
+            tn = min(tile_n, max(n, 8))
+            pad = (-n) % tn
+            ksp = np.pad(ks, (0, pad), constant_values=key_space)
+            tiles = ksp.reshape(-1, tn)
+            valid = tiles < key_space
+            spread = 0
+            for t, m in zip(tiles, valid):
+                if m.any():
+                    lo_blk = int(t[m].min())
+                    hi_blk = int(t[m].max())
+                    spread = max(spread, hi_blk - lo_blk + 1)
+            blk = 1 << max(int(np.ceil(np.log2(max(spread, 1)))), 3)
+            # aligned blocks: spread fitting a block is necessary AND the
+            # tile must not straddle an alignment boundary; double once.
+            while blk < key_space:
+                ok = all((not m.any()) or
+                         (int(t[m].min()) // blk == int(t[m].max()) // blk)
+                         for t, m in zip(tiles, valid))
+                if ok:
+                    break
+                blk *= 2
+            block_k = min(blk, key_space)
+        except jax.errors.TracerArrayConversionError:
+            block_k = key_space
+    return _sr.segment_reduce(sorted_keys, sorted_values, key_space, op,
+                              tile_n=tile_n, block_k=block_k,
+                              interpret=interpret)
+
+
+def flash_decode(q, k, v, kv_len, *, tile_s=512, interpret=None):
+    """Single-token GQA decode attention. -> [B, H, D] f32."""
+    B, H, D = q.shape
+    _, S, Hkv, _ = k.shape
+    if H % Hkv:
+        raise ValueError("H must be a multiple of Hkv (GQA)")
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    # keep K/V tile + holder within VMEM
+    while tile_s * D * 4 * 2 + (H // Hkv) * (D + 2) * 4 > VMEM_BUDGET:
+        tile_s //= 2
+    return _fd.flash_decode(q, k, v, kv_len, tile_s=tile_s,
+                            interpret=interpret)

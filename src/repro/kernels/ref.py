@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(tests/kernels/*): same signatures, same dtypes, no tiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def onehot_combine(keys: jax.Array, values: jax.Array, key_space: int) -> jax.Array:
+    """Sum-combine values by key: ``one_hot(keys)ᵀ @ values``.
+
+    keys:   [N] int32 in [0, key_space]; == key_space -> dropped.
+    values: [N, D] float.
+    returns [key_space, D] float32 per-key sums.
+    """
+    oh = jax.nn.one_hot(keys, key_space, dtype=jnp.float32)  # sentinel -> 0s
+    return jnp.einsum("nk,nd->kd", oh, values.astype(jnp.float32))
+
+
+def combine_scatter(keys: jax.Array, values: jax.Array, key_space: int,
+                    op: str = "add") -> jax.Array:
+    """Monoid scatter-combine values by key into a [K, D] table.
+
+    op in {add, max, min}.  Sentinel keys dropped.
+    """
+    K = key_space
+    vals = values.astype(jnp.float32)
+    if op == "add":
+        init = jnp.zeros((K,) + vals.shape[1:], jnp.float32)
+        return init.at[keys].add(vals, mode="drop")
+    if op == "max":
+        init = jnp.full((K,) + vals.shape[1:], -jnp.inf, jnp.float32)
+        return init.at[keys].max(vals, mode="drop")
+    if op == "min":
+        init = jnp.full((K,) + vals.shape[1:], jnp.inf, jnp.float32)
+        return init.at[keys].min(vals, mode="drop")
+    raise ValueError(op)
+
+
+def segment_reduce(sorted_keys: jax.Array, sorted_values: jax.Array,
+                   key_space: int, op: str = "add") -> jax.Array:
+    """Baseline reduce phase: segmented reduce over key-sorted pairs.
+
+    Same output contract as combine_scatter; input must be sorted by key.
+    (The kernel exploits sortedness for sequential-run accumulation; the
+    oracle need not.)
+    """
+    return combine_scatter(sorted_keys, sorted_values, key_space, op)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_len: jax.Array | int, scale: float | None = None) -> jax.Array:
+    """Single-token decode attention (the (m, l, acc) combiner, unfused).
+
+    q: [H, D]; k, v: [S, Hkv, D]; kv_len: #valid positions (<= S).
+    GQA: H % Hkv == 0; head h attends kv head h // (H // Hkv).
+    returns [H, D] float32.
+    """
+    H, D = q.shape
+    S, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    kg = jnp.repeat(kf, G, axis=1)  # [S, H, D]
+    vg = jnp.repeat(vf, G, axis=1)
+    logits = jnp.einsum("hd,shd->hs", qf, kg)
+    mask = jnp.arange(S)[None, :] < kv_len
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hs,shd->hd", w, vg)

@@ -1,0 +1,124 @@
+"""Baseline reduce phase: segmented reduce over a key-sorted pair stream.
+
+This kernel implements the *reduce-flow* hot loop (the execution path the
+paper's optimizer eliminates): pairs arrive sorted by key after the shuffle,
+and each key's run is reduced.  The TPU-idiomatic exploitation of sortedness
+is VMEM *block locality*: a sorted tile of pairs touches a narrow band of the
+key space, so the output block visited by tile ``i`` is chosen dynamically
+via scalar prefetch (``block_ids[i] = sorted_keys[i*Tn] // Kb``) instead of
+keeping the whole ``[K, D]`` table resident.  This is what lets the reduce
+phase scale to large K — and it is still strictly worse than the combine
+flow, which never materializes the sorted stream at all (the point of the
+paper).
+
+Precondition (enforced by ops.py): every tile's keys fall inside one aligned
+K-block, i.e. ``Kb >= max in-tile key spread`` (guaranteed by choosing
+``Kb = K`` in the worst case).  Cross-tile runs are handled by revisiting:
+tiles are processed in order and the op is associative, so a run spanning
+tiles accumulates correctly whenever consecutive tiles map to the same block;
+when they don't, their key ranges are disjoint (sortedness), so no update is
+lost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_IDENT = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}
+
+
+def _kernel(block_ids_ref, keys_ref, vals_ref, out_ref, *, block_k: int,
+            op: str):
+    i = pl.program_id(0)
+    ident = jnp.float32(_IDENT[op])
+
+    # first visit to this output block? (block_ids is non-decreasing)
+    blk = block_ids_ref[i]
+    prev_blk = block_ids_ref[jnp.maximum(i, 1) - 1]
+    first_visit = (i == 0) | (blk != prev_blk)
+
+    @pl.when(first_visit)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    keys = keys_ref[...]  # [Tn] global key ids (sorted)
+    vals = vals_ref[...]  # [Tn, D]
+    local = keys - blk * block_k  # ids within this K-block
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (local.shape[0], block_k), 1)
+    hit = (local[:, None] == k_iota)  # out-of-block / sentinel -> no hit
+
+    if op == "add":
+        onehot = hit.astype(vals.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            onehot, vals, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        f = jnp.maximum if op == "max" else jnp.minimum
+        masked = jnp.where(hit[:, :, None], vals[:, None, :], ident)
+        out_ref[...] = f(out_ref[...], masked.max(0) if op == "max"
+                         else masked.min(0))
+
+
+@functools.partial(jax.jit, static_argnames=("key_space", "op", "tile_n",
+                                             "block_k", "interpret"))
+def segment_reduce(
+    sorted_keys: jax.Array,
+    sorted_values: jax.Array,
+    key_space: int,
+    op: str = "add",
+    *,
+    tile_n: int = 256,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Key-sorted [N] keys + [N, D] values -> [K, D] reduced table (f32).
+
+    ``block_k`` must be >= the max key spread within any tile (ops.py
+    computes a safe value; None means the full key space — always safe).
+    """
+    n, d = sorted_values.shape
+    tile_n = min(tile_n, max(n, 8))
+    if block_k is None:
+        block_k = key_space
+    pad_k = (-key_space) % block_k
+    K_p = key_space + pad_k
+
+    pad_n = (-n) % tile_n
+    keys_p = jnp.pad(sorted_keys, (0, pad_n), constant_values=K_p)
+    vals_p = jnp.pad(sorted_values.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    np_ = keys_p.shape[0]
+    n_tiles = np_ // tile_n
+
+    # scalar prefetch: which K-block each tile accumulates into
+    tile_first_key = keys_p[:: tile_n][:n_tiles]
+    block_ids = jnp.minimum(tile_first_key // block_k,
+                            K_p // block_k - 1).astype(jnp.int32)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_n,), lambda i, blk: (i,)),
+            pl.BlockSpec((tile_n, d), lambda i, blk: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_k, d), lambda i, blk: (blk[i], 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, op=op),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K_p, d), jnp.float32),
+        interpret=interpret,
+    )(block_ids, keys_p, vals_p)
+    out = out[:key_space]
+    # K-blocks never visited by any tile keep uninitialized memory; reset
+    # absent keys to the identity (also masks sentinel-padded keys).
+    counts = jnp.zeros((K_p + 1,), jnp.int32).at[keys_p].add(1, mode="drop")
+    out = jnp.where((counts[:key_space] > 0)[:, None], out,
+                    jnp.float32(_IDENT[op]))
+    return out

@@ -1,0 +1,62 @@
+"""Serving driver: prefill + batched greedy decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+      --batch 4 --prompt-len 16 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.registry import get_model
+from repro.serving.serve_step import ServeConfig, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-dtype", default="model", choices=["model", "int8"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    sc = ServeConfig(temperature=args.temperature, kv_dtype=args.kv_dtype)
+
+    extra = None
+    if cfg.family == "audio":  # frontend stub: precomputed frame embeddings
+        extra = {"frames": jax.random.normal(
+            rng, (args.batch, args.prompt_len + args.max_new, cfg.d_model),
+            cfg.dtype)}
+    elif cfg.family == "vlm":  # frontend stub: precomputed patch embeddings
+        extra = {"patches": jax.random.normal(
+            rng, (args.batch, cfg.num_patches, cfg.d_model), cfg.dtype)}
+
+    t0 = time.perf_counter()
+    out = generate(model, params, prompts, max_new=args.max_new, sc=sc,
+                   extra_batch=extra)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.max_new
+    print(f"generated {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s incl. compile)")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq{b}: {list(map(int, out[b]))}")
+
+
+if __name__ == "__main__":
+    main()

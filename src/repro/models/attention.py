@@ -1,0 +1,327 @@
+"""GQA attention: training (full-sequence) and decode (KV cache) paths.
+
+Options cover the assigned archs: QKV bias (qwen), attention/logit softcaps
+and local+global alternation (gemma2), cross-attention (whisper decoder),
+int8-quantized KV caches (serving), and sequence-sharded caches merged with
+the flash-decode combiner (see kernels/flash_decode.py for the fused kernel;
+the jnp path here is what the multi-pod dry-run lowers).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import apply_rope, rope_table
+
+NEG_INF = -1e30
+
+
+def init_attn(rng, cfg: ModelConfig, *, cross: bool = False):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(rng, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, qd)) * s).astype(cfg.dtype),
+        "wk": (jax.random.normal(ks[1], (d, kvd)) * s).astype(cfg.dtype),
+        "wv": (jax.random.normal(ks[2], (d, kvd)) * s).astype(cfg.dtype),
+        "wo": (jax.random.normal(ks[3], (qd, d)) * qd ** -0.5).astype(cfg.dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,), cfg.dtype)
+        p["bk"] = jnp.zeros((kvd,), cfg.dtype)
+        p["bv"] = jnp.zeros((kvd,), cfg.dtype)
+    return p
+
+
+def _project_q(cfg, p, x):
+    q = jnp.einsum("...d,dh->...h", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    return q.reshape(x.shape[:-1] + (cfg.num_heads, cfg.hd))
+
+
+def _project_kv(cfg, p, x):
+    k = jnp.einsum("...d,dh->...h", x, p["wk"])
+    v = jnp.einsum("...d,dh->...h", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    shp = x.shape[:-1] + (cfg.num_kv_heads, cfg.hd)
+    return k.reshape(shp), v.reshape(shp)
+
+
+def _softcap(logits, cap):
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+def _gqa_logits(q, k):
+    """q [B,S,H,D], k [B,T,Kv,D] -> [B,Kv,G,S,T] (native GQA 5D layout).
+
+    Staying 5D until after the T contraction avoids reshapes of sharded
+    attention weights — the reshape is what pushes GSPMD into its
+    replicate-and-repartition fallback on long sequences.
+    """
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, D)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k)
+
+
+def _gqa_out(w, v):
+    """w [B,Kv,G,S,T], v [B,T,Kv,D] -> [B,S,H,D]."""
+    B, Kv, G, S, T = w.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, Kv * G, v.shape[3])
+
+
+#: sequences longer than this use query-chunked attention automatically
+#: (the [B,H,S,S] logits tensor would not fit HBM at 32k+).
+CHUNK_THRESHOLD = 8192
+QUERY_CHUNK = 1024
+
+
+def _attend(cfg, q, k, v, *, causal, window, q_offset, kv_x_is_none, T):
+    """Attention for a (possibly chunked) query block. q [B,Sq,H,D]."""
+    from repro.distributed.act_sharding import attn_weights, batch_major
+
+    Sq = q.shape[1]
+    logits = _gqa_logits(q, k).astype(jnp.float32) * (cfg.hd ** -0.5)
+    logits = attn_weights(logits)  # pin batch/head/query sharding
+    logits = _softcap(logits, cfg.attn_softcap)
+    if causal and kv_x_is_none:
+        i = q_offset + jnp.arange(Sq)[:, None]
+        j = jnp.arange(T)[None, :]
+        mask = j <= i
+        if window is not None:
+            # window may be a traced per-layer int32; 0 means global
+            w = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), T)
+            mask &= j > i - w
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    w = attn_weights(w)
+    return batch_major(_gqa_out(w, v))
+
+
+def attn_train(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    positions=None,
+    causal: bool = True,
+    window: int | None = None,
+    rope: bool = True,
+    kv_x=None,  # cross-attention source (whisper decoder)
+    query_chunk: int | None = None,
+):
+    """Full-sequence attention. x [B,S,E] -> [B,S,E].
+
+    Long sequences are processed in query chunks (flash-attention pattern —
+    each chunk folds the full KV via softmax; the [S,S] logits matrix is
+    never materialized).  This is the training-side analogue of the
+    flash-decode combiner.
+    """
+    from repro.distributed.act_sharding import heads_even, seq_major
+
+    B, S, E = x.shape
+    q = _project_q(cfg, p, x)
+    src = x if kv_x is None else kv_x
+    k, v = _project_kv(cfg, p, src)
+    T = k.shape[1]
+
+    if not heads_even(cfg.num_kv_heads):
+        # sequence parallelism: uneven head counts (40 over 16) cannot carry
+        # the model axis, so the query SEQUENCE does (Megatron-SP pattern);
+        # K/V are gathered (GQA keeps them small)
+        q = seq_major(q, axis=1)
+
+    if rope and kv_x is None:
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = rope_table(pos, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if query_chunk is None and S > CHUNK_THRESHOLD:
+        query_chunk = QUERY_CHUNK
+
+    if query_chunk is None or S <= query_chunk:
+        out = _attend(cfg, q, k, v, causal=causal, window=window,
+                      q_offset=0, kv_x_is_none=kv_x is None, T=T)
+    else:
+        assert S % query_chunk == 0, (S, query_chunk)
+        nq = S // query_chunk
+        qc = q.reshape(B, nq, query_chunk, cfg.num_heads, cfg.hd)
+        qc = jnp.moveaxis(qc, 1, 0)  # [nq, B, Qc, H, D]
+
+        def body(_, args):
+            qb, off = args
+            o = _attend(cfg, qb, k, v, causal=causal, window=window,
+                        q_offset=off, kv_x_is_none=kv_x is None, T=T)
+            return None, o
+
+        offsets = jnp.arange(nq) * query_chunk
+        _, oc = jax.lax.scan(body, None, (qc, offsets))
+        out = jnp.moveaxis(oc, 0, 1).reshape(B, S, cfg.num_heads, cfg.hd)
+
+    return jnp.einsum("...h,hd->...d", out.reshape(B, S, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV cache (bf16 or int8 with per-position-head scales)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                  kv_dtype=None, layers: int | None = None):
+    """Stacked-layer cache pytree: [L, B, S, Kv, D] (+ scales when int8)."""
+    L = layers if layers is not None else cfg.num_layers
+    kv_dtype = kv_dtype or cfg.dtype
+    shape = (L, batch, max_len, cfg.num_kv_heads, cfg.hd)
+    cache = {
+        "k": jnp.zeros(shape, kv_dtype),
+        "v": jnp.zeros(shape, kv_dtype),
+    }
+    if kv_dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+    return cache
+
+
+def _quantize(x):
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _dequant(q, s, dtype):
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def cache_update(layer_cache, k_new, v_new, pos):
+    """Write one token's K/V at position ``pos``. k_new [B,1,Kv,D]."""
+    quant = layer_cache["k"].dtype == jnp.int8
+    if quant:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        out = dict(layer_cache)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(layer_cache["k"], kq, pos, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(layer_cache["v"], vq, pos, 1)
+        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k_scale"], ks, pos, 1)
+        out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v_scale"], vs, pos, 1)
+        return out
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], k_new.astype(layer_cache["k"].dtype), pos, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], v_new.astype(layer_cache["v"].dtype), pos, 1),
+    }
+
+
+def cache_kv(layer_cache, dtype):
+    if layer_cache["k"].dtype == jnp.int8:
+        return (_dequant(layer_cache["k"], layer_cache["k_scale"], dtype),
+                _dequant(layer_cache["v"], layer_cache["v_scale"], dtype))
+    return layer_cache["k"].astype(dtype), layer_cache["v"].astype(dtype)
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p,
+    x,  # [B, 1, E] current token hidden
+    layer_cache,
+    pos,  # scalar int32: next position index
+    *,
+    window: int | None = None,
+    rope: bool = True,
+    cross_kv=None,  # (k, v) precomputed encoder cross KV
+    deferred_write: bool = False,
+):
+    """One decode step.
+
+    deferred_write=False: update the cache in place, return (out, cache).
+    deferred_write=True:  do NOT touch the cache — attend over the cache's
+    first ``pos`` positions PLUS the in-register current-token K/V, and
+    return (out, (k_new, v_new)).  Under scan-over-layers this avoids
+    double-buffering the whole cache as scan xs/ys: the caller stacks the
+    per-layer (k,v) and writes ONE token column for all layers afterwards.
+    """
+    B = x.shape[0]
+    q = _project_q(cfg, p, x)  # [B,1,H,D]
+
+    if cross_kv is None:
+        k_new, v_new = _project_kv(cfg, p, x)
+        if rope:
+            cos, sin = rope_table(pos[None], cfg.hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k_new = apply_rope(k_new, cos, sin)
+        if not deferred_write:
+            layer_cache = cache_update(layer_cache, k_new, v_new, pos)
+        k, v = cache_kv(layer_cache, x.dtype)
+        T = k.shape[1]
+        j = jnp.arange(T)
+        valid = j <= pos if not deferred_write else j < pos
+        if window is not None:
+            w = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), T)
+            valid &= j > pos - w
+    else:
+        k, v = cross_kv
+        T = k.shape[1]
+        valid = jnp.ones((T,), bool)
+
+    from repro.distributed.act_sharding import attn_weights
+
+    logits = _gqa_logits(q, k).astype(jnp.float32) * (cfg.hd ** -0.5)
+    logits = attn_weights(logits)
+    logits = _softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+
+    if cross_kv is None and deferred_write:
+        # current token's logit against its own (in-register) K
+        self_logit = _gqa_logits(q, k_new.astype(x.dtype)).astype(
+            jnp.float32) * (cfg.hd ** -0.5)
+        self_logit = _softcap(self_logit, cfg.attn_softcap)
+        logits = jnp.concatenate([logits, self_logit], axis=-1)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = (_gqa_out(w[..., :T], v)
+               + _gqa_out(w[..., T:], v_new.astype(x.dtype)))
+        out = out.reshape(B, 1, -1)
+        return (jnp.einsum("...h,hd->...d", out, p["wo"]),
+                (k_new, v_new))
+
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = _gqa_out(w, v).reshape(B, 1, -1)
+    return jnp.einsum("...h,hd->...d", out, p["wo"]), layer_cache
+
+
+def stacked_cache_write(cache, k_stack, v_stack, pos):
+    """Write one token column for ALL layers: k_stack [L,B,1,Kv,D].
+
+    One dynamic-update-slice on the donated buffer — aliasable in place.
+    """
+    quant = cache["k"].dtype == jnp.int8
+    if quant:
+        kq, ks = _quantize(k_stack)
+        vq, vs = _quantize(v_stack)
+        return {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos, 2),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos, 2),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, pos, 2),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, pos, 2),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_stack.astype(cache["k"].dtype), pos, 2),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_stack.astype(cache["v"].dtype), pos, 2),
+    }

@@ -1,0 +1,236 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+Structure (simplified from arXiv:2411.15242, noted in DESIGN.md): the model
+is ``G`` groups of ``hybrid_attn_every`` Mamba2 layers, each group followed
+by one application of a *single shared* transformer block (shared weights,
+distinct KV cache per call site); leftover Mamba2 layers close the stack.
+The original's embedding-concat input to the shared block and LoRA-per-site
+projections are omitted.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import ModelConfig
+from repro.models.layers import (embed, init_embed, init_rmsnorm,
+                                 init_swiglu, init_unembed, rmsnorm, swiglu)
+
+
+def _layout(cfg: ModelConfig):
+    k = cfg.hybrid_attn_every
+    groups = cfg.num_layers // k
+    leftover = cfg.num_layers - groups * k
+    return groups, k, leftover
+
+
+def init_params(cfg: ModelConfig, rng):
+    ke, km, ks, ku = jax.random.split(rng, 4)
+    groups, k, leftover = _layout(cfg)
+
+    def mamba_layer(key):
+        return {"ln": init_rmsnorm(cfg.d_model),
+                "ssm": ssm_mod.init_ssm(key, cfg)}
+
+    grouped = jax.vmap(jax.vmap(mamba_layer))(
+        jax.random.split(km, groups * k).reshape(groups, k, 2))
+    tail = (jax.vmap(mamba_layer)(jax.random.split(jax.random.fold_in(km, 7),
+                                                   leftover))
+            if leftover else None)
+    ka, kf = jax.random.split(ks)
+    shared = {
+        "ln_attn": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_attn(ka, cfg),
+        "ln_ffn": init_rmsnorm(cfg.d_model),
+        "ffn": init_swiglu(kf, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+    p = {
+        "embed": init_embed(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "groups": grouped,  # [G, k, ...]
+        "shared": shared,
+        "ln_f": init_rmsnorm(cfg.d_model),
+        "head": init_unembed(ku, cfg.vocab_size, cfg.d_model, cfg.dtype,
+                             tie=cfg.tie_embeddings),
+    }
+    if tail is not None:
+        p["tail"] = tail
+    return p
+
+
+def _mamba_block(cfg, p, x):
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    return x + ssm_mod.ssm_train(cfg, p["ssm"], h)
+
+
+def _shared_block_train(cfg, p, x):
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    x = x + attn.attn_train(cfg, p["attn"], h)
+    h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    return x + swiglu(p["ffn"], h, cfg.act)
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat: bool = True, **_):
+    x = embed(params["embed"], batch["tokens"])
+    groups, k, leftover = _layout(cfg)
+
+    def group_body(x, gp):
+        def inner(x, p):
+            f = jax.checkpoint(partial(_mamba_block, cfg)) if remat else \
+                partial(_mamba_block, cfg)
+            return f(p, x), None
+
+        x, _ = jax.lax.scan(inner, x, gp)
+        f = (jax.checkpoint(partial(_shared_block_train, cfg)) if remat
+             else partial(_shared_block_train, cfg))
+        return f(params["shared"], x), None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if "tail" in params:
+        def inner(x, p):
+            return _mamba_block(cfg, p, x), None
+        x, _ = jax.lax.scan(inner, x, params["tail"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, {"load_balance_loss": jnp.float32(0.0)}
+
+
+def unembed_matrix(cfg, params):
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["head"]["w"])
+
+
+def logits_of_hidden(cfg, params, hidden):
+    return jnp.einsum("...e,ve->...v", hidden,
+                      unembed_matrix(cfg, params)).astype(jnp.float32)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                      kv_dtype=None):
+    groups, k, leftover = _layout(cfg)
+    state = {
+        "ssm_groups": ssm_mod.init_ssm_state(cfg, batch, groups * k),
+        "cache": attn.init_kv_cache(cfg, batch, max_len, kv_dtype=kv_dtype,
+                                    layers=groups),  # one per call site
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if leftover:
+        state["ssm_tail"] = ssm_mod.init_ssm_state(cfg, batch, leftover)
+    return state
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    groups, k, leftover = _layout(cfg)
+    pos = state["pos"]
+    x = embed(params["embed"], tokens[:, None])
+
+    conv = state["ssm_groups"]["conv"].reshape(
+        (groups, k) + state["ssm_groups"]["conv"].shape[1:])
+    ssm_s = state["ssm_groups"]["ssm"].reshape(
+        (groups, k) + state["ssm_groups"]["ssm"].shape[1:])
+
+    def group_body(x, layer):
+        gp, conv_g, ssm_g, cache_g = layer
+
+        def inner(x, l):
+            p, c, s = l
+            h = rmsnorm(p["ln"], x, cfg.norm_eps)
+            y, ns = ssm_mod.ssm_decode(cfg, p["ssm"], h, {"conv": c, "ssm": s})
+            return x + y, (ns["conv"], ns["ssm"])
+
+        x, (nc, nssm) = jax.lax.scan(inner, x, (gp, conv_g, ssm_g))
+        h = rmsnorm(params["shared"]["ln_attn"], x, cfg.norm_eps)
+        a, kv_new = attn.attn_decode(cfg, params["shared"]["attn"], h,
+                                     cache_g, pos, deferred_write=True)
+        x = x + a
+        h = rmsnorm(params["shared"]["ln_ffn"], x, cfg.norm_eps)
+        x = x + swiglu(params["shared"]["ffn"], h, cfg.act)
+        return x, (nc, nssm, kv_new)
+
+    x, (nconv, nssm, kv_stack) = jax.lax.scan(
+        group_body, x, (params["groups"], conv, ssm_s, state["cache"]))
+
+    new_state = dict(state)
+    new_state["ssm_groups"] = {
+        "conv": nconv.reshape((-1,) + nconv.shape[2:]),
+        "ssm": nssm.reshape((-1,) + nssm.shape[2:]),
+    }
+    new_state["cache"] = attn.stacked_cache_write(
+        state["cache"], kv_stack[0], kv_stack[1], pos)
+
+    if leftover:
+        def inner(x, l):
+            p, c, s = l
+            h = rmsnorm(p["ln"], x, cfg.norm_eps)
+            y, ns = ssm_mod.ssm_decode(cfg, p["ssm"], h, {"conv": c, "ssm": s})
+            return x + y, (ns["conv"], ns["ssm"])
+
+        x, (tc, ts) = jax.lax.scan(
+            inner, x, (params["tail"], state["ssm_tail"]["conv"],
+                       state["ssm_tail"]["ssm"]))
+        new_state["ssm_tail"] = {"conv": tc, "ssm": ts}
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_of_hidden(cfg, params, x[:, 0])
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+def prefill(cfg: ModelConfig, params, batch, state, **_):
+    """Chunked-SSD prefill for the Mamba2 layers + full-sequence K/V
+    computation for the shared-attention call sites (§Perf iteration 2)."""
+    from repro.models.layers import apply_rope, rope_table
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    groups, k, leftover = _layout(cfg)
+
+    def group_body(x, gp):
+        def inner(x, p):
+            h = rmsnorm(p["ln"], x, cfg.norm_eps)
+            y, st = ssm_mod.ssm_forward(cfg, p["ssm"], h, return_state=True)
+            return x + y, st
+
+        x, states = jax.lax.scan(inner, x, gp)
+        sh = params["shared"]
+        h = rmsnorm(sh["ln_attn"], x, cfg.norm_eps)
+        kk, vv = attn._project_kv(cfg, sh["attn"], h)
+        cos, sin = rope_table(jnp.arange(S), cfg.hd, cfg.rope_theta)
+        k_r = apply_rope(kk, cos, sin)
+        x = x + attn.attn_train(cfg, sh["attn"], h)
+        h = rmsnorm(sh["ln_ffn"], x, cfg.norm_eps)
+        x = x + swiglu(sh["ffn"], h, cfg.act)
+        return x, (states, (k_r, vv))
+
+    x, (g_states, (k_all, v_all)) = jax.lax.scan(group_body, x,
+                                                 params["groups"])
+
+    new_state = dict(state)
+    new_state["ssm_groups"] = {
+        "conv": g_states["conv"].reshape((-1,) + g_states["conv"].shape[2:]),
+        "ssm": g_states["ssm"].reshape((-1,) + g_states["ssm"].shape[2:]),
+    }
+    Smax = state["cache"]["k"].shape[2]
+    pad = [(0, 0), (0, 0), (0, Smax - S), (0, 0), (0, 0)]
+    dt = state["cache"]["k"].dtype
+    new_state["cache"] = {"k": jnp.pad(k_all.astype(dt), pad),
+                          "v": jnp.pad(v_all.astype(dt), pad)}
+
+    if leftover:
+        def inner(x, p):
+            h = rmsnorm(p["ln"], x, cfg.norm_eps)
+            y, st = ssm_mod.ssm_forward(cfg, p["ssm"], h, return_state=True)
+            return x + y, st
+
+        x, t_states = jax.lax.scan(inner, x, params["tail"])
+        new_state["ssm_tail"] = {"conv": t_states["conv"],
+                                 "ssm": t_states["ssm"]}
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_of_hidden(cfg, params, x[:, -1])
+    new_state["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, new_state

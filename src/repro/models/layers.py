@@ -1,0 +1,122 @@
+"""Shared layers: norms, rotary embeddings, MLPs, embedding/unembedding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # (1 + scale) convention
+
+
+def rmsnorm(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (half-rotation convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: jax.Array, hd: int, theta: float):
+    """positions [S] -> (cos, sin) [S, hd/2] in f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x [..., S, H, hd]; cos/sin [S, hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    shape = (1,) * (x.ndim - 3) + (cos.shape[0], 1, half)
+    c = cos.reshape(shape).astype(x.dtype)
+    s = sin.reshape(shape).astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_swiglu(rng, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+
+
+def swiglu(p, x, act: str = "silu"):
+    g = _ACT[act](jnp.einsum("...d,df->...f", x, p["w_gate"]))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", g * u, p["w_down"])
+
+
+def init_mlp(rng, d: int, f: int, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w1": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp(p, x, act: str = "gelu"):
+    h = _ACT[act](jnp.einsum("...d,df->...f", x, p["w1"]) + p["b1"])
+    return jnp.einsum("...f,fd->...d", h, p["w2"]) + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(rng, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(rng, (vocab, d)) * d ** -0.5
+                      ).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p_embed, p_head, x, *, tie: bool):
+    w = p_embed["table"] if tie else p_head["w"]
+    return jnp.einsum("...d,vd->...v", x, w)
+
+
+def init_unembed(rng, vocab: int, d: int, dtype, *, tie: bool):
+    if tie:
+        return {}
+    return {"w": (jax.random.normal(rng, (vocab, d)) * d ** -0.5).astype(dtype)}

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN with the paper's two execution flows.
+
+Token→expert routing *is* MapReduce: map emits (expert_id, token_hidden),
+the shuffle groups by expert, the expert FFN is applied per group, and the
+combine-back is a per-token weighted-sum reduction of top-k expert outputs.
+
+Two combine-back modes, mirroring core/collector.py:
+* ``materialize`` (reduce flow): gather per-(token, k) expert outputs into an
+  explicit ``[N, k, E]`` buffer, then reduce over k.  O(N·k·E) intermediate.
+* ``combiner`` (combine flow): scatter-add ``gate · expert_out`` directly
+  into the token output holder (``.at[].add`` — the scatter-combine monoid).
+  No intermediate buffer; the reduction happens at emit time.
+
+Dispatch uses sort-based grouping with static capacity (GShard-style drops on
+overflow), which keeps every shape static for pjit.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import init_swiglu, swiglu
+
+
+def init_moe(rng, cfg: ModelConfig):
+    kr, ke = jax.random.split(rng)
+    X, E, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(ke, 3)
+    s_in, s_out = E ** -0.5, F ** -0.5
+    return {
+        "router": (jax.random.normal(kr, (E, X)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[0], (X, E, F)) * s_in).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[1], (X, E, F)) * s_in).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[2], (X, F, E)) * s_out).astype(cfg.dtype),
+    }
+
+
+def _expert_ffn(p, x, act):
+    """x [X, C, E] -> [X, C, E]; per-expert SwiGLU."""
+    from repro.models.layers import _ACT
+
+    g = _ACT[act](jnp.einsum("xce,xef->xcf", x, p["w_gate"]))
+    u = jnp.einsum("xce,xef->xcf", x, p["w_up"])
+    return jnp.einsum("xcf,xfe->xce", g * u, p["w_down"])
+
+
+def moe_ffn(
+    cfg: ModelConfig,
+    p,
+    x,  # [B, S, E]
+    *,
+    mode: str = "combiner",
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+    per_row: bool = True,
+):
+    """Returns (out [B,S,E], aux) where aux has the load-balancing loss.
+
+    per_row=True (default) runs the dispatch independently per BATCH ROW —
+    the distributed engine's map-side local combine applied to routing: each
+    data shard sorts/dispatches only its own tokens, so the argsort and the
+    dispatch gather/scatter never cross shards; the only cross-shard
+    collective left is the expert-parallel partial-sum all-reduce.  The
+    global-dispatch path (per_row=False) is kept as the baseline — its
+    global argsort is what made llama4-scout prefill collective-bound in the
+    baseline roofline (EXPERIMENTS.md §Perf iteration 1).
+    """
+    B, S, E = x.shape
+    if per_row and B > 1:
+        f = partial(_moe_tokens, cfg, p, mode=mode,
+                    capacity_factor=capacity_factor, act=act)
+        out, aux = jax.vmap(f)(x)
+        return out.reshape(B, S, E).astype(x.dtype), jax.tree.map(
+            lambda a: jnp.mean(a), aux)
+    out, aux = _moe_tokens(cfg, p, x.reshape(B * S, E), mode=mode,
+                           capacity_factor=capacity_factor, act=act)
+    return out.reshape(B, S, E).astype(x.dtype), aux
+
+
+def _moe_tokens(
+    cfg: ModelConfig,
+    p,
+    tokens,  # [N, E]
+    *,
+    mode: str = "combiner",
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+):
+    """Dispatch + expert FFN + combine-back over a flat token block."""
+    N, E = tokens.shape
+    X, K = cfg.num_experts, cfg.num_experts_per_tok
+
+    logits = jnp.einsum("ne,ex->nx", tokens.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)  # [N, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): X * Σ_x f_x · P_x
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (idx[..., None] == jnp.arange(X)).any(axis=1).astype(jnp.float32),
+        axis=0)
+    aux = {"load_balance_loss": X * jnp.sum(me * ce)}
+
+    # ---- sort-based dispatch with static capacity ----
+    C = int(max(1, -(-N * K // X) * capacity_factor))
+    flat_x = idx.reshape(-1)  # [N*K] expert id per assignment
+    order = jnp.argsort(flat_x)  # assignments grouped by expert
+    sorted_x = flat_x[order]
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jnp.bincount(flat_x, length=X)).astype(jnp.int32)[:-1]])
+    rank = jnp.arange(N * K, dtype=jnp.int32) - starts[sorted_x]
+    keep = rank < C
+    slot = jnp.where(keep, sorted_x * C + rank, X * C)  # overflow -> dropped
+
+    # slot -> source assignment (sentinel N*K = padding)
+    src = jnp.full((X * C,), N * K, jnp.int32).at[slot].set(order, mode="drop")
+    src_tok = jnp.minimum(src, N * K - 1) // K
+    src_valid = src < N * K
+
+    expert_in = jnp.where(
+        src_valid[:, None], tokens[src_tok], 0).reshape(X, C, E)
+    expert_out = _expert_ffn(p, expert_in, act).reshape(X * C, E)
+
+    gate_of_src = gates.reshape(-1)[jnp.minimum(src, N * K - 1)]
+    gate_of_src = jnp.where(src_valid, gate_of_src, 0.0)
+
+    if mode == "combiner":
+        # combine flow: scatter-add weighted outputs into the token holder
+        out = jnp.zeros((N, E), expert_out.dtype).at[src_tok].add(
+            expert_out * gate_of_src[:, None].astype(expert_out.dtype),
+            mode="drop")
+    elif mode == "materialize":
+        # reduce flow: materialize [N, K, E] per-assignment outputs, reduce
+        out_sorted = jnp.where(keep[:, None],
+                               expert_out[jnp.minimum(slot, X * C - 1)], 0)
+        assign_out = jnp.zeros((N * K, E), expert_out.dtype).at[order].set(
+            out_sorted)
+        per_k = assign_out.reshape(N, K, E)  # the materialized buffer
+        out = jnp.sum(per_k * gates[..., None].astype(per_k.dtype), axis=1)
+    else:
+        raise ValueError(mode)
+
+    return out, aux
+
+
+def moe_ffn_decode(cfg: ModelConfig, p, x, *, act: str = "silu"):
+    """Decode-time MoE for [B, 1, E].
+
+    Uses the same capacity dispatch as training: gathering per-token expert
+    weight slices (``w[idx]``) would materialize ``[B, K, E, F]`` — ~10 GiB
+    for llama4-scout at batch 128 — while dispatch moves only activations
+    and keeps the expert weights sharded in place.
+    """
+    out, _ = moe_ffn(cfg, p, x, mode="combiner", capacity_factor=2.0,
+                     act=act)
+    return out

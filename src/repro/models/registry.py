@@ -1,0 +1,91 @@
+"""Model registry: family -> implementation module, plus a uniform facade."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.models import hybrid, mamba, transformer, whisper
+from repro.models.common import ModelConfig
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba,
+    "hybrid": hybrid,
+    "audio": whisper,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Uniform facade over the family modules."""
+
+    cfg: ModelConfig
+    module: Any
+
+    def init_params(self, rng):
+        return self.module.init_params(self.cfg, rng)
+
+    def abstract_params(self, rng=None):
+        """Param avals without allocation (dry-run path)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda r: self.module.init_params(self.cfg, r),
+                              rng)
+
+    def forward(self, params, batch, **kw):
+        return self.module.forward(self.cfg, params, batch, **kw)
+
+    def logits_of_hidden(self, params, hidden):
+        return self.module.logits_of_hidden(self.cfg, params, hidden)
+
+    def unembed_matrix(self, params):
+        return self.module.unembed_matrix(self.cfg, params)
+
+    def init_decode_state(self, batch: int, max_len: int, *, kv_dtype=None):
+        return self.module.init_decode_state(self.cfg, batch, max_len,
+                                             kv_dtype=kv_dtype)
+
+    def decode_step(self, params, state, tokens):
+        return self.module.decode_step(self.cfg, params, state, tokens)
+
+    def prefill(self, params, batch, state, **kw):
+        return self.module.prefill(self.cfg, params, batch, state, **kw)
+
+    @property
+    def logit_softcap(self):
+        return self.cfg.logit_softcap
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY_MODULES:
+        raise KeyError(f"unknown family {cfg.family}")
+    return Model(cfg, _FAMILY_MODULES[cfg.family])
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: top-k of the expert pool)."""
+    total = param_count(params)
+    if not cfg.num_experts:
+        return total
+    expert = 0
+
+    def walk(p, in_moe=False):
+        nonlocal expert
+        if isinstance(p, dict):
+            for k, v in p.items():
+                if in_moe and k in ("w_gate", "w_up", "w_down"):
+                    expert += sum(x.size for x in jax.tree.leaves(v))
+                else:
+                    walk(v, in_moe or k == "moe")
+
+    walk(params)
+    frac = cfg.num_experts_per_tok / cfg.num_experts
+    return int(total - expert * (1 - frac))

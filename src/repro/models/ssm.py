@@ -1,0 +1,202 @@
+"""Mamba2 / SSD (state-space duality) blocks — attention-free sequence mixing.
+
+The SSD algorithm is itself an instance of the paper's combiner abstraction:
+the sequence is split into chunks, each chunk computes a local summary state,
+and the inter-chunk recurrence
+
+    state_c = decay_c * state_{c-1} + S_c
+
+is an **associative combine** ((d1,s1)∘(d2,s2) = (d1·d2, s2 + d2·s1)) —
+evaluated here with ``jax.lax.associative_scan``, the parallel fold of the
+same monoid family used by core/combiner.py.
+
+Single SSM group (n_groups=1); head layout follows Mamba2: d_inner = expand·E
+split into H heads of P dims, state size N per head.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    return d_in, H, P, N
+
+
+def init_ssm(rng, cfg: ModelConfig):
+    d_in, H, P, N = _dims(cfg)
+    E = cfg.d_model
+    conv_ch = d_in + 2 * N  # conv over (x, B, C)
+    ks = jax.random.split(rng, 4)
+    s = E ** -0.5
+    proj_out = 2 * d_in + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (E, proj_out)) * s).astype(cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) *
+                   cfg.ssm_conv ** -0.5).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_rmsnorm(d_in),
+        "out_proj": (jax.random.normal(ks[2], (d_in, E)) *
+                     d_in ** -0.5).astype(cfg.dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, H, P, N = _dims(cfg)
+    z, xc, B, C, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xc, B, C, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along seq. xbc [Bt,S,Ch]; w [W,Ch]."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(W):  # W is small (4); unrolled taps
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _chunk_len(chunk: int, S: int) -> int:
+    q = min(chunk, S)
+    while S % q:
+        q -= 1
+    return q
+
+
+def ssm_train(cfg: ModelConfig, p, x):
+    """Chunked SSD forward. x [Bt, S, E] -> [Bt, S, E]."""
+    y, _ = ssm_forward(cfg, p, x, return_state=False)
+    return y
+
+
+def ssm_forward(cfg: ModelConfig, p, x, *, return_state: bool = False):
+    """Chunked SSD forward; optionally also returns the decode-ready state.
+
+    The final SSM state falls out of the inter-chunk associative combine for
+    free (the inclusive scan's last element), which is what makes chunked
+    PREFILL possible: 1827 s of sequential token-scan on the 32k prefill
+    cell collapses to one training-shaped forward (§Perf iteration 2).
+    """
+    d_in, H, P, N = _dims(cfg)
+    Bt, S, E = x.shape
+    Q = _chunk_len(cfg.ssm_chunk, S)
+    nc = S // Q
+
+    proj = jnp.einsum("bse,eo->bso", x, p["in_proj"])
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+    xbc_raw = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xc, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    xh = xc.reshape(Bt, nc, Q, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(Bt, nc, Q, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bt, nc, Q, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = dt.reshape(Bt, nc, Q, H)
+    A = -jnp.exp(p["A_log"])  # [H], negative
+
+    dA = dt * A  # [b, c, q, h]
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative decay
+
+    # ---- intra-chunk (quadratic within Q) ----
+    Lmat = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # [b,c,i,j,h]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], Lmat, 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)  # single group
+    W = scores[..., None] * Lmat * dt[:, :, None, :, :]  # [b,c,i,j,h]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xh)
+
+    # ---- chunk summaries + inter-chunk associative combine ----
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # [b,c,q,h]
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                         Bm, dt * decay_to_end, xh)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # [b,c,h]
+
+    def combine(a, b):
+        d1, s1 = a
+        d2, s2 = b
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    dec, states = jax.lax.associative_scan(
+        combine, (chunk_decay, S_chunk), axis=1)
+    # exclusive: state entering chunk c
+    prev = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cm, jnp.exp(cs), prev)
+
+    y = (y_intra + y_inter).reshape(Bt, S, H, P)
+    y = y + p["D"][None, None, :, None] * xc.reshape(Bt, S, H, P).astype(jnp.float32)
+    y = y.reshape(Bt, S, d_in).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+    if not return_state:
+        return out, None
+    final_ssm = states[:, -1]  # [Bt, H, N, P] — last chunk's inclusive state
+    W = cfg.ssm_conv
+    padded = jnp.pad(xbc_raw, ((0, 0), (max(W - 1 - S, 0), 0), (0, 0)))
+    conv_state = padded[:, padded.shape[1] - (W - 1):, :].astype(cfg.dtype)
+    return out, {"conv": conv_state, "ssm": final_ssm}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, layers: int):
+    d_in, H, P, N = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "conv": jnp.zeros((layers, batch, cfg.ssm_conv - 1, conv_ch),
+                          cfg.dtype),
+        "ssm": jnp.zeros((layers, batch, H, N, P), jnp.float32),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, p, x, state):
+    """One token. x [Bt,1,E]; state {conv [Bt,W-1,Ch], ssm [Bt,H,N,P]}."""
+    d_in, H, P, N = _dims(cfg)
+    Bt = x.shape[0]
+
+    proj = jnp.einsum("bse,eo->bso", x, p["in_proj"])[:, 0]
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    xbc_new = jnp.concatenate([xc, Bm, Cm], axis=-1)  # [Bt, Ch]
+    window = jnp.concatenate([state["conv"], xbc_new[:, None]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xc, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xh = xc.reshape(Bt, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [Bt, H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # [Bt, H]
+
+    ssm = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm, dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, ssm) + p["D"][None, :, None] * xh
+    y = y.reshape(Bt, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bd,de->be", y, p["out_proj"])[:, None]
+    return out, {"conv": new_conv.astype(state["conv"].dtype), "ssm": ssm}

@@ -1,0 +1,246 @@
+"""Decoder-only transformer LM covering the dense, moe and vlm families.
+
+Variants driven by ModelConfig:
+  * GQA with optional QKV bias (qwen), attn/logit softcaps + local/global
+    alternation + post-norms (gemma2), RoPE everywhere.
+  * MoE FFN (llama4-scout 16e top-1, qwen3 128e top-8) with combiner or
+    materialize combine-back (models/moe.py).
+  * VLM (internvl2): the ViT frontend is a stub — precomputed patch
+    embeddings are concatenated in front of the text embeddings.
+
+Layers are stacked and scanned (``lax.scan`` over stacked params) so the HLO
+stays one-layer-sized for the multi-pod dry-run; remat is applied per layer.
+
+Training forward returns final *hidden* states (losses handle the unembed
+with the vocab-parallel logsumexp combiner — the [B,S,V] logits tensor is
+never materialized for the big-vocab archs).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import ModelConfig
+from repro.models.layers import (embed, init_embed, init_rmsnorm,
+                                 init_swiglu, init_unembed, rmsnorm, swiglu)
+
+
+def _layer_windows(cfg: ModelConfig):
+    """Per-layer sliding window sizes (0 = global). gemma2 alternates."""
+    if cfg.sliding_window and cfg.local_global_alternate:
+        return [cfg.sliding_window if i % 2 == 0 else 0
+                for i in range(cfg.num_layers)]
+    if cfg.sliding_window:
+        return [cfg.sliding_window] * cfg.num_layers
+    return [0] * cfg.num_layers
+
+
+def init_layer(rng, cfg: ModelConfig):
+    ka, kf = jax.random.split(rng)
+    p = {
+        "ln_attn": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_attn(ka, cfg),
+        "ln_ffn": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.num_experts:
+        p["moe"] = moe_mod.init_moe(kf, cfg)
+    else:
+        p["ffn"] = init_swiglu(kf, cfg.d_model, cfg.d_ff, cfg.dtype)
+    if cfg.post_norms:
+        p["ln_post_attn"] = init_rmsnorm(cfg.d_model)
+        p["ln_post_ffn"] = init_rmsnorm(cfg.d_model)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng):
+    ke, kl, ku = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(partial(init_layer, cfg=cfg))(layer_keys)
+    return {
+        "embed": init_embed(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "layers": layers,  # stacked [L, ...]
+        "ln_f": init_rmsnorm(cfg.d_model),
+        "head": init_unembed(ku, cfg.vocab_size, cfg.d_model, cfg.dtype,
+                             tie=cfg.tie_embeddings),
+    }
+
+
+def _block_train(cfg, p, x, window, *, moe_mode):
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    a = attn.attn_train(cfg, p["attn"], h, window=window)  # traced; 0=global
+    if cfg.post_norms:
+        a = rmsnorm(p["ln_post_attn"], a, cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        f, aux = moe_mod.moe_ffn(cfg, p["moe"], h, mode=moe_mode)
+    else:
+        f, aux = swiglu(p["ffn"], h, cfg.act), {"load_balance_loss": 0.0}
+    if cfg.post_norms:
+        f = rmsnorm(p["ln_post_ffn"], f, cfg.norm_eps)
+    return x + f, aux["load_balance_loss"]
+
+
+def forward(cfg: ModelConfig, params, batch, *, moe_mode: str = "combiner",
+            remat: bool = True):
+    """batch: {"tokens": [B,S]} (+ "patches": [B,Pn,E] for vlm).
+
+    Returns (hidden [B,S,E], aux dict).
+    """
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)  # stub frontend output
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    windows = jnp.asarray(_layer_windows(cfg), jnp.int32)
+
+    def body(x, layer):
+        p, window = layer
+        f = partial(_block_train, cfg, moe_mode=moe_mode)
+        if remat:
+            f = jax.checkpoint(f)
+        x, lb = f(p, x, window)
+        return x, lb
+
+    x, lbs = jax.lax.scan(body, x, (params["layers"], windows))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, {"load_balance_loss": jnp.mean(lbs)}
+
+
+def unembed_matrix(cfg: ModelConfig, params):
+    """[V, E] output projection (tied or untied)."""
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["head"]["w"])
+
+
+def logits_of_hidden(cfg: ModelConfig, params, hidden):
+    w = unembed_matrix(cfg, params)
+    logits = jnp.einsum("...e,ve->...v", hidden, w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                      kv_dtype=None):
+    return {
+        "cache": attn.init_kv_cache(cfg, batch, max_len, kv_dtype=kv_dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    """tokens [B] -> (logits [B,V], new state). One generated token.
+
+    The cache is READ-ONLY inside the layer scan (deferred-write attention);
+    all layers' new K/V are stacked and written as one token column after
+    the scan — the cache buffer aliases in place instead of double-buffering
+    through scan xs/ys (halves decode HBM residency).
+    """
+    pos = state["pos"]
+    x = embed(params["embed"], tokens[:, None])
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    windows = jnp.asarray(_layer_windows(cfg), jnp.int32)
+
+    def body(x, layer):
+        p, cache_l, window = layer
+        h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+        a, kv_new = attn.attn_decode(cfg, p["attn"], h, cache_l, pos,
+                                     window=window, deferred_write=True)
+        if cfg.post_norms:
+            a = rmsnorm(p["ln_post_attn"], a, cfg.norm_eps)
+        x = x + a
+        h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            f = moe_mod.moe_ffn_decode(cfg, p["moe"], h)
+        else:
+            f = swiglu(p["ffn"], h, cfg.act)
+        if cfg.post_norms:
+            f = rmsnorm(p["ln_post_ffn"], f, cfg.norm_eps)
+        return x + f, kv_new
+
+    x, (k_stack, v_stack) = jax.lax.scan(
+        body, x, (params["layers"], state["cache"], windows))
+    new_cache = attn.stacked_cache_write(state["cache"], k_stack, v_stack,
+                                         pos)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_of_hidden(cfg, params, x[:, 0])
+    return logits, {"cache": new_cache, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params, batch, state, *,
+            moe_mode: str = "combiner"):
+    """Teacher-forced prefill: run the train forward AND fill the KV cache.
+
+    Returns (last-position logits [B,V], state).  The per-layer prompt K/V
+    come out of the layer scan as stacked ys and BECOME the cache directly
+    (padded to the cache window) — the zero-initialized input cache is dead
+    and DCE'd, so only one cache-sized buffer ever lives.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    windows = jnp.asarray(_layer_windows(cfg), jnp.int32)
+    from repro.models.layers import apply_rope, rope_table
+
+    def body(x, layer):
+        p, window = layer
+        h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+        k, v = attn._project_kv(cfg, p["attn"], h)
+        cos, sin = rope_table(jnp.arange(S), cfg.hd, cfg.rope_theta)
+        k_r = apply_rope(k, cos, sin)
+        a = attn.attn_train(cfg, p["attn"], h, window=window)
+        if cfg.post_norms:
+            a = rmsnorm(p["ln_post_attn"], a, cfg.norm_eps)
+        x = x + a
+        h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            f, _ = moe_mod.moe_ffn(cfg, p["moe"], h, mode=moe_mode)
+        else:
+            f = swiglu(p["ffn"], h, cfg.act)
+        if cfg.post_norms:
+            f = rmsnorm(p["ln_post_ffn"], f, cfg.norm_eps)
+        return x + f, (k_r, v)
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, (params["layers"], windows))
+
+    Smax = state["cache"]["k"].shape[2]
+    pad = [(0, 0), (0, 0), (0, Smax - S), (0, 0), (0, 0)]
+    quant = state["cache"]["k"].dtype == jnp.int8
+    if quant:
+        kq, ks = attn._quantize(k_all)
+        vq, vs = attn._quantize(v_all)
+        new_cache = {
+            "k": jnp.pad(kq, pad), "v": jnp.pad(vq, pad),
+            "k_scale": jnp.pad(ks, pad[:-1] + [(0, 0)]),
+            "v_scale": jnp.pad(vs, pad[:-1] + [(0, 0)]),
+        }
+    else:
+        dt = state["cache"]["k"].dtype
+        new_cache = {"k": jnp.pad(k_all.astype(dt), pad),
+                     "v": jnp.pad(v_all.astype(dt), pad)}
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_of_hidden(cfg, params, x[:, -1])
+    return logits, {"cache": new_cache, "pos": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,190 @@
+"""Whisper-style encoder-decoder backbone — the `audio` family.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_frames, d_model].  Encoder: bidirectional
+MHA + GELU MLP with LayerNorm (pre-norm).  Decoder: causal self-attention +
+cross-attention over encoder output, learned positions, max ``dec_len``
+target positions.
+
+Shape mapping for the assigned decode cells (DESIGN.md): ``seq_len`` is the
+ENCODER frame count; decode steps attend to a self-KV of up to ``dec_len``
+and cross-attend to all ``seq_len`` encoder states.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig
+from repro.models.layers import (embed, init_embed, init_layernorm, init_mlp,
+                                 init_unembed, layernorm, mlp)
+
+
+def _sinusoid(S: int, d: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_enc_layer(rng, cfg: ModelConfig):
+    ka, kf = jax.random.split(rng)
+    return {
+        "ln_attn": init_layernorm(cfg.d_model),
+        "attn": attn.init_attn(ka, cfg),
+        "ln_ffn": init_layernorm(cfg.d_model),
+        "ffn": init_mlp(kf, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def init_dec_layer(rng, cfg: ModelConfig):
+    ka, kc, kf = jax.random.split(rng, 3)
+    return {
+        "ln_self": init_layernorm(cfg.d_model),
+        "self": attn.init_attn(ka, cfg),
+        "ln_cross": init_layernorm(cfg.d_model),
+        "cross": attn.init_attn(kc, cfg, cross=True),
+        "ln_ffn": init_layernorm(cfg.d_model),
+        "ffn": init_mlp(kf, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, rng):
+    ke, kenc, kdec, kp, ku = jax.random.split(rng, 5)
+    L_enc = cfg.enc_layers or cfg.num_layers
+    enc = jax.vmap(partial(init_enc_layer, cfg=cfg))(
+        jax.random.split(kenc, L_enc))
+    dec = jax.vmap(partial(init_dec_layer, cfg=cfg))(
+        jax.random.split(kdec, cfg.num_layers))
+    return {
+        "embed": init_embed(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "pos_dec": (jax.random.normal(kp, (cfg.dec_len, cfg.d_model)) *
+                    0.01).astype(cfg.dtype),
+        "enc_layers": enc,
+        "ln_enc_f": init_layernorm(cfg.d_model),
+        "dec_layers": dec,
+        "ln_dec_f": init_layernorm(cfg.d_model),
+        "head": init_unembed(ku, cfg.vocab_size, cfg.d_model, cfg.dtype,
+                             tie=cfg.tie_embeddings),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames, *, remat: bool = True):
+    """frames [B, S, E] (stub frontend output) -> [B, S, E]."""
+    x = frames.astype(cfg.dtype) + _sinusoid(
+        frames.shape[1], cfg.d_model).astype(cfg.dtype)
+
+    def body(x, p):
+        def block(p, x):
+            h = layernorm(p["ln_attn"], x, cfg.norm_eps)
+            x = x + attn.attn_train(cfg, p["attn"], h, causal=False,
+                                    rope=False)
+            h = layernorm(p["ln_ffn"], x, cfg.norm_eps)
+            return x + mlp(p["ffn"], h, "gelu")
+        f = jax.checkpoint(block) if remat else block
+        return f(p, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layernorm(params["ln_enc_f"], x, cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat: bool = True, **_):
+    """batch: {"frames": [B,Sf,E], "tokens": [B,St]} -> decoder hidden."""
+    enc_out = encode(cfg, params, batch["frames"], remat=remat)
+    tokens = batch["tokens"]
+    St = tokens.shape[1]
+    x = embed(params["embed"], tokens) + params["pos_dec"][:St]
+
+    def body(x, p):
+        def block(p, x):
+            h = layernorm(p["ln_self"], x, cfg.norm_eps)
+            x = x + attn.attn_train(cfg, p["self"], h, rope=False)
+            h = layernorm(p["ln_cross"], x, cfg.norm_eps)
+            x = x + attn.attn_train(cfg, p["cross"], h, kv_x=enc_out,
+                                    rope=False)
+            h = layernorm(p["ln_ffn"], x, cfg.norm_eps)
+            return x + mlp(p["ffn"], h, "gelu")
+        f = jax.checkpoint(block) if remat else block
+        return f(p, x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = layernorm(params["ln_dec_f"], x, cfg.norm_eps)
+    return x, {"load_balance_loss": jnp.float32(0.0)}
+
+
+def unembed_matrix(cfg, params):
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["head"]["w"])
+
+
+def logits_of_hidden(cfg, params, hidden):
+    return jnp.einsum("...e,ve->...v", hidden,
+                      unembed_matrix(cfg, params)).astype(jnp.float32)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, *,
+                      kv_dtype=None):
+    """Self-KV capped at dec_len; cross-KV [L,B,Sf,Kv,D] filled at prefill."""
+    L = cfg.num_layers
+    self_len = min(max_len, cfg.dec_len)
+    return {
+        "cache": attn.init_kv_cache(cfg, batch, self_len, kv_dtype=kv_dtype),
+        "cross_k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, cfg.hd),
+                             cfg.dtype),
+        "cross_v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads, cfg.hd),
+                             cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params, batch, state, **_):
+    """Encode frames, precompute per-layer cross KV, decode the BOS token."""
+    enc_out = encode(cfg, params, batch["frames"], remat=False)
+
+    def cross_kv(p):
+        return attn._project_kv(cfg, p["cross"], enc_out)
+
+    ck, cv = jax.vmap(cross_kv)(params["dec_layers"])
+    state = dict(state)
+    state["cross_k"], state["cross_v"] = ck, cv
+    bos = batch["tokens"][:, 0] if "tokens" in batch else jnp.zeros(
+        (enc_out.shape[0],), jnp.int32)
+    return decode_step(cfg, params, state, bos)
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    pos = state["pos"]
+    x = embed(params["embed"], tokens[:, None])
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"],
+                                         jnp.minimum(pos, cfg.dec_len - 1),
+                                         1, axis=0)
+
+    pos_c = jnp.minimum(pos, cfg.dec_len - 1)
+
+    def body(x, layer):
+        p, cache_l, ck, cv = layer
+        h = layernorm(p["ln_self"], x, cfg.norm_eps)
+        a, kv_new = attn.attn_decode(cfg, p["self"], h, cache_l, pos_c,
+                                     rope=False, deferred_write=True)
+        x = x + a
+        h = layernorm(p["ln_cross"], x, cfg.norm_eps)
+        c, _ = attn.attn_decode(cfg, p["cross"], h, cache_l, pos,
+                                cross_kv=(ck, cv), rope=False)
+        x = x + c
+        h = layernorm(p["ln_ffn"], x, cfg.norm_eps)
+        return x + mlp(p["ffn"], h, "gelu"), kv_new
+
+    x, (k_stack, v_stack) = jax.lax.scan(
+        body, x, (params["dec_layers"], state["cache"],
+                  state["cross_k"], state["cross_v"]))
+    x = layernorm(params["ln_dec_f"], x, cfg.norm_eps)
+    logits = logits_of_hidden(cfg, params, x[:, 0])
+    new_state = dict(state)
+    new_state["cache"] = attn.stacked_cache_write(state["cache"], k_stack,
+                                                  v_stack, pos_c)
+    new_state["pos"] = pos + 1
+    return logits, new_state

@@ -1,0 +1,341 @@
+"""Trip-count-aware cost accounting over SPMD-partitioned HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — useless for
+scan-over-layers/microbatches programs (underestimates by ~L×M).  This
+module re-derives flops / bytes-accessed / collective wire bytes from
+``compiled.as_text()``, multiplying every computation by its execution count
+(XLA records ``known_trip_count`` in each while op's backend_config).
+
+This is the container's "profiler": the perf loop reads these numbers plus
+the HLO itself (no real-TPU timings exist here).
+
+Accounting rules (mirrors HloCostAnalysis):
+  flops:  dot = 2·|out|·|contracted|; elementwise/transcendental = |out|;
+          reduce = |in|.  Counted inside fusion bodies (not at the call).
+  bytes:  per top-level op = |out| + Σ|operands| for the ops that move HBM
+          data on TPU (fusions, dots, reduces, data movement, collectives).
+          STANDALONE elementwise/convert/broadcast ops contribute flops but
+          no bytes: XLA:TPU fuses them into neighbors, while XLA:CPU (this
+          container's lowering) leaves many unfused — counting their bytes
+          would model CPU non-fusion, not the TPU target.
+  wire:   collective ops × ring factor ((2(n−1)/n for all-reduce, (n−1)/n
+          for gather/scatter/a2a) × execution count; n from replica_groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e\w*|s64|u64|s32|u32|s16|u16|"
+                       r"s8|u8|pred|c64|c128)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+(.+?)\s+"
+                    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+#: zero-cost bookkeeping opcodes
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "opt-barrier", "partition-id", "replica-id"}
+
+#: opcodes that move HBM bytes on TPU (everything else standalone is
+#: assumed fused into a neighbor by the TPU backend)
+_MOVES_BYTES = {"fusion", "dot", "convolution", "reduce", "reduce-window",
+                "copy", "concatenate", "slice", "pad", "sort",
+                "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+                "select-and-scatter", "custom-call", "cholesky",
+                "triangular-solve", "rng", "rng-bit-generator", "iota",
+                "broadcast", "transpose", "reshape", "reverse"} | {
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"}
+#: ops whose cost is |input| flops
+_REDUCE_LIKE = {"reduce", "reduce-window"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _dtype_bytes(dt: str) -> int:
+    if dt.startswith("f8"):
+        return 1
+    return _DTYPE_BYTES.get(dt, 4)
+
+
+def _shapes_of(type_str: str):
+    """[(bytes, elems)] for possibly-tuple type strings."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((n * _dtype_bytes(dt), n))
+    return out
+
+
+def _tensor_bytes(type_str: str) -> int:
+    return sum(b for b, _ in _shapes_of(type_str))
+
+
+def _tensor_elems(type_str: str) -> int:
+    return sum(e for _, e in _shapes_of(type_str))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attrs (raw)
+
+    def operands(self):
+        # operand refs appear before the first named attr; just grab %refs
+        return re.findall(r"%([\w\.\-]+)", self.rest)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{") and ("->" in line):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    cur = Computation(m.group(1), [],
+                                      line.startswith("ENTRY"))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3),
+                              m.group(4)))
+    return comps
+
+
+def _wire_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return float(n - 1) / n
+    return 1.0
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_ops: dict = dataclasses.field(default_factory=dict)
+    warnings: list = dataclasses.field(default_factory=list)
+    #: diagnostics for the perf loop: where the bytes/flops live
+    bytes_by_opcode: dict = dataclasses.field(default_factory=dict)
+    flops_by_opcode: dict = dataclasses.field(default_factory=dict)
+
+    def top_bytes(self, n: int = 8):
+        return sorted(self.bytes_by_opcode.items(), key=lambda kv: -kv[1])[:n]
+
+
+def analyze_text(text: str, *, default_group: int = 1) -> HloCost:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    cost = HloCost()
+
+    # execution multiplicity per computation + whether it is a fusion body
+    mult: dict[str, float] = defaultdict(float)
+    fused: set[str] = set()
+    applied: set[str] = set()  # to_apply bodies: skip entirely
+
+    # seed: walk from entry
+    stack = [(entry.name, 1.0)]
+    seen_edges = set()
+    while stack:
+        cname, m = stack.pop()
+        mult[cname] += m
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            rest = op.rest
+            if op.opcode == "fusion":
+                mm = _CALLS_RE.search(rest)
+                if mm:
+                    fused.add(mm.group(1))
+                    stack.append((mm.group(1), m))
+            elif op.opcode == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(rest)
+                if tm:
+                    trip = float(tm.group(1))
+                else:
+                    cost.warnings.append(f"while without trip count in {cname}")
+                bm = _BODY_RE.search(rest)
+                cm = _COND_RE.search(rest)
+                if bm:
+                    stack.append((bm.group(1), m * trip))
+                if cm:
+                    stack.append((cm.group(1), m * (trip + 1)))
+            elif op.opcode == "conditional":
+                bm = _BRANCHES_RE.search(rest)
+                if bm:
+                    for b in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                        stack.append((b, m))  # conservative: all branches
+            elif op.opcode in ("call", "async-start"):
+                mm = _CALLS_RE.search(rest) or _TO_APPLY_RE.search(rest)
+                if mm:
+                    stack.append((mm.group(1), m))
+            else:
+                mm = _TO_APPLY_RE.search(rest)
+                if mm:
+                    applied.add(mm.group(1))
+
+    # fusions whose root is a dynamic-update-slice run in place on TPU:
+    # charge only the update slice, not the whole buffer
+    inplace_update_bytes: dict[str, float] = {}
+    for cname, comp in comps.items():
+        shapes_local = {op.name: op.type_str for op in comp.ops}
+        for op in comp.ops:
+            if op.opcode == "dynamic-update-slice":
+                ops_ = op.operands()
+                upd = (_tensor_bytes(shapes_local.get(ops_[1], ""))
+                       if len(ops_) > 1 else 0)
+                inplace_update_bytes[cname] = (
+                    inplace_update_bytes.get(cname, 0.0) + upd)
+
+    # cost each computation once, scaled by multiplicity
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or cname in applied:
+            continue
+        in_fusion = cname in fused
+        shapes = {op.name: op.type_str for op in comp.ops}
+
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in _FREE:
+                continue
+            out_elems = _tensor_elems(op.type_str)
+            out_bytes = _tensor_bytes(op.type_str)
+            opnd_bytes = sum(_tensor_bytes(shapes.get(o, ""))
+                             for o in op.operands())
+
+            # ---- flops ----
+            if oc == "dot":
+                ops_ = op.operands()
+                lhs_shape = shapes.get(ops_[0], "") if ops_ else ""
+                cdims = _CONTRACT_RE.search(op.rest)
+                contracted = 1
+                if cdims and lhs_shape:
+                    parsed = _SHAPE_RE.search(lhs_shape)
+                    if parsed:
+                        dims = [int(d) for d in parsed.group(2).split(",") if d]
+                        for ci in cdims.group(1).split(","):
+                            if ci:
+                                contracted *= dims[int(ci)]
+                cost.flops += m * 2.0 * out_elems * contracted
+            elif oc == "convolution":
+                cost.flops += m * 2.0 * out_elems * 8  # coarse; warn once
+                if "conv" not in str(cost.warnings):
+                    cost.warnings.append("convolution flops are approximate")
+            elif oc in _REDUCE_LIKE:
+                ops_ = op.operands()
+                in_elems = _tensor_elems(shapes.get(ops_[0], "")) if ops_ else 0
+                cost.flops += m * in_elems
+            elif oc in ("fusion", "while", "conditional", "call",
+                        "custom-call", "scatter", "gather", "copy",
+                        "broadcast", "iota", "concatenate", "slice",
+                        "dynamic-slice", "dynamic-update-slice", "transpose",
+                        "reshape", "reverse", "pad", "sort", "convert",
+                        "reduce-precision", "select-and-scatter", "rng",
+                        "rng-bit-generator", "cholesky", "triangular-solve"):
+                pass  # bytes-only (or handled via sub-computation)
+            elif oc in _COLLECTIVES or oc.endswith("-start") or \
+                    oc.endswith("-done"):
+                pass
+            else:
+                cost.flops += m * out_elems  # elementwise / transcendental
+
+            # ---- bytes ----
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if (not in_fusion and oc not in ("while", "conditional", "call")
+                    and base in _MOVES_BYTES):
+                if oc == "dynamic-update-slice":
+                    # in-place on TPU: touches only the update slice
+                    ops_ = op.operands()
+                    upd = (_tensor_bytes(shapes.get(ops_[1], ""))
+                           if len(ops_) > 1 else 0)
+                    b = m * 2.0 * upd
+                elif oc in ("dynamic-slice", "gather"):
+                    b = m * 2.0 * out_bytes  # reads only what it emits
+                elif oc == "scatter":
+                    ops_ = op.operands()
+                    upd = (_tensor_bytes(shapes.get(ops_[2], ""))
+                           if len(ops_) > 2 else out_bytes)
+                    b = m * 3.0 * upd  # read-modify-write of touched rows
+                elif oc == "fusion":
+                    called = _CALLS_RE.search(op.rest)
+                    cn = called.group(1) if called else ""
+                    if cn in inplace_update_bytes:
+                        # in-place cache update: buffer aliased, only the
+                        # slice moves; drop the buffer-sized operand+output
+                        upd = inplace_update_bytes[cn]
+                        big = max((_tensor_bytes(shapes.get(o, ""))
+                                   for o in op.operands()), default=0)
+                        b = m * (out_bytes + opnd_bytes
+                                 - big - out_bytes + 2.0 * upd)
+                        b = max(b, 0.0)
+                    else:
+                        b = m * (out_bytes + opnd_bytes)
+                else:
+                    b = m * (out_bytes + opnd_bytes)
+                cost.bytes_accessed += b
+                cost.bytes_by_opcode[oc] = cost.bytes_by_opcode.get(oc, 0.0) + b
+
+            # ---- collectives ----
+            base_oc = oc[:-6] if oc.endswith("-start") else oc
+            if base_oc in _COLLECTIVES:
+                n = _group_size(op.rest, default_group)
+                wire = out_bytes * _wire_factor(base_oc, n)
+                cost.collective_bytes += m * wire
+                rec = cost.collective_ops.setdefault(
+                    base_oc, {"count": 0.0, "bytes": 0.0})
+                rec["count"] += m
+                rec["bytes"] += m * wire
+
+    return cost

@@ -1,0 +1,68 @@
+"""Serve-step factory: batched decode with sampling, pjit-ready."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    temperature: float = 0.0  # 0 => greedy
+    kv_dtype: str = "model"  # "model" | "int8"
+
+
+def kv_dtype_of(model: Model, sc: ServeConfig):
+    return jnp.int8 if sc.kv_dtype == "int8" else None
+
+
+def make_decode_step(model: Model, sc: ServeConfig = ServeConfig()):
+    """decode_step(params, state, tokens [B], rng) -> (next_tokens, state)."""
+
+    def step(params, state, tokens, rng):
+        logits, state = model.decode_step(params, state, tokens)
+        if sc.temperature > 0:
+            nxt = jax.random.categorical(rng, logits / sc.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), state
+
+    return step
+
+
+def make_prefill(model: Model, sc: ServeConfig = ServeConfig()):
+    def prefill(params, batch, state):
+        logits, state = model.prefill(params, batch, state)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+    return prefill
+
+
+def generate(model: Model, params, prompts, *, max_new: int = 16,
+             sc: ServeConfig = ServeConfig(), rng=None, extra_batch=None):
+    """Greedy/temperature generation loop (CPU example driver).
+
+    ``extra_batch`` carries modality-stub inputs (whisper "frames",
+    internvl "patches")."""
+    B, S = prompts.shape
+    extra_len = (extra_batch["patches"].shape[1]
+                 if extra_batch and "patches" in extra_batch else 0)
+    state = model.init_decode_state(B, S + max_new + extra_len,
+                                    kv_dtype=kv_dtype_of(model, sc))
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    pf = jax.jit(make_prefill(model, sc))
+    step = jax.jit(make_decode_step(model, sc))
+
+    nxt, state = pf(params, {"tokens": prompts, **(extra_batch or {})},
+                    state)
+    out = [nxt]
+    for i in range(max_new - 1):
+        rng, sub = jax.random.split(rng)
+        nxt, state = step(params, state, nxt, sub)
+        out.append(nxt)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,134 @@
+"""Gradient accumulation through the paper's combiner machinery.
+
+Microbatched training *is* MapReduce: map = per-microbatch gradient
+computation, reduce = mean over microbatches (a single key: the parameter
+pytree).  The semantic optimizer derives the (init=zeros, combine=add,
+finalize=/n) triple from the user-visible mean reducer — the same derivation
+path as the word-count benchmark — and the combine flow folds each
+microbatch's gradients into the holder inside ``lax.scan``:
+
+  * ``materialize`` (reduce flow): all M microbatch gradients are stacked
+    ``[M, *param]`` then reduced — O(M · params) live memory.
+  * ``combiner`` (combine flow): one holder, folded at emit time —
+    O(params) live memory.  This is the paper's transformation applied to
+    the training loop.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optimizer import derive_combiner
+
+#: the user-level reducer the optimizer analyzes (mean over microbatches).
+def _mean_reducer(key, values, count):
+    del key
+    return jnp.sum(values, axis=0) / count.astype(values.dtype)
+
+
+_CACHED_DERIVATION = None
+
+
+def derive_grad_combiner():
+    """Run the semantic optimizer on the mean reducer (provenance hook).
+
+    Must run OUTSIDE any jit trace (the validation probes execute real
+    computations); cached after the first call.
+    """
+    global _CACHED_DERIVATION
+    if _CACHED_DERIVATION is None:
+        import jax.core
+
+        d = derive_combiner(_mean_reducer,
+                            jax.ShapeDtypeStruct((), jnp.int32),
+                            jax.ShapeDtypeStruct((4,), jnp.float32))
+        assert d.combinable and d.strategy == "monoid", d.failure
+        _CACHED_DERIVATION = d
+    return _CACHED_DERIVATION
+
+
+def split_microbatches(batch, num: int):
+    def split(x):
+        assert x.shape[0] % num == 0, (x.shape, num)
+        return x.reshape((num, x.shape[0] // num) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def _constrain(tree, pspecs):
+    """Pin gradient/holder shardings to the parameter layout (ZeRO): without
+    this, GSPMD may leave the f32 accumulators replicated — tens of GiB/chip
+    on the large archs."""
+    if pspecs is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, pspecs)
+
+
+def accumulate_gradients(loss_fn, params, batch, *, num_microbatches: int = 1,
+                         mode: str = "combiner", spec=None, pspecs=None,
+                         mb_pspecs=None):
+    """Returns ((loss, aux), grads) with grads averaged over microbatches.
+
+    ``loss_fn(params, microbatch) -> (loss, aux)``.  ``spec`` is the derived
+    combiner (pass it from build time when calling under jit; the derivation
+    probes cannot run inside a trace).  ``pspecs``: parameter PartitionSpecs
+    used to pin gradient shardings.  ``mb_pspecs``: the GLOBAL batch pspecs —
+    microbatches keep the batch dim sharded (reshape would otherwise let
+    GSPMD replicate them).
+    """
+    if num_microbatches == 1:
+        (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return (l, a), _constrain(g, pspecs)
+
+    mbs = split_microbatches(batch, num_microbatches)
+    if mb_pspecs is not None:
+        from jax.sharding import PartitionSpec as P
+
+        mb_specs = jax.tree.map(lambda s: P(None, *s), mb_pspecs)
+        mbs = _constrain(mbs, mb_specs)
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+    spec = spec if spec is not None else derive_grad_combiner().spec
+    n = jnp.float32(num_microbatches)
+
+    if mode == "combiner":
+        # combine flow: fold gradients into the holder at emit time
+        def body(carry, mb):
+            holder, loss_acc, k = carry
+            (loss, aux), g = gfn(params, mb)
+            g32 = _constrain(
+                jax.tree.map(lambda x: x.astype(jnp.float32), g), pspecs)
+            holder = jax.tree.map(
+                lambda h, x: spec.combine((h,), spec.premap(x), k)[0],
+                holder, g32)
+            holder = _constrain(holder, pspecs)
+            return (holder, loss_acc + loss, k + 1), aux
+
+        holder0 = _constrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params), pspecs)
+        (holder, loss_sum, _), auxs = jax.lax.scan(
+            body, (holder0, jnp.float32(0.0), jnp.int32(0)), mbs)
+        grads = jax.tree.map(
+            lambda h: spec.finalize(0, (h,), n.astype(jnp.int32)), holder)
+        loss = loss_sum / n
+        aux = jax.tree.map(lambda a: jnp.mean(a, axis=0) if jnp.ndim(a) else a,
+                           auxs)
+        return (loss, aux), grads
+
+    if mode == "materialize":
+        # reduce flow: stack all microbatch grads, then reduce (baseline)
+        def one(mb):
+            (loss, aux), g = gfn(params, mb)
+            return loss, aux, _constrain(jax.tree.map(
+                lambda x: x.astype(jnp.float32), g), pspecs)
+
+        losses, auxs, stacked = jax.lax.map(one, mbs)  # [M, *param] buffers
+        grads = jax.tree.map(lambda g: jnp.mean(g, axis=0), stacked)
+        aux = jax.tree.map(lambda a: jnp.mean(a, axis=0) if jnp.ndim(a) else a,
+                           auxs)
+        return (jnp.mean(losses), aux), grads
+
+    raise ValueError(mode)

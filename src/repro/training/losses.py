@@ -1,0 +1,135 @@
+"""Losses — vocab-chunked cross-entropy via the logsumexp combiner.
+
+For the big-vocab archs (152k–256k), materializing ``[B, S, V]`` logits in
+f32 dominates training memory.  The combine-flow formulation streams vocab
+chunks through the (m, l) logsumexp monoid (core/combiner.py) and
+accumulates the label logit on the fly — the full logits tensor never
+exists.  ``mode="materialize"`` keeps the baseline (reduce-flow) xent for
+comparison; both are exposed to the benchmarks.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def xent_materialize(hidden, unembed, labels, *, mask=None, softcap=None):
+    """Baseline: full [B,S,V] logits then log_softmax."""
+    logits = jnp.einsum("bse,ve->bsv", hidden, unembed).astype(jnp.float32)
+    logits = _softcap(logits, softcap)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def xent_chunked(hidden, unembed, labels, *, mask=None, softcap=None,
+                 chunk: int = 8192):
+    """Combine flow: stream vocab chunks through the logsumexp monoid.
+
+    holder per token = (m, l, label_logit); combine is associative, so this
+    is exactly a CombinerSpec fold over the vocab axis (and under pjit the
+    vocab-sharded version merges partials with the same monoid).
+    """
+    V = unembed.shape[0]
+    chunk = min(chunk, V)
+    pad = (-V) % chunk
+    w = jnp.pad(unembed, ((0, pad), (0, 0))) if pad else unembed
+    n_chunks = (V + pad) // chunk
+    hf = hidden.astype(jnp.float32)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never keep [.., V]
+    def fold(carry, i):
+        m, l, lab = carry
+        wc = jax.lax.dynamic_slice_in_dim(w, i * chunk, chunk, axis=0)
+        logits = jnp.einsum("bse,ve->bsv", hf,
+                            wc.astype(jnp.float32))
+        logits = _softcap(logits, softcap)
+        base = i * chunk
+        vids = base + jnp.arange(chunk)
+        valid = vids < V
+        logits = jnp.where(valid[None, None, :], logits, -jnp.inf)
+        # (m, l) monoid update against the chunk
+        cm = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m, cm)
+        l = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        # label-logit extraction for labels inside this chunk
+        in_chunk = (labels >= base) & (labels < base + chunk)
+        off = jnp.clip(labels - base, 0, chunk - 1)
+        lab_here = jnp.take_along_axis(logits, off[..., None], axis=-1)[..., 0]
+        lab = jnp.where(in_chunk, lab_here, lab)
+        return (m_new, l, lab), None
+
+    B, S = labels.shape
+    init = (jnp.full((B, S), -jnp.inf, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    (m, l, lab), _ = jax.lax.scan(fold, init, jnp.arange(n_chunks))
+    nll = (m + jnp.log(l)) - lab  # logsumexp - label_logit
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def xent_sharded(hidden, unembed, labels, *, mask=None, softcap=None,
+                 logits_pspec=None):
+    """Vocab-parallel xent for the mesh: logits stay V-sharded over 'model'.
+
+    Each model shard owns a vocab slice; the stable-softmax statistics (max,
+    sumexp) and the label logit are reductions over V — GSPMD lowers them to
+    small [B,S] all-reduces, i.e. the logsumexp-monoid merge across shards.
+    The label logit uses a masked sum (no gather) to stay collective-friendly.
+    """
+    logits = jnp.einsum("bse,ve->bsv", hidden.astype(jnp.float32),
+                        unembed.astype(jnp.float32))
+    logits = _softcap(logits, softcap)
+    if logits_pspec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_pspec)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    V = logits.shape[-1]
+    onehot_mask = (jnp.arange(V)[None, None, :] == labels[..., None])
+    lab = jnp.sum(jnp.where(onehot_mask, logits, 0.0), axis=-1)
+    nll = lse - lab
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(model, params, batch, *, mode: str = "chunked",
+            moe_mode: str = "combiner", lb_coef: float = 0.01,
+            vocab_chunk: int = 8192, logits_pspec=None):
+    """Next-token LM loss for any registry model.
+
+    batch needs "tokens" (+family extras) and "labels"; labels < 0 masked.
+    """
+    hidden, aux = model.forward(params, batch, moe_mode=moe_mode)
+    labels = batch["labels"]
+    # align: predict labels[t] from hidden[t] (labels are pre-shifted by the
+    # data pipeline); for vlm, hidden includes the patch prefix.
+    if hidden.shape[1] != labels.shape[1]:
+        hidden = hidden[:, -labels.shape[1]:]
+    w = model.unembed_matrix(params)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_ = jnp.maximum(labels, 0)
+    if mode == "sharded":
+        loss = xent_sharded(hidden, w, labels_, mask=mask,
+                            softcap=model.logit_softcap,
+                            logits_pspec=logits_pspec)
+    elif mode == "chunked":
+        loss = xent_chunked(hidden, w, labels_, mask=mask,
+                            softcap=model.logit_softcap, chunk=vocab_chunk)
+    else:
+        loss = xent_materialize(hidden, w, labels_, mask=mask,
+                                softcap=model.logit_softcap)
+    total = loss + lb_coef * aux.get("load_balance_loss", 0.0)
+    return total, {"xent": loss, **aux}

@@ -1,0 +1,88 @@
+"""AdamW with fp32 master weights, built for ZeRO sharding.
+
+Optimizer state leaves inherit the parameter PartitionSpecs (sharding.py),
+so m/v/master are FSDP-sharded over the DP axes — ZeRO-1/3 semantics under
+pjit without bespoke collectives (GSPMD inserts the reduce-scatter/all-gather
+pattern).  Global-norm clipping included.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, lr_scale=1.0):
+    """Returns (new_params_in_model_dtype, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, mp):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        new_mp = mp - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                            + cfg.weight_decay * mp)
+        return m, v, new_mp
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_p = jax.tree.leaves(opt_state["master"])
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def model_params(opt_state, dtype):
+    """Cast the fp32 master copy to the model dtype for the forward pass."""
+    return jax.tree.map(lambda p: p.astype(dtype), opt_state["master"])
+
+
+def cosine_schedule(step, *, warmup: int = 100, total: int = 10000,
+                    min_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = jnp.minimum(t / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

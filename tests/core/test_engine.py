@@ -1,0 +1,116 @@
+"""Engine behaviour: both flows on the canonical apps, emitter semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MapReduce, MapReduceApp, make_app
+
+VOCAB = 50
+
+
+class WordCount(MapReduceApp):
+    key_space = VOCAB
+    value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    max_values_per_key = 256
+    emit_capacity = 8
+
+    def map(self, item, emit):
+        emit(item, jnp.ones_like(item))
+
+    def reduce(self, key, values, count):
+        return jnp.sum(values)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return rng.integers(0, VOCAB, size=(40, 8)).astype(np.int32)
+
+
+@pytest.mark.parametrize("flow", ["auto", "reduce"])
+def test_wordcount(tokens, flow):
+    want = np.bincount(tokens.reshape(-1), minlength=VOCAB)
+    mr = MapReduce(WordCount(), flow=flow)
+    res = mr.run(jnp.asarray(tokens))
+    np.testing.assert_array_equal(np.asarray(res.counts), want)
+    got = np.asarray(res.values)
+    np.testing.assert_array_equal(got[want > 0], want[want > 0])
+    assert mr.plan.flow == ("combine" if flow == "auto" else "reduce")
+
+
+@pytest.mark.parametrize("impl", ["scatter", "onehot", "segment"])
+def test_combine_impls_agree(tokens, impl):
+    mr = MapReduce(WordCount(), combine_impl=impl,
+                   use_kernels=(impl == "onehot"))
+    res = mr.run(jnp.asarray(tokens))
+    want = np.bincount(tokens.reshape(-1), minlength=VOCAB)
+    np.testing.assert_array_equal(np.asarray(res.values)[want > 0],
+                                  want[want > 0])
+
+
+def test_centroid_app():
+    rng = np.random.default_rng(1)
+    cids = rng.integers(0, 5, size=60).astype(np.int32)
+    pts = rng.standard_normal((60, 3)).astype(np.float32)
+
+    app = make_app(
+        lambda item, emit: emit(item[0].astype(jnp.int32), item[1]),
+        lambda k, v, c: jnp.sum(v, axis=0) / jnp.maximum(c, 1).astype(jnp.float32),
+        key_space=5,
+        value_aval=jax.ShapeDtypeStruct((3,), jnp.float32),
+        max_values_per_key=64,
+        emit_capacity=1,
+    )
+    for flow in ("auto", "reduce"):
+        res = MapReduce(app, flow=flow).run((jnp.asarray(cids), jnp.asarray(pts)))
+        got = np.asarray(res.values)
+        for k in range(5):
+            if (cids == k).any():
+                np.testing.assert_allclose(got[k], pts[cids == k].mean(0),
+                                           atol=1e-5)
+
+
+def test_masked_emission():
+    """emit(..., valid=mask) drops invalid pairs."""
+    app = make_app(
+        lambda item, emit: emit(item, jnp.ones_like(item), valid=item != 3),
+        lambda k, v, c: jnp.sum(v),
+        key_space=8,
+        value_aval=jax.ShapeDtypeStruct((), jnp.int32),
+        emit_capacity=8, max_values_per_key=64,
+    )
+    toks = jnp.asarray([[0, 3, 3, 1, 2, 3, 0, 1]], jnp.int32)
+    res = MapReduce(app).run(toks)
+    assert int(res.counts[3]) == 0
+    assert int(res.values[0]) == 2
+
+
+def test_emit_capacity_enforced():
+    app = make_app(
+        lambda item, emit: emit(item, jnp.ones_like(item)),
+        lambda k, v, c: jnp.sum(v),
+        key_space=8, value_aval=jax.ShapeDtypeStruct((), jnp.int32),
+        emit_capacity=4, max_values_per_key=64,
+    )
+    with pytest.raises(Exception, match="emit_capacity"):
+        MapReduce(app).run(jnp.zeros((2, 8), jnp.int32))
+
+
+def test_forced_combine_on_noncombinable_raises():
+    app = make_app(
+        lambda item, emit: emit(item, item.astype(jnp.float32)),
+        lambda k, v, c: jnp.sort(v)[0],
+        key_space=8, value_aval=jax.ShapeDtypeStruct((), jnp.float32),
+        emit_capacity=8, max_values_per_key=64,
+    )
+    with pytest.raises(ValueError, match="derivation failed"):
+        MapReduce(app, flow="combine")
+
+
+def test_result_to_dict(tokens):
+    res = MapReduce(WordCount()).run(jnp.asarray(tokens))
+    d = res.to_dict()
+    want = np.bincount(tokens.reshape(-1), minlength=VOCAB)
+    assert set(d) == set(np.nonzero(want)[0].tolist())

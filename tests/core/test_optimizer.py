@@ -1,0 +1,114 @@
+"""Semantic optimizer: derivation strategies on every reducer family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core import combiner as C
+from repro.core.optimizer import derive_combiner
+
+KEY = jax.ShapeDtypeStruct((), jnp.int32)
+F32 = jnp.float32
+
+
+def scalar(dt=F32):
+    return jax.ShapeDtypeStruct((), dt)
+
+
+def vec(n, dt=F32):
+    return jax.ShapeDtypeStruct((n,), dt)
+
+
+CASES = [
+    # (name, reduce_fn, value_aval, expected_strategy)
+    ("sum", lambda k, v, c: jnp.sum(v), scalar(), "monoid"),
+    ("mean", lambda k, v, c: jnp.sum(v) / c.astype(F32), scalar(), "monoid"),
+    ("max_affine", lambda k, v, c: jnp.max(v * 2.0 + 1.0), scalar(), "monoid"),
+    ("min", lambda k, v, c: jnp.min(v), scalar(), "monoid"),
+    ("prod", lambda k, v, c: jnp.prod(v), scalar(), "monoid"),
+    ("any", lambda k, v, c: jnp.any(v > 0), scalar(), "monoid"),
+    ("all", lambda k, v, c: jnp.all(v > 0), scalar(), "monoid"),
+    ("centroid", lambda k, v, c: jnp.sum(v, axis=0) / c.astype(F32),
+     vec(3), "monoid"),
+    ("variance",
+     lambda k, v, c: jnp.sum(v * v) / c.astype(F32)
+     - (jnp.sum(v) / c.astype(F32)) ** 2, scalar(), "monoid"),
+    ("range", lambda k, v, c: jnp.max(v) - jnp.min(v), scalar(), "monoid"),
+    ("weighted_mean",
+     lambda k, v, c: jnp.sum(v[:, 0] * v[:, 1])
+     / jnp.maximum(jnp.sum(v[:, 1]), 1e-6), vec(2), "monoid"),
+    ("sum_exp", lambda k, v, c: jnp.sum(jnp.exp(v)), scalar(), "monoid"),
+    ("first", lambda k, v, c: v[0], scalar(), "idiom_first"),
+    ("size_only", lambda k, v, c: c * 2, scalar(), "idiom_size"),
+    ("size_affine", lambda k, v, c: 3.0 * c.astype(F32) + 1.0, scalar(),
+     "idiom_size"),
+    ("scan_fold",
+     lambda k, v, c: lax.scan(lambda a, x: (a + x * x, None), 0.0, v)[0],
+     scalar(), "scan_fold"),
+]
+
+NEGATIVE = [
+    ("median", lambda k, v, c: jnp.sort(v)[c // 2], scalar()),
+    ("positional",
+     lambda k, v, c: jnp.sum(v * jnp.arange(v.shape[0], dtype=F32)),
+     scalar()),
+    ("last_by_count", lambda k, v, c: v[c - 1], scalar()),
+    # order-sensitive scan (EMA fold) must be caught by the numeric probes
+    ("order_sensitive_scan",
+     lambda k, v, c: lax.scan(lambda a, x: (a * 0.5 + x, None),
+                              0.0, v)[0], scalar()),
+]
+
+
+@pytest.mark.parametrize("name,fn,vaval,strategy",
+                         CASES, ids=[c[0] for c in CASES])
+def test_derivation_strategy(name, fn, vaval, strategy):
+    d = derive_combiner(fn, KEY, vaval)
+    assert d.combinable, f"{name}: {d.failure}"
+    assert d.strategy == strategy
+    assert d.validated
+
+
+@pytest.mark.parametrize("name,fn,vaval,_strategy", CASES[:12],
+                         ids=[c[0] for c in CASES[:12]])
+def test_fold_matches_reduce(name, fn, vaval, _strategy):
+    d = derive_combiner(fn, KEY, vaval)
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(
+        rng.standard_normal((13,) + tuple(vaval.shape)), F32)
+    got = C.finalize_fold(d.spec, vals, jnp.int32(0))
+    want = fn(jnp.int32(0), vals, jnp.int32(13))
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name,fn,vaval", NEGATIVE,
+                         ids=[c[0] for c in NEGATIVE])
+def test_rejections(name, fn, vaval):
+    d = derive_combiner(fn, KEY, vaval)
+    assert not d.combinable, f"{name} wrongly accepted ({d.strategy})"
+
+
+def test_detection_times_recorded():
+    d = derive_combiner(lambda k, v, c: jnp.sum(v), KEY, scalar())
+    # the paper reports 81us detect / 7.6ms transform per class; ours must
+    # at least be measured and sane
+    assert 0 < d.detect_s < 5.0
+    assert 0 <= d.transform_s < 5.0
+
+
+def test_trust_semantics_skips_probes():
+    d = derive_combiner(lambda k, v, c: jnp.sum(v), KEY, scalar(),
+                        trust_semantics=True)
+    assert d.combinable and not d.validated
+
+
+def test_reapply_probe():
+    d_sum = derive_combiner(lambda k, v, c: jnp.sum(v), KEY, scalar())
+    assert d_sum.reapply_ok  # sum of sums == sum
+    d_mean = derive_combiner(lambda k, v, c: jnp.sum(v) / c.astype(F32),
+                             KEY, scalar())
+    assert not d_mean.reapply_ok  # mean of unequal-split means != mean

@@ -1,0 +1,129 @@
+"""Hypothesis property tests for the system's invariants.
+
+Invariant 1 (the paper's correctness claim): for any combinable reducer, the
+combine flow computes exactly what the reduce flow computes, for any key
+distribution and emission order.
+
+Invariant 2: derived combiners satisfy fold-split equivalence on random
+splits (associativity of the fold across chunk boundaries).
+
+Invariant 3: the engine result is invariant under permutation of the input
+items (MapReduce's order-insensitivity contract).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MapReduce, MapReduceApp, combiner as C
+from repro.core.optimizer import derive_combiner
+
+F32 = jnp.float32
+
+
+def make_wc_app(key_space):
+    class App(MapReduceApp):
+        pass
+
+    app = App()
+    app.key_space = key_space
+    app.value_aval = jax.ShapeDtypeStruct((), F32)
+    app.max_values_per_key = 128
+    app.emit_capacity = 4
+    app.map = lambda item, emit: emit(item[0], item[1])
+    return app
+
+
+REDUCERS = {
+    "sum": lambda k, v, c: jnp.sum(v),
+    "max": lambda k, v, c: jnp.max(v),
+    "mean": lambda k, v, c: jnp.sum(v) / jnp.maximum(c, 1).astype(F32),
+    "sumsq": lambda k, v, c: jnp.sum(v * v),
+}
+PADS = {"sum": 0.0, "max": -np.inf, "mean": 0.0, "sumsq": 0.0}
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    reducer=st.sampled_from(sorted(REDUCERS)),
+    key_space=st.integers(2, 12),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_combine_flow_equals_reduce_flow(reducer, key_space, n, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, size=(n, 4)).astype(np.int32)
+    vals = rng.standard_normal((n, 4)).astype(np.float32)
+
+    app = make_wc_app(key_space)
+    app.reduce = REDUCERS[reducer]
+    app.pad_value = PADS[reducer]
+
+    items = (jnp.asarray(keys), jnp.asarray(vals))
+    r_comb = MapReduce(app, flow="auto").run(items)
+    r_red = MapReduce(app, flow="reduce").run(items)
+
+    cnt = np.asarray(r_red.counts)
+    mask = cnt > 0
+    np.testing.assert_array_equal(np.asarray(r_comb.counts), cnt)
+    np.testing.assert_allclose(
+        np.asarray(r_comb.values)[mask], np.asarray(r_red.values)[mask],
+        rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    reducer=st.sampled_from(sorted(REDUCERS)),
+    n=st.integers(2, 24),
+    split=st.integers(1, 23),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_fold_split_equivalence(reducer, n, split, seed):
+    split = min(split, n - 1)
+    d = derive_combiner(REDUCERS[reducer],
+                        jax.ShapeDtypeStruct((), jnp.int32),
+                        jax.ShapeDtypeStruct((), F32))
+    assert d.combinable
+    spec = d.spec
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.standard_normal(n), F32)
+
+    ha = C.fold_values(spec, vals[:split])
+    hb = C.fold_values(spec, vals[split:])
+    hm = spec.merge(ha, hb, jnp.int32(split), jnp.int32(n - split))
+    got = spec.finalize(0, hm, jnp.int32(n))
+    want = REDUCERS[reducer](0, vals, jnp.int32(n))
+    np.testing.assert_allclose(np.asarray(got, np.float64),
+                               np.asarray(want, np.float64),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(2, 30))
+def test_permutation_invariance(seed, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 6, size=(n, 4)).astype(np.int32)
+    vals = rng.standard_normal((n, 4)).astype(np.float32)
+    app = make_wc_app(6)
+    app.reduce = REDUCERS["sum"]
+    mr = MapReduce(app)
+
+    r1 = mr.run((jnp.asarray(keys), jnp.asarray(vals)))
+    perm = rng.permutation(n)
+    r2 = mr.run((jnp.asarray(keys[perm]), jnp.asarray(vals[perm])))
+    np.testing.assert_allclose(np.asarray(r1.values), np.asarray(r2.values),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_logsumexp_monoid_stability(seed):
+    """The (m,l) monoid must match direct logsumexp on extreme values."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.standard_normal(16) * 100, F32)  # extreme range
+    spec = C.logsumexp_spec()
+    got = C.finalize_fold(spec, vals)
+    want = jax.scipy.special.logsumexp(vals)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)

@@ -1,0 +1,150 @@
+"""Multi-device behaviour, via subprocesses with fake CPU devices (the main
+test process must keep seeing ONE device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "src"))
+
+
+def run_with_devices(code: str, n: int = 4, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_distributed_engine_flows():
+    """combine flow (all-reduce of O(K) tables) and reduce flow (all-to-all
+    of O(N) pairs) both match ground truth on a 4-device mesh, and lower to
+    exactly the expected collectives."""
+    out = run_with_devices("""
+        import numpy as np, re, jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduceApp, plan_execution
+        from repro.core import engine as eng
+
+        VOCAB = 48
+        class WC(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 256
+            emit_capacity = 8
+            def map(self, item, emit): emit(item, jnp.ones_like(item))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = jax.make_mesh((4,), ("data",))
+        rng = np.random.default_rng(0)
+        toks = jax.device_put(
+            jnp.asarray(rng.integers(0, VOCAB, (64, 8)).astype(np.int32)),
+            NamedSharding(mesh, P("data")))
+        want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
+        app = WC()
+        with mesh:
+            plan_c = plan_execution(app, flow="auto")
+            k, v, c = eng.run_distributed(app, plan_c, toks, mesh=mesh)
+            assert np.array_equal(np.asarray(v), want)
+            plan_r = plan_execution(app, flow="reduce")
+            k2, v2, c2 = eng.run_distributed(app, plan_r, toks, mesh=mesh)
+            got = np.zeros(VOCAB, np.int64)
+            for kk, vv, cc in zip(np.asarray(k2), np.asarray(v2), np.asarray(c2)):
+                if kk < VOCAB and cc > 0: got[kk] = vv
+            assert np.array_equal(got, want)
+            t_c = jax.jit(partial(eng.run_distributed, app, plan_c, mesh=mesh)).lower(toks).compile().as_text()
+            t_r = jax.jit(partial(eng.run_distributed, app, plan_r, mesh=mesh)).lower(toks).compile().as_text()
+        assert "all-reduce" in t_c and "all-to-all" not in t_c
+        assert "all-to-all" in t_r
+        print("DIST_OK")
+    """)
+    assert "DIST_OK" in out
+
+
+def test_elastic_reshard_8_to_4():
+    """Checkpoint on an (4,2) mesh, restore resharded onto (2,2)."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp, tempfile, os
+        from repro.checkpoint import ckpt
+        from repro.distributed import elastic, sharding as shd
+        from repro.configs import get_config
+        from repro.models.registry import get_model
+
+        cfg = get_config("llama3-8b").reduced()
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+
+        mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+        sh8 = shd.param_shardings(params, mesh8)
+        p8 = jax.tree.map(jax.device_put, params, sh8)
+        d = tempfile.mkdtemp()
+        ckpt.save(d, 5, p8)
+
+        # "lose half the fleet": remesh over 4 devices
+        mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+        import numpy as _np
+        from jax.sharding import Mesh
+        mesh4 = Mesh(_np.asarray(jax.devices()[:4]).reshape(2, 2),
+                     ("data", "model"))
+        restored, step = elastic.elastic_restore(d, params, mesh4)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("ELASTIC_OK")
+    """, n=8)
+    assert "ELASTIC_OK" in out
+
+
+def test_compressed_psum_wire_dtype():
+    """int8 compressed all-reduce moves int8 on the wire and approximates
+    the exact sum."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compression import compressed_psum
+
+        mesh = jax.make_mesh((4,), ("d",))
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 64)),
+                        jnp.float32)
+        f = shard_map(lambda a: compressed_psum(a[0], "d"), mesh=mesh,
+                      in_specs=(P("d"),), out_specs=P(), check_rep=False)
+        with mesh:
+            got = jax.jit(f)(x)
+            txt = jax.jit(f).lower(x).compile().as_text()
+        want = np.asarray(x).sum(0)
+        err = np.abs(np.asarray(got) - want).max()
+        scale = np.abs(np.asarray(x)).max(axis=-1).sum() / 127
+        assert err <= scale + 1e-5, (err, scale)
+        assert "s8[" in txt and "all-gather" in txt
+        print("COMPRESS_OK")
+    """)
+    assert "COMPRESS_OK" in out
+
+
+def test_dryrun_smallmesh_train_and_decode():
+    """The dry-run builder lowers + compiles on a small fake mesh (fast
+    proxy for the 512-chip run, exercised fully by launch/dryrun.py)."""
+    out = run_with_devices("""
+        import jax
+        from repro.launch.dryrun import build_cell
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(2, 2)
+        with mesh:
+            for arch, shape in [("llama3-8b", "train_4k"),
+                                ("qwen3-moe-30b-a3b", "decode_32k")]:
+                fn, avals = build_cell(arch, shape, mesh, microbatches=4)
+                c = fn.lower(*avals).compile()
+                assert c.memory_analysis().temp_size_in_bytes > 0
+                print("CELL_OK", arch, shape)
+    """, n=4, timeout=560)
+    assert out.count("CELL_OK") == 2

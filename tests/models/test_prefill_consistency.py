@@ -1,0 +1,44 @@
+"""Chunked prefill must agree with token-by-token decode (the SSD prefill
+state comes out of the inter-chunk associative combine — §Perf iteration 2).
+MoE archs get a looser tolerance: capacity-based dispatch drops differ
+between whole-sequence and per-token routing (inherent to GShard-style MoE).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.registry import get_model
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch,tol", [
+    ("mamba2-2.7b", 2e-2),
+    ("zamba2-1.2b", 2e-2),
+    ("llama3-8b", 2e-2),
+    ("qwen3-moe-30b-a3b", 0.15),
+])
+def test_prefill_matches_stepwise(arch, tol):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init_params(RNG)
+    B, S = 2, 12
+    prompt = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+
+    st = model.init_decode_state(B, 32)
+    lgA, stA = model.prefill(params, {"tokens": prompt}, st)
+    tok = jnp.argmax(lgA, -1).astype(jnp.int32)
+    lgA2, _ = model.decode_step(params, stA, tok)
+
+    stB = model.init_decode_state(B, 32)
+    step = jax.jit(model.decode_step)
+    for t in range(S):
+        lgB, stB = step(params, stB, prompt[:, t])
+    lgB2, _ = step(params, stB, tok)
+
+    err1 = float(jnp.max(jnp.abs(jax.nn.softmax(lgA) - jax.nn.softmax(lgB))))
+    err2 = float(jnp.max(jnp.abs(jax.nn.softmax(lgA2) - jax.nn.softmax(lgB2))))
+    assert err1 < tol and err2 < tol, (arch, err1, err2)
