@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import bench_scale, row, time_fn
 from repro.core import MapReduce, MapReduceApp
 
 
@@ -33,8 +33,10 @@ def make_app(key_space, lmax):
 def main():
     rng = np.random.default_rng(0)
     print("# paper Fig 10: speedup surface over (keys × pairs) pressure")
+    scale = bench_scale()
+    pair_grid = sorted({1 << 10, max(1 << 10, int((1 << 14) * scale))})
     for K in (4, 256, 4096):
-        for n_pairs in (1 << 10, 1 << 14):
+        for n_pairs in pair_grid:
             toks = rng.integers(0, K, size=(n_pairs // 8, 8)).astype(np.int32)
             lmax = int(np.bincount(toks.reshape(-1), minlength=K).max())
             lmax = max(8, 1 << int(np.ceil(np.log2(lmax + 1))))

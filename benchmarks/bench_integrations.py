@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import bench_scale, row, time_fn
 from repro.configs import get_config
 from repro.models.registry import get_model
 from repro.training import losses
@@ -31,7 +31,7 @@ def bench_grad_accum():
     for mode in ("combiner", "materialize"):
         f = jax.jit(lambda p, b: accumulate_gradients(
             loss_fn, p, b, num_microbatches=8, mode=mode, spec=spec)[1])
-        t = time_fn(f, params, batch, iters=5)
+        t = time_fn(f, params, batch, iters=2 if bench_scale() < 1 else 5)
         # live-memory of the accumulation path
         c = jax.jit(lambda p, b: accumulate_gradients(
             loss_fn, p, b, num_microbatches=8, mode=mode,
@@ -64,7 +64,8 @@ def bench_decode_attention():
     """Combiner-fold decode attention vs materialized softmax, long KV."""
     from repro.kernels import ops, ref
 
-    B, H, Hkv, D, S = 1, 8, 2, 64, 8192
+    B, H, Hkv, D, S = 1, 8, 2, 64, (1024 if bench_scale() < 1
+                                    else 8192)
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)) * 0.2, jnp.float32)

@@ -3,9 +3,11 @@
 The JVM figures show GC time collapsing when the optimizer removes the
 per-key value lists.  The TPU-native analogue: bytes accessed + peak buffer
 residency of the collector path, derived from the compiled HLO of each flow
-(same workload, same map).  Also reports the analytic intermediate sizes:
-reduce flow materializes O(N) pairs + an O(K·Lmax) window gather; combine
-flow holds O(K) holders.
+(same workload, same map), now including the streaming fused flow whose peak
+intermediate state is O(K + chunk_pairs) regardless of the pair count.  Each
+measured row is paired with the first-order analytic model from
+``roofline.analysis`` (``model=`` column) so drift between the model and the
+compiled artifact is visible in the trajectory.
 """
 
 from __future__ import annotations
@@ -13,9 +15,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import apps
-from benchmarks.common import row
+from benchmarks.common import bench_scale, row
 from repro.core import MapReduce
-from repro.roofline import hlo_parser
+from repro.roofline import analysis, hlo_parser
 
 
 def flow_footprint(mr: MapReduce, items):
@@ -28,22 +30,45 @@ def flow_footprint(mr: MapReduce, items):
     return {"bytes_accessed": cost.bytes_accessed, "peak_bytes": float(peak)}
 
 
+def _n_pairs(app, items):
+    import jax
+
+    return jax.tree.leaves(items)[0].shape[0] * app.emit_capacity
+
+
 def main():
     rng = np.random.default_rng(0)
+    scale = bench_scale()
     print("# paper Figs 8/9: collector memory pressure per flow "
           "(GC-time analogue: bytes through the memory system)")
     for name in ("WC", "HG", "SM"):
-        app, items = apps.build(name, rng)
-        f_r = flow_footprint(MapReduce(app, flow="reduce"), items)
-        f_c = flow_footprint(MapReduce(app, flow="auto"), items)
-        print(row(f"memory_{name}_reduce_peak_bytes", f_r["peak_bytes"]))
-        print(row(f"memory_{name}_combine_peak_bytes", f_c["peak_bytes"],
-                  f"peak_ratio={f_r['peak_bytes']/max(f_c['peak_bytes'],1):.1f}x"))
-        print(row(f"memory_{name}_reduce_bytes_accessed",
-                  f_r["bytes_accessed"]))
-        print(row(f"memory_{name}_combine_bytes_accessed",
-                  f_c["bytes_accessed"],
-                  f"traffic_ratio={f_r['bytes_accessed']/max(f_c['bytes_accessed'],1):.1f}x"))
+        app, items = apps.build(name, rng, scale=scale)
+        n_pairs = _n_pairs(app, items)
+        footprints = {}
+        for flow in ("reduce", "combine", "stream"):
+            footprints[flow] = flow_footprint(MapReduce(app, flow=flow),
+                                              items)
+        value_bytes = int(np.dtype(app.value_aval.dtype).itemsize *
+                          max(1, int(np.prod(app.value_aval.shape))))
+        for flow in ("reduce", "combine", "stream"):
+            f = footprints[flow]
+            model_b = analysis.mapreduce_flow_bytes(
+                flow, n_pairs=n_pairs, key_space=app.key_space,
+                value_bytes=value_bytes,
+                max_values_per_key=app.max_values_per_key)
+            model_p = analysis.mapreduce_flow_peak_bytes(
+                flow, n_pairs=n_pairs, key_space=app.key_space,
+                value_bytes=value_bytes,
+                max_values_per_key=app.max_values_per_key)
+            print(row(f"memory_{name}_{flow}_peak_bytes", f["peak_bytes"],
+                      f"model={model_p:.0f}"))
+            print(row(f"memory_{name}_{flow}_bytes_accessed",
+                      f["bytes_accessed"], f"model={model_b:.0f}"))
+        f_r, f_s = footprints["reduce"], footprints["stream"]
+        print(row(f"memory_{name}_stream_vs_reduce", 0.0,
+                  f"traffic_ratio="
+                  f"{f_r['bytes_accessed']/max(f_s['bytes_accessed'],1):.1f}x "
+                  f"peak_ratio={f_r['peak_bytes']/max(f_s['peak_bytes'],1):.1f}x"))
 
 
 if __name__ == "__main__":

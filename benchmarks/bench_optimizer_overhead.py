@@ -7,7 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import apps
-from benchmarks.common import row
+from benchmarks.common import bench_scale, row
 from repro.core.plan import plan_execution
 
 
@@ -17,7 +17,7 @@ def main():
           "(paper: 81us detect / 7.6ms transform)")
     det, tra, val = [], [], []
     for name in apps.ALL:
-        app, _ = apps.build(name, rng)
+        app, _ = apps.build(name, rng, scale=bench_scale())
         plan = plan_execution(app)
         d = plan.derivation
         det.append(d.detect_s)

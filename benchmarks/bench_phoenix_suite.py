@@ -11,12 +11,12 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import apps
-from benchmarks.common import row, time_fn
+from benchmarks.common import bench_scale, row, time_fn
 from repro.core import MapReduce
 
 
 def run_one(name: str, rng, iters: int = 10):
-    app, items = apps.build(name, rng)
+    app, items = apps.build(name, rng, scale=bench_scale())
     mr_c = MapReduce(app, flow="auto")
     assert mr_c.plan.optimized, f"{name}: optimizer failed: {mr_c.plan.reason}"
     mr_r = MapReduce(app, flow="reduce")
@@ -56,8 +56,9 @@ def wordcount_end_to_end(rng, iters: int = 10):
 
     from repro.core import MapReduceApp
 
+    n_tok = max(4096, int((1 << 16) * bench_scale()) // 16 * 16)
     toks, vocab = __import__("repro.data.datasets", fromlist=["d"]).\
-        wordcount_data(rng, tokens=1 << 16, vocab=4096)
+        wordcount_data(rng, tokens=n_tok, vocab=4096)
 
     class WCWork(MapReduceApp):
         key_space = vocab
@@ -84,8 +85,10 @@ def wordcount_end_to_end(rng, iters: int = 10):
     return t_r, t_c
 
 
-def main(iters: int = 10):
+def main(iters: int | None = None):
     rng = np.random.default_rng(0)
+    if iters is None:
+        iters = 3 if bench_scale() < 1 else 10
     results = [run_one(n, rng, iters) for n in apps.ALL]
     print("# paper Fig 7: per-benchmark speedup of the optimized "
           "(combine) flow over the baseline (reduce) flow")

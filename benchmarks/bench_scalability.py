@@ -16,7 +16,7 @@ import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import row
+from benchmarks.common import bench_scale, row
 
 _CODE = """
 import os
@@ -49,7 +49,8 @@ with mesh:
         plan = plan_execution(app, flow=flow)
         c = jax.jit(partial(eng.run_distributed, app, plan, mesh=mesh)).lower(toks).compile()
         hc = hlo_parser.analyze_text(c.as_text(), default_group=S)
-        out[plan.flow] = hc.collective_bytes
+        out["optimized" if plan.optimized else "reduce"] = hc.collective_bytes
+        out.setdefault("optimized_flow", plan.flow if plan.optimized else None)
 print("RESULT " + json.dumps(out))
 """
 
@@ -58,8 +59,11 @@ SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main():
     print("# paper Fig 5 analogue: per-shard collective bytes vs shard "
-          "count (combine flow = O(K) tables, reduce flow = O(N) pairs)")
-    for S in (2, 4, 8):
+          "count (stream/combine flow = O(K) tables, reduce flow = "
+          "O(N) pairs)")
+    shard_counts = (2, 4) if bench_scale() < 1 else (2, 4, 8)
+    failed = []
+    for S in shard_counts:
         env = dict(os.environ)
         env.pop("XLA_FLAGS", None)
         env["PYTHONPATH"] = SRC
@@ -70,11 +74,15 @@ def main():
         if not line:
             print(row(f"scalability_S{S}", 0.0,
                       f"FAILED: {r.stderr[-200:]}"))
+            failed.append(S)
             continue
         data = json.loads(line[0][len("RESULT "):])
-        print(row(f"scalability_S{S}_combine_wire_bytes", data["combine"]))
+        flow = data.get("optimized_flow") or "combine"
+        print(row(f"scalability_S{S}_{flow}_wire_bytes", data["optimized"]))
         print(row(f"scalability_S{S}_reduce_wire_bytes", data["reduce"],
-                  f"ratio={data['reduce']/max(data['combine'],1):.1f}x"))
+                  f"ratio={data['reduce']/max(data['optimized'],1):.1f}x"))
+    if failed:  # surface subprocess failures to run.py's health gate
+        raise RuntimeError(f"scalability subprocesses failed: S={failed}")
 
 
 if __name__ == "__main__":

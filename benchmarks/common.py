@@ -2,10 +2,24 @@
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
+
+
+def bench_scale(default: float = 1.0) -> float:
+    """Workload scale factor, settable via REPRO_BENCH_SCALE.
+
+    ``benchmarks/run.py --preset ci`` sets a tiny scale so the CI smoke job
+    exercises every benchmark path in seconds; 1.0 is the full-size run the
+    perf trajectory is recorded at.
+    """
+    try:
+        return float(os.environ.get("REPRO_BENCH_SCALE", default))
+    except ValueError:
+        return default
 
 
 def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:

@@ -100,10 +100,18 @@ class MapReduce:
     """``MapReduce(app).run(items)`` — the framework entry point.
 
     flow:
-      * "auto"    derive a combiner; combine flow if possible, else reduce
+      * "auto"    derive a combiner; when possible, run the optimizer's
+                  recommended flow (the streaming fused flow), else reduce
                   (exactly the paper's optimizer behaviour)
+      * "stream"  force the streaming map+combine fusion (error if not
+                  derivable): map chunks fold straight into holder tables,
+                  the full pair buffer is never materialized
+      * "combine" force the legacy combine flow (materialize pairs, fold
+                  once); kept for A/B benchmarks
       * "reduce"  force the baseline flow (paper's un-optimized MR4J)
-      * "combine" force the combine flow (error if not derivable)
+
+    stream_chunk_pairs bounds the emitted pairs materialized per streaming
+    chunk (peak intermediate state ≈ key_space + stream_chunk_pairs).
     """
 
     def __init__(
@@ -114,6 +122,7 @@ class MapReduce:
         trust_semantics: bool = False,
         combine_impl: str = "auto",
         use_kernels: bool = False,
+        stream_chunk_pairs: int = eng.DEFAULT_CHUNK_PAIRS,
         donate: bool = False,
     ):
         if app.key_space <= 0:
@@ -122,11 +131,13 @@ class MapReduce:
         self.flow = flow
         self.combine_impl = combine_impl
         self.use_kernels = use_kernels
+        self.stream_chunk_pairs = stream_chunk_pairs
         self.plan = plan_execution(app, flow=flow,
                                    trust_semantics=trust_semantics)
         self._run = jax.jit(partial(eng.run_local, app, self.plan,
                                     combine_impl=combine_impl,
-                                    use_kernels=use_kernels))
+                                    use_kernels=use_kernels,
+                                    chunk_pairs=stream_chunk_pairs))
 
     def run(self, items) -> MapReduceResult:
         keys, values, counts = self._run(items)
@@ -134,6 +145,4 @@ class MapReduce:
 
     # Lowering hooks for benchmarks / dry-run analysis.
     def lower(self, items):
-        return jax.jit(partial(eng.run_local, self.app, self.plan,
-                               combine_impl=self.combine_impl,
-                               use_kernels=self.use_kernels)).lower(items)
+        return self._run.lower(items)

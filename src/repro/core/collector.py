@@ -154,19 +154,29 @@ def combine_onehot(
     assert spec.mxu_lowerable
     K = stream.key_space
     mapped = _premap_stream(spec, stream.values)
-    counts_chan = stream.valid.astype(jnp.float32)
 
     def default_onehot(keys, mat, k):
         oh = jax.nn.one_hot(keys, k, dtype=mat.dtype)  # sentinel -> all-zero
         return jnp.einsum("nk,nd->kd", oh, mat)
 
-    f = onehot_fn or default_onehot
     tables = []
     for chan in mapped:
-        flat = chan.reshape(chan.shape[0], -1).astype(jnp.float32)
-        tab = f(stream.keys, flat, K)
+        if onehot_fn is not None:  # Pallas kernel contract is f32
+            acc_dt = jnp.float32
+        else:  # integer channels contract exactly in their own dtype
+            acc_dt = (chan.dtype if jnp.issubdtype(chan.dtype, jnp.integer)
+                      else jnp.float32)
+        flat = chan.reshape(chan.shape[0], -1).astype(acc_dt)
+        tab = (onehot_fn or default_onehot)(stream.keys, flat, K)
         tables.append(tab.reshape((K,) + chan.shape[1:]).astype(chan.dtype))
-    counts = f(stream.keys, counts_chan[:, None], K)[:, 0].astype(jnp.int32)
+    if onehot_fn is not None:
+        counts_chan = stream.valid.astype(jnp.float32)
+        counts = onehot_fn(stream.keys, counts_chan[:, None],
+                           K)[:, 0].astype(jnp.int32)
+    else:
+        counts = default_onehot(stream.keys,
+                                stream.valid.astype(jnp.int32)[:, None],
+                                K)[:, 0]
     return tuple(tables), counts
 
 
@@ -185,33 +195,24 @@ def combine_first(spec: C.CombinerSpec, stream: PairStream) -> tuple[Any, jax.Ar
     return tables, counts
 
 
-def combine_segment(spec: C.CombinerSpec, stream: PairStream) -> tuple[Any, jax.Array]:
-    """Generic streaming combiner: sort by key, sequential fold per segment.
+def _sequential_fold(spec: C.CombinerSpec, tables, counts, keys, values
+                     ) -> tuple[Any, jax.Array]:
+    """Fold a pair stream into carried holder tables, one pair at a time.
 
-    Correctness fallback for non-scatter combiners (scan folds, coupled
-    holders).  One ``lax.scan`` over the sorted stream; holder written back
-    on segment close.
+    One ``lax.scan`` over the pairs; each step gathers the key's holder row,
+    applies ``spec.combine`` and writes the row back (a dynamic-update-slice,
+    in-place on TPU).  Correctness fallback for combiners with coupled
+    holders (scan folds, logsumexp) that have no dense/monoid lowering.
     """
-    K = stream.key_space
-    n = stream.keys.shape[0]
-    order = jnp.argsort(stream.keys)
-    skeys = stream.keys[order]
-    svals = jax.tree.map(lambda v: v[order], stream.values)
-
-    vaval = jax.tree.map(
-        lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), svals)
-    h0 = spec.init(vaval)
-    tables0 = jax.tree.map(
-        lambda l: jnp.tile(l[None], (K,) + (1,) * jnp.ndim(l)), h0)
-    counts0 = jnp.zeros((K,), jnp.int32)
+    K = counts.shape[0]
 
     def step(carry, xs):
         tables, counts = carry
         k, v = xs
         valid = k < K
         ks = jnp.minimum(k, K - 1)
-        # holders live in the table: gather the key's holder, fold, scatter
-        # back (sequential over the sorted stream, so no conflicts).
+        # holders live in the table: gather the key's holder, fold, write
+        # back (sequential over the stream, so no conflicts).
         h = jax.tree.map(lambda t: t[ks], tables)
         nk = counts[ks]
         h2 = spec.combine(h, spec.premap(v), nk)
@@ -221,8 +222,25 @@ def combine_segment(spec: C.CombinerSpec, stream: PairStream) -> tuple[Any, jax.
         counts = counts.at[ks].add(valid.astype(jnp.int32))
         return (tables, counts), None
 
-    (tables, counts), _ = lax.scan(step, (tables0, counts0), (skeys, svals))
+    (tables, counts), _ = lax.scan(step, (tables, counts), (keys, values))
     return tables, counts
+
+
+def combine_segment(spec: C.CombinerSpec, stream: PairStream) -> tuple[Any, jax.Array]:
+    """Generic streaming combiner: sort by key, sequential fold per segment.
+
+    Correctness fallback for non-scatter combiners (scan folds, coupled
+    holders).  One ``lax.scan`` over the sorted stream; holder written back
+    on segment close.
+    """
+    order = jnp.argsort(stream.keys)
+    skeys = stream.keys[order]
+    svals = jax.tree.map(lambda v: v[order], stream.values)
+
+    vaval = jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), svals)
+    tables0, counts0 = spec.init_tables(stream.key_space, vaval)
+    return _sequential_fold(spec, tables0, counts0, skeys, svals)
 
 
 def finalize_tables(spec: C.CombinerSpec, tables, counts, key_space: int) -> Grouped:
@@ -245,8 +263,10 @@ def combine_flow(
             impl = "scatter"  # counts only; scatter path handles it
         elif spec.strategy == C.STRATEGY_FIRST:
             impl = "first"
-        elif (spec.mxu_lowerable and stream.key_space <= onehot_max_keys
-              and onehot_fn is not None):
+        elif spec.mxu_lowerable and stream.key_space <= onehot_max_keys:
+            # MXU-native for additive monoids; without a Pallas kernel the
+            # jnp einsum default applies — still preferable to the scatter
+            # path, which XLA:CPU serializes into a per-pair while loop.
             impl = "onehot"
         elif spec.scatter_lowerable:
             impl = "scatter"
@@ -269,3 +289,242 @@ def combine_flow(
     else:
         raise ValueError(f"unknown combine impl {impl!r}")
     return finalize_tables(spec, tables, counts, stream.key_space)
+
+
+# ---------------------------------------------------------------------------
+# Streaming combine flow (map+combine fusion)
+# ---------------------------------------------------------------------------
+
+
+#: largest chunk_pairs × key_space dense expansion (one-hot / mask elements)
+#: the streaming folds may materialize per chunk (64 MB at f32).  Beyond it
+#: the collector falls back to exact scatter folds: larger-K apps keep the
+#: legacy scatter behaviour instead of regressing to an O(chunk·K) blow-up.
+DENSE_FOLD_ELEMS_BUDGET = 1 << 24
+
+
+def stream_mode(spec: C.CombinerSpec, *, dense_ok: bool = True) -> str:
+    """Pick the per-chunk fold lowering for the streaming collector."""
+    if spec.strategy == C.STRATEGY_SIZE:
+        return "size"
+    if spec.strategy == C.STRATEGY_FIRST:
+        return "first"
+    if spec.mxu_lowerable and dense_ok:
+        return "additive"
+    if spec.scatter_lowerable:
+        return "dense" if dense_ok else "scatter"
+    return "sequential"
+
+
+class StreamCombiner:
+    """Chunked scatter-free fold of a pair stream into carried holder tables.
+
+    The engine's streaming flow threads ``state`` through a ``lax.scan`` over
+    map chunks; :meth:`fold_chunk` folds one chunk's emitted pairs into the
+    state.  The emitted-pair buffer therefore only ever exists one chunk at a
+    time — the fused version of the paper's combining collector ("the combine
+    happens at emit time"), which is what un-inverts the Figs 8/9 bytes
+    story: the legacy combine flow materialized the full ``N × capacity``
+    pair buffer before folding.
+
+    Per-chunk lowerings (dense/scatter-free wherever the chunk × key-space
+    expansion fits :data:`DENSE_FOLD_ELEMS_BUDGET` — a per-pair table
+    scatter is what XLA:CPU serializes into an O(N·K)-bytes while loop):
+
+    * additive — one fused ``one_hot(keys)ᵀ @ [channels | 1]`` matmul per
+      chunk into an f32 accumulator ``[K, ΣD + 1]``; the trailing ones
+      column carries the counts, so the one-hot matrix is touched once.
+      ``fold_fn(keys, mat, acc)`` may be the Pallas grid-accumulation kernel
+      (kernels/ops.onehot_fold); defaults to a pure-JAX dot (CPU fallback).
+    * dense    — per-monoid identity-masked reduction over the chunk axis,
+      merged into the tables with the monoid op (max/min/mul/bool).
+      ``monoid_fold_fn(keys, mat, acc, op)`` may be the Pallas chunk kernel.
+    * first    — vectorized first-occurrence gather, kept only where the
+      carried count is still zero.
+    * size     — counts only.
+    * scatter  — exact ``table.at[keys].<op>`` folds, selected when
+      ``chunk_pairs × key_space`` exceeds :data:`DENSE_FOLD_ELEMS_BUDGET`
+      (large key spaces, where a dense per-chunk expansion would dominate).
+    * sequential — per-pair gather/combine/write-back scan (coupled holders).
+    """
+
+    def __init__(self, spec: C.CombinerSpec, key_space: int, value_aval,
+                 *, fold_fn: Callable | None = None,
+                 monoid_fold_fn: Callable | None = None,
+                 chunk_pairs: int | None = None):
+        self.spec = spec
+        self.key_space = key_space
+        self.value_aval = value_aval
+        self.fold_fn = fold_fn
+        self.monoid_fold_fn = monoid_fold_fn
+        self._dense_ok = (chunk_pairs is None or
+                          chunk_pairs * key_space <= DENSE_FOLD_ELEMS_BUDGET)
+        self.mode = stream_mode(spec, dense_ok=self._dense_ok)
+        holder = spec.holder_avals(value_aval)
+        self._holder_leaves, self._holder_treedef = jax.tree.flatten(holder)
+
+    # -- state ---------------------------------------------------------------
+
+    @property
+    def _fused_acc(self) -> bool:
+        # the Pallas fold kernel folds all channels + the counts column in
+        # one grid-accumulated matmul, so its carry is one f32 matrix.
+        # Float holders only: an f32 running accumulator caps exact integer
+        # accumulation at 2^24 per key, while the per-leaf path below adds
+        # exact per-chunk deltas into tables of the holder's own dtype.
+        # (The fused counts column shares the 2^24-pairs-per-key bound.)
+        return (self.mode == "additive" and self.fold_fn is not None
+                and all(jnp.issubdtype(l.dtype, jnp.floating)
+                        for l in self._holder_leaves))
+
+    def init_state(self):
+        if self.mode == "size":
+            return jnp.zeros((self.key_space,), jnp.int32)
+        if self._fused_acc:
+            d_tot = sum(int(np.prod(l.shape)) for l in self._holder_leaves)
+            return jnp.zeros((self.key_space, d_tot + 1), jnp.float32)
+        return self.spec.init_tables(self.key_space, self.value_aval)
+
+    def tables_counts(self, state) -> tuple[Any, jax.Array]:
+        """Un-finalized (tables, counts) from the carried state."""
+        if self.mode == "size":
+            return (), state
+        if self._fused_acc:
+            acc = state
+            tabs, off = [], 0
+            for aval in self._holder_leaves:
+                size = int(np.prod(aval.shape))
+                tabs.append(acc[:, off:off + size]
+                            .reshape((self.key_space,) + tuple(aval.shape))
+                            .astype(aval.dtype))
+                off += size
+            tables = jax.tree.unflatten(self._holder_treedef, tabs)
+            return tables, acc[:, -1].astype(jnp.int32)
+        return state
+
+    def finalize(self, state) -> Grouped:
+        tables, counts = self.tables_counts(state)
+        return finalize_tables(self.spec, tables, counts, self.key_space)
+
+    # -- per-chunk folds -----------------------------------------------------
+
+    def _onehot(self, keys: jax.Array, dtype=jnp.float32) -> jax.Array:
+        k_iota = jnp.arange(self.key_space, dtype=jnp.int32)
+        return (keys[:, None] == k_iota[None, :]).astype(dtype)
+
+    def _chunk_counts(self, stream: PairStream) -> jax.Array:
+        if self._dense_ok:
+            return jnp.sum(self._onehot(stream.keys, jnp.int32), axis=0)
+        return jnp.zeros((self.key_space,), jnp.int32).at[stream.keys].add(
+            stream.valid.astype(jnp.int32), mode="drop")
+
+    def fold_chunk(self, state, stream: PairStream):
+        assert stream.key_space == self.key_space
+        if self.mode == "size":
+            return state + self._chunk_counts(stream)
+        if self._fused_acc:
+            n = stream.keys.shape[0]
+            mapped = _premap_stream(self.spec, stream.values)
+            cols = [l.reshape(n, -1).astype(jnp.float32)
+                    for l in jax.tree.leaves(mapped)]
+            cols.append(stream.valid.astype(jnp.float32)[:, None])  # counts
+            return self.fold_fn(stream.keys, jnp.concatenate(cols, axis=1),
+                                state)
+        tables, counts = state
+        if self.mode == "additive":
+            return self._fold_additive(tables, counts, stream)
+        if self.mode == "dense":
+            return self._fold_dense(tables, counts, stream)
+        if self.mode == "scatter":
+            return self._fold_scatter(tables, counts, stream)
+        if self.mode == "first":
+            return self._fold_first(tables, counts, stream)
+        return _sequential_fold(self.spec, tables, counts,
+                                stream.keys, stream.values)
+
+    def _fold_scatter(self, tables, counts, stream: PairStream):
+        # exact large-K fallback: same per-chunk semantics as combine_scatter
+        # but folding into the *carried* tables instead of identity ones
+        mapped = _premap_stream(self.spec, stream.values)
+        out = []
+        for mono, tab, chan in zip(self.spec.monoids, jax.tree.leaves(tables),
+                                   jax.tree.leaves(mapped)):
+            upd = getattr(tab.at[stream.keys], mono.scatter_method)
+            out.append(upd(chan.astype(tab.dtype), mode="drop"))
+        tables = jax.tree.unflatten(self._holder_treedef, out)
+        return tables, counts + self._chunk_counts(stream)
+
+    def _fold_additive(self, tables, counts, stream: PairStream):
+        # One ``one_hotᵀ @ channel`` contraction per holder leaf — the same
+        # lowering as the legacy one-hot collector, which XLA fuses with the
+        # one-hot generation (the [chunk, K] one-hot never reaches HBM; the
+        # Pallas fold kernel behaves the same way, building the one-hot tile
+        # in VMEM per grid step).  Integer channels contract in the table's
+        # own integer dtype — exact over its full range, where an f32
+        # contraction would round per-chunk sums beyond 2^24.
+        n = stream.keys.shape[0]
+        mapped = _premap_stream(self.spec, stream.values)
+
+        def onehot(dtype):
+            return jax.nn.one_hot(stream.keys, self.key_space, dtype=dtype)
+
+        out = []
+        for tab, chan in zip(jax.tree.leaves(tables),
+                             jax.tree.leaves(mapped)):
+            acc_dt = (tab.dtype if jnp.issubdtype(tab.dtype, jnp.integer)
+                      else jnp.float32)
+            flat = chan.reshape(n, -1).astype(acc_dt)
+            delta = jnp.einsum("nk,nd->kd", onehot(acc_dt),
+                               flat).reshape(tab.shape)
+            out.append(tab + delta.astype(tab.dtype))
+        tables = jax.tree.unflatten(self._holder_treedef, out)
+        counts = counts + jnp.einsum(
+            "nk,n->k", onehot(jnp.int32),
+            stream.valid.astype(jnp.int32))
+        return tables, counts
+
+    def _fold_dense(self, tables, counts, stream: PairStream):
+        mapped = _premap_stream(self.spec, stream.values)
+        chans = jax.tree.leaves(mapped)
+        tabs = jax.tree.leaves(tables)
+        oh = self._onehot(stream.keys, jnp.bool_)
+        out = []
+        for mono, tab, chan in zip(self.spec.monoids, tabs, chans):
+            kern_ok = (self.monoid_fold_fn is not None
+                       and tab.dtype == jnp.float32
+                       and mono.name in ("add", "max", "min"))
+            if kern_ok:
+                n = chan.shape[0]
+                red = self.monoid_fold_fn(
+                    stream.keys, chan.reshape(n, -1).astype(jnp.float32),
+                    tab.reshape(self.key_space, -1), mono.name)
+                out.append(red.reshape(tab.shape).astype(tab.dtype))
+                continue
+            ident = mono.identity(chan.dtype)
+            bshape = oh.shape + (1,) * (chan.ndim - 1)
+            masked = jnp.where(oh.reshape(bshape), chan[:, None], ident)
+            red = mono.dense_reduce(masked, axis=0)
+            out.append(mono.op(tab, red.astype(tab.dtype)))
+        tables = jax.tree.unflatten(self._holder_treedef, out)
+        counts = counts + jnp.sum(oh, axis=0, dtype=jnp.int32)
+        return tables, counts
+
+    def _fold_first(self, tables, counts, stream: PairStream):
+        n = stream.keys.shape[0]
+        mapped = _premap_stream(self.spec, stream.values)
+        pos = jnp.arange(n, dtype=jnp.int32)
+        if self._dense_ok:
+            oh = self._onehot(stream.keys, jnp.bool_)
+            first_pos = jnp.min(jnp.where(oh, pos[:, None], n), axis=0)
+        else:  # large key space: scatter-min of arrival order (exact)
+            first_pos = jnp.full((self.key_space,), n, jnp.int32).at[
+                stream.keys].min(pos, mode="drop")
+        fresh = (first_pos < n) & (counts == 0)
+        safe = jnp.minimum(first_pos, n - 1)
+        out = []
+        for tab, chan in zip(jax.tree.leaves(tables),
+                             jax.tree.leaves(mapped)):
+            sel = fresh.reshape((self.key_space,) + (1,) * (chan.ndim - 1))
+            out.append(jnp.where(sel, chan[safe], tab))
+        tables = jax.tree.unflatten(self._holder_treedef, out)
+        return tables, counts + self._chunk_counts(stream)

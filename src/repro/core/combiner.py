@@ -75,6 +75,28 @@ class Monoid:
     def identity_like(self, aval: jax.ShapeDtypeStruct) -> jax.Array:
         return jnp.full(aval.shape, self.identity(aval.dtype), aval.dtype)
 
+    def dense_reduce(self, masked: jax.Array, axis: int = 0) -> jax.Array:
+        """Reduce an identity-masked dense expansion along ``axis``.
+
+        The streaming collector's scatter-free per-chunk fold: entries not
+        belonging to a key carry ``identity`` and are absorbed by the op.
+        """
+        return _DENSE_REDUCE[self.name](masked, axis=axis)
+
+
+#: dense (masked) reductions over the pair axis — the scatter-free lowering
+#: used by the streaming collector: reduce a [chunk, K, ...] identity-masked
+#: expansion instead of a per-pair table scatter (which XLA:CPU serializes
+#: into a while loop touching the whole table every iteration).
+_DENSE_REDUCE = {
+    "add": jnp.sum,
+    "mul": jnp.prod,
+    "max": jnp.max,
+    "min": jnp.min,
+    "and": jnp.all,
+    "or": jnp.any,
+}
+
 
 ADD = Monoid("add", jnp.add, lambda dt: jnp.zeros((), dt), "add", is_additive=True)
 MUL = Monoid("mul", jnp.multiply, lambda dt: jnp.ones((), dt), "multiply")
@@ -151,6 +173,21 @@ class CombinerSpec:
     def holder_avals(self, value_aval: PyTree) -> PyTree:
         """Shape/dtype of the holder for a given value aval."""
         return jax.eval_shape(lambda v: self.init(v), value_aval)
+
+    def init_tables(self, key_space: int, value_aval: PyTree) -> tuple[PyTree, jax.Array]:
+        """Identity-initialized dense holder tables ``[K, *holder]`` + counts.
+
+        This is the holder-carry form of the spec: the streaming collector
+        threads these tables through a chunked ``lax.scan`` and folds each
+        map chunk into them, so the full intermediate pair buffer is never
+        materialized (the paper's combining collector, fused with the map).
+        """
+        h0 = self.init(value_aval)
+        tables = jax.tree.map(
+            lambda l: jnp.tile(jnp.asarray(l)[None],
+                               (key_space,) + (1,) * jnp.ndim(l)), h0)
+        counts = jnp.zeros((key_space,), jnp.int32)
+        return tables, counts
 
 
 def monoid_spec(

@@ -1,11 +1,25 @@
-"""Execution engine: map phase + local and distributed runs of both flows.
+"""Execution engine: map phase + local and distributed runs of the flows.
+
+Three execution flows:
+
+* stream  — **fused map+combine** (the optimizer's default): the item axis is
+  scanned in chunks; each chunk's emitted pairs are folded straight into the
+  carried holder tables (``collector.StreamCombiner``).  The full
+  ``N × emit_capacity`` pair buffer never exists — peak intermediate state is
+  O(K + chunk_pairs).  This is what restores the paper's Figs 8/9 story at
+  the bytes level: the legacy combine flow still materialized every pair
+  before folding.
+* combine — the legacy combining collector (materialize pairs, fold once);
+  kept for A/B benchmarks against the paper's optimized flow.
+* reduce  — the paper's baseline (materialize, sort, group, per-key reduce).
 
 Distribution (beyond the paper's multicore scope, toward the 1000-node
 posture):
 
-* combine flow — each shard folds its local pairs into holder tables; tables
-  merge across the data axis with monoid-aware collectives (psum/pmax/pmin,
-  or an all-gather fold for generic merges).  Collective volume: **O(K)**.
+* stream/combine flow — each shard folds its local pairs into holder tables;
+  tables merge across the data axis with monoid-aware collectives
+  (psum/pmax/pmin, or an all-gather fold for generic merges).  Collective
+  volume: **O(K)**.
 * reduce flow — raw pairs are key-partitioned and exchanged with
   ``lax.all_to_all`` (fixed-capacity buckets, Phoenix-buffer style), then each
   shard sorts/groups/reduces its key range.  Collective volume: **O(N)**.
@@ -117,7 +131,94 @@ def _onehot_kernel(use_kernels: bool) -> Callable | None:
     return ops.onehot_combine
 
 
-def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False):
+def _fold_kernels(use_kernels: bool) -> tuple[Callable | None, Callable | None]:
+    """(additive fold_fn, monoid_fold_fn) for the streaming collector."""
+    if not use_kernels:
+        return None, None
+    from repro.kernels import ops
+
+    return ops.onehot_fold, ops.chunk_monoid_fold
+
+
+#: default bound on emitted pairs materialized per streaming chunk.  While
+#: the whole pair buffer fits this budget the flow degenerates to a single
+#: fully-fused chunk (XLA keeps the pairs out of HBM on its own at that
+#: size); beyond it, chunking bounds peak intermediate state at the cost of
+#: re-touching the O(K) tables once per chunk.
+DEFAULT_CHUNK_PAIRS = 4096
+
+
+def _stream_combiner(app, spec, *, use_kernels=False,
+                     chunk_pairs: int | None = None) -> col.StreamCombiner:
+    fold_fn, monoid_fold_fn = _fold_kernels(use_kernels)
+    return col.StreamCombiner(spec, app.key_space, app.value_aval,
+                              fold_fn=fold_fn, monoid_fold_fn=monoid_fold_fn,
+                              chunk_pairs=chunk_pairs)
+
+
+def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
+                        use_kernels: bool = False):
+    """Fused map+combine over ``items``: chunked scan, holder-table carry.
+
+    Splits the item axis into chunks of ~``chunk_pairs`` emitted pairs, runs
+    the user map on one chunk at a time and folds the chunk's pairs straight
+    into the carried holder tables.  The full ``N × emit_capacity`` pair
+    buffer of the legacy flows is never materialized — peak intermediate
+    state is O(K + chunk_pairs), the paper's "minimize data transfers before
+    the reduce phase" realized at the HBM level.
+
+    Returns un-finalized ``(tables, counts)`` (for the distributed engine's
+    collective merge); :func:`run_local_stream` finalizes.
+    """
+    n_items = jax.tree.leaves(items)[0].shape[0]
+    cap = max(app.emit_capacity, 1)
+    chunk_items = max(1, min(n_items, chunk_pairs // cap))
+    n_chunks = -(-n_items // chunk_items)
+    sc = _stream_combiner(app, spec, use_kernels=use_kernels,
+                          chunk_pairs=chunk_items * cap)
+
+    state = sc.init_state()
+    if n_chunks <= 1:
+        state = sc.fold_chunk(state, map_phase(app, items))
+        return sc.tables_counts(state)
+
+    padded = n_chunks * chunk_items
+    pad = padded - n_items
+    items_p = jax.tree.map(
+        lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), items)
+    chunked = jax.tree.map(
+        lambda a: a.reshape((n_chunks, chunk_items) + a.shape[1:]), items_p)
+    # pad items run through the map like real ones; their emissions are
+    # masked to the sentinel key before the fold and so never land.
+    item_mask = (jnp.arange(padded) < n_items).reshape(n_chunks, chunk_items)
+
+    def body(state, xs):
+        citems, cmask = xs
+        stream = map_phase(app, citems)
+        keys = jnp.where(jnp.repeat(cmask, app.emit_capacity),
+                         stream.keys, app.key_space)
+        state = sc.fold_chunk(
+            state, col.PairStream(keys, stream.values, app.key_space))
+        return state, None
+
+    state, _ = lax.scan(body, state, (chunked, item_mask))
+    return sc.tables_counts(state)
+
+
+def run_local_stream(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
+                     use_kernels: bool = False):
+    tables, counts = stream_local_tables(
+        app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels)
+    grouped = col.finalize_tables(spec, tables, counts, app.key_space)
+    return grouped.keys, grouped.values, grouped.counts
+
+
+def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
+              chunk_pairs: int = DEFAULT_CHUNK_PAIRS):
+    if plan.flow == "stream":
+        return run_local_stream(app, plan.spec, items,
+                                chunk_pairs=chunk_pairs,
+                                use_kernels=use_kernels)
     stream = map_phase(app, items)
     if plan.flow == "combine":
         grouped = col.combine_flow(
@@ -206,39 +307,59 @@ def _combine_shard_fn(app, spec, *, combine_impl, use_kernels, axis_name,
                 spec, stream, onehot_fn=_onehot_kernel(use_kernels))
         else:
             tables, counts = col.combine_segment(spec, stream)
-
-        if spec.merge is not None:
-            tables, counts = merge_tables_collective(
-                spec, tables, counts, axis_name, scatter=scatter)
-            out = col.finalize_tables(spec, tables, counts,
-                                      counts.shape[0])
-            return out.keys, out.values, out.counts
-        if spec.reapply_ok:
-            # Hadoop contract: finalize local partials, re-reduce across shards
-            local = col.finalize_tables(spec, tables, counts, app.key_space)
-            g_vals = jax.tree.map(lambda v: lax.all_gather(v, axis_name),
-                                  local.values)
-            g_cnt = lax.all_gather(counts, axis_name)  # [S, K]
-            S = g_cnt.shape[0]
-
-            def per_key(k, vals_k, cnt_k):
-                # shards with zero count contribute pad values
-                order = jnp.argsort(cnt_k == 0)  # valid shards first
-                vals_s = jax.tree.map(
-                    lambda v: jnp.where(
-                        (cnt_k[order] > 0).reshape((-1,) + (1,) * (v.ndim - 1)),
-                        v[order], jnp.asarray(app.pad_value, v.dtype)),
-                    vals_k)
-                nvalid = jnp.sum(cnt_k > 0).astype(jnp.int32)
-                return app.reduce(k, vals_s, nvalid)
-
-            vals_t = jax.tree.map(lambda v: jnp.moveaxis(v, 0, 1), g_vals)
-            keys = jnp.arange(app.key_space, dtype=jnp.int32)
-            merged = jax.vmap(per_key)(keys, vals_t, g_cnt.T)
-            return keys, merged, jnp.sum(g_cnt, axis=0)
-        raise ValueError("combiner has no cross-shard merge strategy")
+        return _merge_shard_tables(app, spec, tables, counts,
+                                   axis_name=axis_name, scatter=scatter)
 
     return fn
+
+
+def _stream_shard_fn(app, spec, *, use_kernels, axis_name, scatter,
+                     chunk_pairs):
+    """Streaming flow per shard: chunked local fold, then the same O(K)
+    monoid collectives as the legacy combine flow."""
+
+    def fn(local_items):
+        tables, counts = stream_local_tables(
+            app, spec, local_items, chunk_pairs=chunk_pairs,
+            use_kernels=use_kernels)
+        return _merge_shard_tables(app, spec, tables, counts,
+                                   axis_name=axis_name, scatter=scatter)
+
+    return fn
+
+
+def _merge_shard_tables(app, spec, tables, counts, *, axis_name, scatter):
+    """Merge per-shard holder tables (monoid collectives or reapply) and
+    finalize — the shared tail of the combine and streaming shard fns."""
+    if spec.merge is not None:
+        tables, counts = merge_tables_collective(
+            spec, tables, counts, axis_name, scatter=scatter)
+        out = col.finalize_tables(spec, tables, counts,
+                                  counts.shape[0])
+        return out.keys, out.values, out.counts
+    if spec.reapply_ok:
+        # Hadoop contract: finalize local partials, re-reduce across shards
+        local = col.finalize_tables(spec, tables, counts, app.key_space)
+        g_vals = jax.tree.map(lambda v: lax.all_gather(v, axis_name),
+                              local.values)
+        g_cnt = lax.all_gather(counts, axis_name)  # [S, K]
+
+        def per_key(k, vals_k, cnt_k):
+            # shards with zero count contribute pad values
+            order = jnp.argsort(cnt_k == 0)  # valid shards first
+            vals_s = jax.tree.map(
+                lambda v: jnp.where(
+                    (cnt_k[order] > 0).reshape((-1,) + (1,) * (v.ndim - 1)),
+                    v[order], jnp.asarray(app.pad_value, v.dtype)),
+                vals_k)
+            nvalid = jnp.sum(cnt_k > 0).astype(jnp.int32)
+            return app.reduce(k, vals_s, nvalid)
+
+        vals_t = jax.tree.map(lambda v: jnp.moveaxis(v, 0, 1), g_vals)
+        keys = jnp.arange(app.key_space, dtype=jnp.int32)
+        merged = jax.vmap(per_key)(keys, vals_t, g_cnt.T)
+        return keys, merged, jnp.sum(g_cnt, axis=0)
+    raise ValueError("combiner has no cross-shard merge strategy")
 
 
 # ---------------------------------------------------------------------------
@@ -317,21 +438,28 @@ def run_distributed(
     use_kernels: bool = False,
     scatter_output: bool = False,
     shuffle_capacity: int | None = None,
+    chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
 ):
     """shard_map the chosen flow over ``data_axis`` of ``mesh``.
 
-    Returns (keys, values, counts); combine flow results are replicated
-    (or key-sharded with ``scatter_output=True``), reduce flow results are
-    key-sharded over the data axis (padded to ceil(K/S)*S keys).
+    Returns (keys, values, counts); stream/combine flow results are
+    replicated (or key-sharded with ``scatter_output=True``), reduce flow
+    results are key-sharded over the data axis (padded to ceil(K/S)*S keys).
     """
     from jax.sharding import NamedSharding
     from jax.experimental.shard_map import shard_map
 
     S = mesh.shape[data_axis]
-    if plan.flow == "combine":
-        fn = _combine_shard_fn(app, plan.spec, combine_impl=combine_impl,
-                               use_kernels=use_kernels, axis_name=data_axis,
-                               scatter=scatter_output)
+    if plan.flow in ("combine", "stream"):
+        if plan.flow == "stream":
+            fn = _stream_shard_fn(app, plan.spec, use_kernels=use_kernels,
+                                  axis_name=data_axis, scatter=scatter_output,
+                                  chunk_pairs=chunk_pairs)
+        else:
+            fn = _combine_shard_fn(app, plan.spec, combine_impl=combine_impl,
+                                   use_kernels=use_kernels,
+                                   axis_name=data_axis,
+                                   scatter=scatter_output)
         out_spec = (P(data_axis) if scatter_output else P(),
                     P(data_axis) if scatter_output else P(),
                     P(data_axis) if scatter_output else P())

@@ -57,6 +57,18 @@ class Derivation:
     def combinable(self) -> bool:
         return self.spec is not None
 
+    @property
+    def recommended_flow(self) -> str:
+        """Flow flipped on when extraction succeeds (paper §3.2 step 6).
+
+        Successful derivations select the **streaming** fused flow — folding
+        each map chunk into the holder tables as it is produced strictly
+        dominates the legacy materialize-then-fold combine flow on bytes
+        pressure (the paper's "minimize data transfers before the reduce
+        phase"); "combine" remains available for A/B comparison.
+        """
+        return "stream" if self.spec is not None else "reduce"
+
 
 def _key_sample(key_aval):
     if isinstance(key_aval, jax.ShapeDtypeStruct):

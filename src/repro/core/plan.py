@@ -20,18 +20,28 @@ from repro.core.optimizer import Derivation, derive_combiner
 
 @dataclasses.dataclass
 class ExecutionPlan:
-    flow: str  # "combine" | "reduce"
+    flow: str  # "stream" | "combine" | "reduce"
     derivation: Derivation | None
     spec: C.CombinerSpec | None
     reason: str = ""
 
     @property
     def optimized(self) -> bool:
-        return self.flow == "combine"
+        """True when a derived/manual combiner replaced the baseline flow."""
+        return self.flow in ("stream", "combine")
 
 
 def plan_execution(app, *, flow: str = "auto",
                    trust_semantics: bool = False) -> ExecutionPlan:
+    """Pick the execution flow.
+
+    flow="auto" runs the optimizer and, when a combiner is derived, selects
+    the flow the optimizer recommends (the streaming fused flow).  "stream"
+    and "combine" force the respective optimized flow (error if no combiner
+    can be derived); "reduce" forces the paper's baseline.
+    """
+    if flow not in ("auto", "stream", "combine", "reduce"):
+        raise ValueError(f"unknown flow {flow!r}")
     if flow == "reduce":
         return ExecutionPlan("reduce", None, None, reason="forced by user")
 
@@ -39,16 +49,18 @@ def plan_execution(app, *, flow: str = "auto",
     if spec is not None:
         d = Derivation(spec=spec, strategy=C.STRATEGY_MANUAL, reapply_ok=False,
                        validated=False, detect_s=0.0, transform_s=0.0)
-        return ExecutionPlan("combine", d, spec, reason="manual combiner")
+        chosen = d.recommended_flow if flow == "auto" else flow
+        return ExecutionPlan(chosen, d, spec, reason="manual combiner")
 
     key_aval = jax.ShapeDtypeStruct((), jnp.int32)
     d = derive_combiner(app.reduce, key_aval, app.value_aval,
                         trust_semantics=trust_semantics)
     if d.combinable:
-        return ExecutionPlan("combine", d, d.spec,
+        chosen = d.recommended_flow if flow == "auto" else flow
+        return ExecutionPlan(chosen, d, d.spec,
                              reason=f"derived ({d.strategy})")
-    if flow == "combine":
+    if flow in ("combine", "stream"):
         raise ValueError(
-            f"combine flow forced but derivation failed: {d.failure}")
+            f"{flow} flow forced but derivation failed: {d.failure}")
     return ExecutionPlan("reduce", d, None,
                          reason=f"not combinable: {d.failure}")

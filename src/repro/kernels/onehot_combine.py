@@ -39,6 +39,68 @@ def _kernel(keys_ref, vals_ref, out_ref, *, key_space: int, n_tiles: int):
         preferred_element_type=jnp.float32)
 
 
+def _fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, key_space: int):
+    """Grid-accumulated ``acc + one_hot(keys)ᵀ @ vals`` — the streaming
+    collector's per-chunk fold.  The accumulator block is loaded into the
+    VMEM-resident output on the first pair tile and the chunk's tiles are
+    accumulated on top, so the carried holder table round-trips HBM once per
+    chunk (not per tile) and the one-hot never leaves VMEM."""
+    i = pl.program_id(1)  # innermost: pair-stream tile index
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    keys = keys_ref[...]  # [Tn] int32
+    vals = vals_ref[...]  # [Tn, Td] f32
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], key_space), 1)
+    onehot = (keys[:, None] == k_iota).astype(vals.dtype)  # [Tn, K]
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("key_space", "tile_n", "tile_d",
+                                             "interpret"))
+def onehot_fold(
+    keys: jax.Array,
+    values: jax.Array,
+    acc: jax.Array,
+    key_space: int,
+    *,
+    tile_n: int = 512,
+    tile_d: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """[N] keys, [N, D] values, [K, D] acc -> acc + per-key sums (f32)."""
+    n, d = values.shape
+    tile_n = min(tile_n, max(n, 8))
+    tile_d = min(tile_d, d)
+
+    pad_n = (-n) % tile_n
+    pad_d = (-d) % tile_d
+    keys_p = jnp.pad(keys, (0, pad_n), constant_values=key_space)
+    vals_p = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    acc_p = jnp.pad(acc.astype(jnp.float32), ((0, 0), (0, pad_d)))
+    np_, dp = vals_p.shape
+    n_tiles = np_ // tile_n
+
+    grid = (dp // tile_d, n_tiles)  # N innermost: table tile stays resident
+    out = pl.pallas_call(
+        functools.partial(_fold_kernel, key_space=key_space),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n,), lambda j, i: (i,)),
+            pl.BlockSpec((tile_n, tile_d), lambda j, i: (i, j)),
+            pl.BlockSpec((key_space, tile_d), lambda j, i: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((key_space, tile_d), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((key_space, dp), jnp.float32),
+        interpret=interpret,
+    )(keys_p, vals_p, acc_p)
+    return out[:, :d]
+
+
 @functools.partial(jax.jit, static_argnames=("key_space", "tile_n", "tile_d",
                                              "interpret"))
 def onehot_combine(

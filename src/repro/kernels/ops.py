@@ -40,6 +40,67 @@ def onehot_combine(keys, values, key_space, *, tile_n=512, tile_d=128,
                               tile_d=tile_d, interpret=interpret)
 
 
+def onehot_fold(keys, values, acc, key_space=None, *, tile_n=512, tile_d=128,
+                interpret=None):
+    """Streaming-chunk additive fold: ``acc + one_hot(keys)ᵀ @ values``.
+
+    [N] keys, [N, D] values, [K, D] f32 acc -> [K, D] f32.  The carried
+    holder table round-trips HBM once per chunk; the one-hot tile lives in
+    VMEM only (grid accumulation).  Signature matches the streaming
+    collector's ``fold_fn(keys, mat, acc)`` when ``key_space`` is omitted.
+    """
+    if values.ndim != 2:
+        raise ValueError("values must be [N, D]")
+    if key_space is None:
+        key_space = acc.shape[0]
+    if acc.shape[0] != key_space or acc.shape[1] != values.shape[1]:
+        raise ValueError(f"acc shape {acc.shape} != ({key_space}, "
+                         f"{values.shape[1]})")
+    n, d = values.shape
+    if n == 0:  # empty chunk: nothing to fold
+        return acc.astype(jnp.float32)
+    # VMEM residents per grid step: the [K, Td] table block, the [Tn, K]
+    # one-hot temp, and the [Tn, Td] value tile
+    tn, td = min(tile_n, max(n, 8)), min(tile_d, d)
+    step_bytes = (key_space * td + tn * key_space + tn * td) * 4
+    if step_bytes > VMEM_BUDGET:
+        raise ValueError(
+            f"key_space {key_space} too large for VMEM-resident fold "
+            f"(needs {step_bytes} bytes/step); shrink the chunk or use the "
+            "pure-JAX streaming fold")
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _oc.onehot_fold(keys, values, acc, key_space, tile_n=tile_n,
+                           tile_d=tile_d, interpret=interpret)
+
+
+def chunk_monoid_fold(keys, values, acc, op="add", *, tile_n=256,
+                      interpret=None):
+    """Streaming-chunk monoid fold of an UNSORTED pair tile into [K, D] acc.
+
+    Signature matches the streaming collector's
+    ``monoid_fold_fn(keys, mat, acc, op)``; key space is taken from acc.
+    """
+    if values.ndim != 2:
+        raise ValueError("values must be [N, D]")
+    key_space = acc.shape[0]
+    n, d = values.shape
+    if n == 0:  # empty chunk: nothing to fold
+        return acc.astype(jnp.float32)
+    # VMEM residents per grid step: the full [K, D] table, the [Tn, K] hit
+    # mask, and (max/min) the [Tn, K, D] masked expansion
+    tn = min(tile_n, max(n, 8))
+    step_elems = key_space * d + tn * key_space
+    if op != "add":
+        step_elems += tn * key_space * d
+    if step_elems * 4 > VMEM_BUDGET:
+        raise ValueError(
+            f"holder table/mask too large for VMEM residency "
+            f"({step_elems * 4} bytes/step); use the pure-JAX streaming fold")
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _sr.chunk_monoid_fold(keys, values, acc, key_space, op,
+                                 tile_n=tile_n, interpret=interpret)
+
+
 def combine_scatter(keys, values, key_space, op="add", *, tile_n=256,
                     interpret=None):
     """General monoid combine (masked broadcast update). -> [K, D] f32."""

@@ -21,6 +21,22 @@ def onehot_combine(keys: jax.Array, values: jax.Array, key_space: int) -> jax.Ar
     return jnp.einsum("nk,nd->kd", oh, values.astype(jnp.float32))
 
 
+def onehot_fold(keys: jax.Array, values: jax.Array, acc: jax.Array,
+                key_space: int | None = None) -> jax.Array:
+    """Streaming-chunk additive fold: ``acc + one_hot(keys)ᵀ @ values``."""
+    if key_space is None:
+        key_space = acc.shape[0]
+    return acc.astype(jnp.float32) + onehot_combine(keys, values, key_space)
+
+
+def chunk_monoid_fold(keys: jax.Array, values: jax.Array, acc: jax.Array,
+                      op: str = "add") -> jax.Array:
+    """Monoid fold of an unsorted chunk into the carried [K, D] table."""
+    chunk = combine_scatter(keys, values, acc.shape[0], op)
+    f = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op]
+    return f(acc.astype(jnp.float32), chunk)
+
+
 def combine_scatter(keys: jax.Array, values: jax.Array, key_space: int,
                     op: str = "add") -> jax.Array:
     """Monoid scatter-combine values by key into a [K, D] table.

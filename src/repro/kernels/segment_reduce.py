@@ -63,6 +63,75 @@ def _kernel(block_ids_ref, keys_ref, vals_ref, out_ref, *, block_k: int,
                          else masked.min(0))
 
 
+def _chunk_fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, op: str,
+                       key_space: int):
+    """Streaming-flow chunk fold for non-additive monoids: an UNSORTED pair
+    tile is masked against the whole key iota and monoid-reduced into the
+    VMEM-resident [K, D] table (loaded from the carried accumulator on the
+    first tile).  Complements ``segment_reduce``, which needs a key-sorted
+    stream; chunk streams arrive in emission order."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    ident = jnp.float32(_IDENT[op])
+    keys = keys_ref[...]  # [Tn] int32, unsorted, sentinel == key_space
+    vals = vals_ref[...]  # [Tn, D] f32
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], key_space), 1)
+    hit = (keys[:, None] == k_iota)  # sentinel/padding -> no hit
+
+    if op == "add":
+        onehot = hit.astype(vals.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            onehot, vals, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        f = jnp.maximum if op == "max" else jnp.minimum
+        masked = jnp.where(hit[:, :, None], vals[:, None, :], ident)
+        out_ref[...] = f(out_ref[...], masked.max(0) if op == "max"
+                         else masked.min(0))
+
+
+@functools.partial(jax.jit, static_argnames=("key_space", "op", "tile_n",
+                                             "interpret"))
+def chunk_monoid_fold(
+    keys: jax.Array,
+    values: jax.Array,
+    acc: jax.Array,
+    key_space: int,
+    op: str = "add",
+    *,
+    tile_n: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Unsorted [N] keys + [N, D] values folded into [K, D] acc (f32).
+
+    ``acc`` rows for keys absent from the chunk are passed through
+    unchanged, so repeated calls implement the holder-carry contract."""
+    n, d = values.shape
+    tile_n = min(tile_n, max(n, 8))
+    pad_n = (-n) % tile_n
+    keys_p = jnp.pad(keys, (0, pad_n), constant_values=key_space)
+    vals_p = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    n_tiles = keys_p.shape[0] // tile_n
+
+    out = pl.pallas_call(
+        functools.partial(_chunk_fold_kernel, op=op, key_space=key_space),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((key_space, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((key_space, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((key_space, d), jnp.float32),
+        interpret=interpret,
+    )(keys_p, vals_p, acc.astype(jnp.float32))
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("key_space", "op", "tile_n",
                                              "block_k", "interpret"))
 def segment_reduce(

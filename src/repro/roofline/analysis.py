@@ -190,6 +190,82 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
                     peak_memory_bytes=float(peak))
 
 
+def mapreduce_flow_bytes(
+    flow: str,
+    *,
+    n_pairs: int,
+    key_space: int,
+    value_bytes: int = 4,
+    holder_bytes: int | None = None,
+    chunk_pairs: int | None = None,
+    max_values_per_key: int | None = None,
+) -> float:
+    """First-order HBM-bytes model of the three collector flows (Figs 8/9).
+
+    Complements the measured ``hlo_parser`` numbers in ``bench_memory`` with
+    the analytic story; all terms assume the fused one-hot/masked lowerings
+    (the pair→table fold itself stays on-chip), so each flow is charged for
+    what it *materializes*:
+
+    * reduce  — writes + re-reads the full pair stream around a sort (~3
+      passes of key+value), then gathers O(K·Lmax) padded value windows.
+    * combine — writes + re-reads the full pair stream once (map phase
+      materializes, fold consumes), plus one table write.
+    * stream  — never materializes the full stream: one pair-chunk buffer
+      per scan step (written + read), plus the carried O(K) holder tables
+      re-touched (read + write) once per chunk — the bytes-level form of
+      the paper's "minimize data transfers before the reduce phase".
+    """
+    if chunk_pairs is None:  # keep the model in sync with the engine
+        from repro.core.engine import DEFAULT_CHUNK_PAIRS
+        chunk_pairs = DEFAULT_CHUNK_PAIRS
+    K, N = key_space, n_pairs
+    pair = 4 + value_bytes  # int32 key + value
+    hold = (holder_bytes if holder_bytes is not None else value_bytes) + 4
+    table = K * hold  # holder tables + int32 counts
+    if flow == "reduce":
+        lmax = max_values_per_key or max(N // max(K, 1), 1)
+        return 3.0 * N * pair + 2.0 * K * lmax * value_bytes + table
+    if flow == "combine":
+        return 2.0 * N * pair + table
+    if flow == "stream":
+        n_chunks = max(1, -(-N // max(chunk_pairs, 1)))
+        chunk = min(N, chunk_pairs)
+        return 2.0 * n_chunks * chunk * pair + 2.0 * n_chunks * table
+    raise ValueError(f"unknown flow {flow!r}")
+
+
+def mapreduce_flow_peak_bytes(
+    flow: str,
+    *,
+    n_pairs: int,
+    key_space: int,
+    value_bytes: int = 4,
+    holder_bytes: int | None = None,
+    chunk_pairs: int | None = None,
+    max_values_per_key: int | None = None,
+) -> float:
+    """First-order peak-residency model — the paper's actual Figs 8/9 axis
+    (JVM heap pressure).  The streaming flow's peak is O(K + chunk_pairs)
+    and independent of N; the legacy flows grow with the full pair stream.
+    """
+    if chunk_pairs is None:  # keep the model in sync with the engine
+        from repro.core.engine import DEFAULT_CHUNK_PAIRS
+        chunk_pairs = DEFAULT_CHUNK_PAIRS
+    K, N = key_space, n_pairs
+    pair = 4 + value_bytes
+    hold = (holder_bytes if holder_bytes is not None else value_bytes) + 4
+    table = K * hold
+    if flow == "reduce":
+        lmax = max_values_per_key or max(N // max(K, 1), 1)
+        return 2.0 * N * pair + K * lmax * value_bytes  # stream + sorted copy
+    if flow == "combine":
+        return N * pair + table
+    if flow == "stream":
+        return min(N, chunk_pairs) * pair + table
+    raise ValueError(f"unknown flow {flow!r}")
+
+
 def model_flops_estimate(cfg, shape_kind: str, seq: int, batch: int,
                          n_params: int, n_active: int) -> float:
     """6·N·D train; 2·N·D per generated token for decode/prefill."""

@@ -29,7 +29,7 @@ def tokens():
     return rng.integers(0, VOCAB, size=(40, 8)).astype(np.int32)
 
 
-@pytest.mark.parametrize("flow", ["auto", "reduce"])
+@pytest.mark.parametrize("flow", ["auto", "stream", "combine", "reduce"])
 def test_wordcount(tokens, flow):
     want = np.bincount(tokens.reshape(-1), minlength=VOCAB)
     mr = MapReduce(WordCount(), flow=flow)
@@ -37,12 +37,13 @@ def test_wordcount(tokens, flow):
     np.testing.assert_array_equal(np.asarray(res.counts), want)
     got = np.asarray(res.values)
     np.testing.assert_array_equal(got[want > 0], want[want > 0])
-    assert mr.plan.flow == ("combine" if flow == "auto" else "reduce")
+    # the optimizer's recommended flow is the streaming fusion
+    assert mr.plan.flow == ("stream" if flow == "auto" else flow)
 
 
 @pytest.mark.parametrize("impl", ["scatter", "onehot", "segment"])
 def test_combine_impls_agree(tokens, impl):
-    mr = MapReduce(WordCount(), combine_impl=impl,
+    mr = MapReduce(WordCount(), flow="combine", combine_impl=impl,
                    use_kernels=(impl == "onehot"))
     res = mr.run(jnp.asarray(tokens))
     want = np.bincount(tokens.reshape(-1), minlength=VOCAB)
@@ -63,7 +64,7 @@ def test_centroid_app():
         max_values_per_key=64,
         emit_capacity=1,
     )
-    for flow in ("auto", "reduce"):
+    for flow in ("auto", "stream", "combine", "reduce"):
         res = MapReduce(app, flow=flow).run((jnp.asarray(cids), jnp.asarray(pts)))
         got = np.asarray(res.values)
         for k in range(5):

@@ -121,3 +121,60 @@ def test_onehot_vmem_guard():
     with pytest.raises(ValueError, match="VMEM"):
         ops.onehot_combine(jnp.zeros(8, jnp.int32), jnp.zeros((8, 256)),
                            key_space=2 ** 21)
+
+
+@pytest.mark.parametrize("n,d,k", [(16, 4, 5), (100, 8, 64), (513, 2, 300)])
+def test_onehot_fold(n, d, k):
+    """Streaming-chunk additive fold accumulates on top of the carry."""
+    keys = RNG.integers(0, k + 1, size=n).astype(np.int32)  # incl. sentinel
+    vals = jnp.asarray(_vals((n, d), np.float32))
+    acc = jnp.asarray(_vals((k, d), np.float32))
+    got = ops.onehot_fold(jnp.asarray(keys), vals, acc)
+    want = ref.onehot_fold(jnp.asarray(keys), vals, acc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+@pytest.mark.parametrize("n,d,k", [(50, 4, 11), (200, 2, 37)])
+def test_chunk_monoid_fold(op, n, d, k):
+    """Unsorted-chunk monoid fold: carry rows for absent keys unchanged."""
+    keys = RNG.integers(0, k + 1, size=n).astype(np.int32)
+    vals = jnp.asarray(_vals((n, d), np.float32))
+    acc = jnp.asarray(_vals((k, d), np.float32))
+    got = ops.chunk_monoid_fold(jnp.asarray(keys), vals, acc, op)
+    want = ref.chunk_monoid_fold(jnp.asarray(keys), vals, acc, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_fold_chain_matches_single_shot():
+    """Folding a stream chunk-by-chunk == one-shot combine (holder carry)."""
+    n, d, k, chunk = 96, 4, 17, 32
+    keys = RNG.integers(0, k, size=n).astype(np.int32)
+    vals = _vals((n, d), np.float32)
+    acc = jnp.zeros((k, d), jnp.float32)
+    for t0 in range(0, n, chunk):
+        acc = ops.onehot_fold(jnp.asarray(keys[t0:t0 + chunk]),
+                              jnp.asarray(vals[t0:t0 + chunk]), acc)
+    want = ref.onehot_combine(jnp.asarray(keys), jnp.asarray(vals), k)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fold_kernels_empty_chunk():
+    """n=0 chunks return the accumulator unchanged instead of crashing."""
+    acc = jnp.asarray(_vals((9, 3), np.float32))
+    got = ops.onehot_fold(jnp.zeros((0,), jnp.int32),
+                          jnp.zeros((0, 3), jnp.float32), acc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc))
+    got = ops.chunk_monoid_fold(jnp.zeros((0,), jnp.int32),
+                                jnp.zeros((0, 3), jnp.float32), acc, "max")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc))
+
+
+def test_fold_kernel_vmem_guard_counts_onehot_temp():
+    """The VMEM guard accounts for the [Tn, K] one-hot, not just the table."""
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.onehot_fold(jnp.zeros(512, jnp.int32), jnp.zeros((512, 1)),
+                        jnp.zeros((1 << 20, 1)))
