@@ -4,7 +4,18 @@ The paper sweeps GC configs and finds the benchmarks with the greatest
 (key, value)-pair pressure (HG: 768 keys × 1.4e9 values; WC) improve most,
 while SM (4 keys × 910 values) does not.  We sweep the (key_space, pairs)
 grid directly with a synthetic sum-reducer workload and report the
-combine/reduce speedup surface — the same monotonic trend, parameterized."""
+combine/reduce speedup surface — the same monotonic trend, parameterized.
+
+PR 2 extends the sweep past the old one-hot VMEM envelope (K = 32768): the
+autotuned streaming flow must stay on the scatter-free one-hot fold there
+(key-blocked in the Pallas kernel path) with the paper's bytes ordering
+``stream ≤ combine < reduce`` intact — both asserted, so a regression back
+to the silent scatter fallback fails the benchmark job.  The scatter
+fallback is also timed A/B (``fold=scatter`` rows): on XLA:CPU the
+serialized scatter can win wall-clock at large K (the one-hot path pays
+O(N·K) vectorized compute) but loses the bytes/residency axis by orders of
+magnitude — the MXU trade the paper's Figs 8/9 are about.
+"""
 
 from __future__ import annotations
 
@@ -14,6 +25,12 @@ import numpy as np
 
 from benchmarks.common import bench_scale, row, time_fn
 from repro.core import MapReduce, MapReduceApp
+from repro.core import engine as eng
+from repro.roofline import hlo_parser
+
+#: the large-K config (past onehot VMEM residency) whose stream lowering
+#: and bytes ordering are asserted, per the PR 2 acceptance criteria.
+BIG_K = 32768
 
 
 def make_app(key_space, lmax):
@@ -30,25 +47,89 @@ def make_app(key_space, lmax):
     return a
 
 
+def _flow_bytes(mr, items) -> float:
+    c = mr.lower(items).compile()
+    return hlo_parser.analyze_text(c.as_text()).bytes_accessed
+
+
+def _check_large_k(app, items, mr_stream):
+    """PR 2 acceptance: at K >= 32768 the stream flow keeps the one-hot
+    fold (no scatter fallback) and stream ≤ combine < reduce bytes hold."""
+    t = mr_stream.tiling
+    assert t is not None and t.mode == "additive", (
+        f"large-K stream flow degraded to mode={getattr(t, 'mode', None)}")
+    b = {
+        "stream": _flow_bytes(mr_stream, items),
+        "combine": _flow_bytes(MapReduce(app, flow="combine"), items),
+        "reduce": _flow_bytes(MapReduce(app, flow="reduce"), items),
+    }
+    assert b["stream"] <= b["combine"] < b["reduce"], (
+        f"bytes ordering violated at K={app.key_space}: {b}")
+    return b
+
+
 def main():
     rng = np.random.default_rng(0)
     print("# paper Fig 10: speedup surface over (keys × pairs) pressure")
     scale = bench_scale()
     pair_grid = sorted({1 << 10, max(1 << 10, int((1 << 14) * scale))})
-    for K in (4, 256, 4096):
+    for K in (4, 256, 4096, BIG_K):
         for n_pairs in pair_grid:
             toks = rng.integers(0, K, size=(n_pairs // 8, 8)).astype(np.int32)
             lmax = int(np.bincount(toks.reshape(-1), minlength=K).max())
             lmax = max(8, 1 << int(np.ceil(np.log2(lmax + 1))))
             app = make_app(K, lmax)
             items = jnp.asarray(toks)
-            t_c = time_fn(lambda x: MapReduce(app).run(x).counts, items,
-                          iters=5)
+            mr_s = MapReduce(app)  # auto flow -> autotuned stream
+            t_c = time_fn(lambda x: mr_s.run(x).counts, items, iters=5)
             t_r = time_fn(
                 lambda x: MapReduce(app, flow="reduce").run(x).counts,
                 items, iters=5)
+            tiling = mr_s.tiling
             print(row(f"flow_sweep_K{K}_N{n_pairs}", t_c * 1e6,
-                      f"speedup={t_r / t_c:.2f}x"))
+                      f"speedup={t_r / t_c:.2f}x {tiling.describe()}"))
+
+        # large-K: assert the one-hot path + bytes ordering, and A/B the
+        # scatter fallback + key-blocked Pallas kernel on the small config
+        if K == BIG_K:
+            n_chk = pair_grid[0]
+            toks = rng.integers(0, K, size=(n_chk // 8, 8)).astype(np.int32)
+            app = make_app(K, 8)
+            items = jnp.asarray(toks)
+            mr_s = MapReduce(app)
+            b = _check_large_k(app, items, mr_s)
+            print(row(f"flow_sweep_K{K}_stream_bytes", b["stream"],
+                      f"combine={b['combine']:.0f} reduce={b['reduce']:.0f} "
+                      "ordering=ok"))
+
+            spec = mr_s.plan.spec
+            fold_scatter = jax.jit(lambda x: eng.run_local_stream(
+                app, spec, x, chunk_pairs=mr_s.stream_chunk_pairs,
+                fold_mode="scatter")[2])
+            t_sc = time_fn(fold_scatter, items, iters=5)
+            t_oh = time_fn(lambda x: mr_s.run(x).counts, items, iters=5)
+            print(row(f"flow_sweep_K{K}_scatterAB", t_sc * 1e6,
+                      f"onehot={t_oh * 1e6:.1f}us "
+                      f"onehot_pays={t_oh / t_sc:.1f}x_compute_on_cpu "
+                      f"bytes_win={b['reduce'] / max(b['stream'], 1):.0f}x"))
+
+            # float holders engage the fused Pallas fold kernel, whose
+            # key-block grid axis is sized against the VMEM model
+            appf = make_app(K, 8)
+            appf.value_aval = jax.ShapeDtypeStruct((), jnp.float32)
+            appf.map = lambda item, emit: emit(
+                item, jnp.ones_like(item, jnp.float32))
+            appf.reduce = lambda k, v, c: jnp.sum(v)
+            mr_k = MapReduce(appf, use_kernels=True)
+            tk = mr_k.tiling
+            assert tk.mode == "additive" and tk.blocked, (
+                "kernel path should key-block at K=32768")
+            res_k = mr_k.run(items)
+            want = np.bincount(toks.reshape(-1), minlength=K)
+            np.testing.assert_array_equal(np.asarray(res_k.values), want)
+            t_k = time_fn(lambda x: mr_k.run(x).counts, items, iters=3)
+            print(row(f"flow_sweep_K{K}_kernel_blocked", t_k * 1e6,
+                      tk.describe()))
 
 
 if __name__ == "__main__":

@@ -45,20 +45,26 @@ def main():
         app, items = apps.build(name, rng, scale=scale)
         n_pairs = _n_pairs(app, items)
         footprints = {}
+        tiling = None
         for flow in ("reduce", "combine", "stream"):
-            footprints[flow] = flow_footprint(MapReduce(app, flow=flow),
-                                              items)
+            mr = MapReduce(app, flow=flow)
+            if flow == "stream":
+                tiling = mr.tiling  # keep the model in sync with autotuning
+            footprints[flow] = flow_footprint(mr, items)
         value_bytes = int(np.dtype(app.value_aval.dtype).itemsize *
                           max(1, int(np.prod(app.value_aval.shape))))
         for flow in ("reduce", "combine", "stream"):
             f = footprints[flow]
+            chunk = tiling.chunk_pairs if flow == "stream" else None
+            kb = (tiling.key_block if flow == "stream" and tiling.blocked
+                  else None)
             model_b = analysis.mapreduce_flow_bytes(
                 flow, n_pairs=n_pairs, key_space=app.key_space,
-                value_bytes=value_bytes,
+                value_bytes=value_bytes, chunk_pairs=chunk, key_block=kb,
                 max_values_per_key=app.max_values_per_key)
             model_p = analysis.mapreduce_flow_peak_bytes(
                 flow, n_pairs=n_pairs, key_space=app.key_space,
-                value_bytes=value_bytes,
+                value_bytes=value_bytes, chunk_pairs=chunk, key_block=kb,
                 max_values_per_key=app.max_values_per_key)
             print(row(f"memory_{name}_{flow}_peak_bytes", f["peak_bytes"],
                       f"model={model_p:.0f}"))

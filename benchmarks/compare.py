@@ -1,0 +1,167 @@
+"""Diff two BENCH_*.json artifacts and fail on perf regressions.
+
+``benchmarks/run.py --json`` writes ``{scale, preset, rows, failures}``
+where each row is ``{name, us_per_call, derived}``.  This tool compares a
+current artifact against a committed baseline and exits non-zero when any
+metric regresses beyond tolerance — the CI gate that turns the per-commit
+BENCH_ci.json trajectory into an actual guard instead of an unread upload.
+
+Metric classes (by row name):
+
+* ``*bytes*`` rows carry bytes in the value field and are deterministic
+  compiled-HLO measurements -> tight default tolerance (``--bytes-rtol``).
+* everything else is wall-clock (us/call) -> generous default tolerance
+  (``--time-rtol``) plus an absolute floor (``--abs-floor-us``) so shared-
+  runner jitter on sub-millisecond rows never gates a PR; the committed
+  baseline may also come from different hardware than the runner.
+
+Rows present only in the current run are reported as NEW (not gated); rows
+missing from the current run FAIL unless ``--allow-missing`` (losing a
+benchmark is itself a regression).  ``*_FAILED`` rows and a non-empty
+``failures`` list in the current artifact always fail.
+
+Usage:
+  python benchmarks/compare.py BASELINE.json CURRENT.json \
+      [--time-rtol 3.0] [--bytes-rtol 1.2] [--abs-floor-us 2000] \
+      [--summary compare.md] [--allow-missing]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> tuple[dict[str, dict], list]:
+    with open(path) as f:
+        data = json.load(f)
+    rows = {r["name"]: r for r in data.get("rows", [])}
+    return rows, data.get("failures", [])
+
+
+def is_bytes_metric(name: str) -> bool:
+    return "bytes" in name
+
+
+def _fmt(value: float, is_bytes: bool) -> str:
+    if is_bytes:
+        return (f"{value / 1e6:.2f}MB" if value >= 1e5 else f"{value:.0f}B")
+    return f"{value:.1f}us"
+
+
+def compare(base: dict[str, dict], cur: dict[str, dict], *,
+            time_rtol: float, bytes_rtol: float, abs_floor_us: float,
+            allow_missing: bool) -> tuple[list[dict], bool]:
+    """Per-row verdicts + overall regression flag."""
+    out: list[dict] = []
+    regressed = False
+    for name in sorted(set(base) | set(cur)):
+        b, c = base.get(name), cur.get(name)
+        isb = is_bytes_metric(name)
+        rec = {"name": name, "bytes": isb}
+        if c is None:
+            rec.update(status="FAIL" if not allow_missing else "missing",
+                       note="row missing from current run")
+            regressed |= not allow_missing
+            out.append(rec)
+            continue
+        if name.endswith("_FAILED"):
+            rec.update(status="FAIL", note="benchmark module failed")
+            regressed = True
+            out.append(rec)
+            continue
+        if b is None:
+            rec.update(status="new", cur=c["us_per_call"])
+            out.append(rec)
+            continue
+        bv, cv = float(b["us_per_call"]), float(c["us_per_call"])
+        rec.update(base=bv, cur=cv)
+        if bv <= 0.0:  # ratio/info rows carry their payload in `derived`
+            rec.update(status="info")
+            out.append(rec)
+            continue
+        ratio = cv / bv
+        rec["ratio"] = ratio
+        rtol = bytes_rtol if isb else time_rtol
+        over = ratio > rtol and (isb or (cv - bv) > abs_floor_us)
+        if over:
+            rec.update(status="FAIL",
+                       note=f"{ratio:.2f}x > {rtol:.2f}x tolerance")
+            regressed = True
+        elif ratio < 1.0 / rtol:
+            rec.update(status="improved")
+        else:
+            rec.update(status="ok")
+        out.append(rec)
+    return out, regressed
+
+
+def render_markdown(verdicts: list[dict], *, title: str) -> str:
+    lines = [f"### {title}", "",
+             "| benchmark | baseline | current | Δ | status |",
+             "|---|---:|---:|---:|---|"]
+    for v in verdicts:
+        base = _fmt(v["base"], v["bytes"]) if "base" in v else "—"
+        cur = _fmt(v["cur"], v["bytes"]) if "cur" in v else "—"
+        delta = (f"{(v['ratio'] - 1.0) * 100:+.1f}%" if "ratio" in v else "—")
+        status = v["status"] + (f" ({v['note']})" if "note" in v else "")
+        mark = "❌ " if v["status"] == "FAIL" else ""
+        lines.append(f"| {v['name']} | {base} | {cur} | {delta} "
+                     f"| {mark}{status} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("current", help="fresh BENCH_*.json to gate")
+    ap.add_argument("--time-rtol", type=float, default=3.0,
+                    help="wall-clock regression tolerance (x baseline)")
+    ap.add_argument("--bytes-rtol", type=float, default=1.2,
+                    help="bytes-metric regression tolerance (x baseline)")
+    ap.add_argument("--abs-floor-us", type=float, default=2000.0,
+                    help="ignore wall-clock deltas smaller than this")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="write a markdown delta table (for the CI "
+                         "job summary)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="missing rows warn instead of failing")
+    args = ap.parse_args(argv)
+
+    base, _ = load_rows(args.baseline)
+    cur, cur_failures = load_rows(args.current)
+    verdicts, regressed = compare(
+        base, cur, time_rtol=args.time_rtol, bytes_rtol=args.bytes_rtol,
+        abs_floor_us=args.abs_floor_us, allow_missing=args.allow_missing)
+    if cur_failures:
+        regressed = True
+        verdicts.append({"name": "(modules)", "bytes": False,
+                         "status": "FAIL",
+                         "note": ", ".join(f["module"] for f in cur_failures)
+                                 + " failed"})
+
+    n_fail = sum(v["status"] == "FAIL" for v in verdicts)
+    title = (f"Benchmark comparison: "
+             f"{'REGRESSED (' + str(n_fail) + ' failing)' if regressed else 'ok'}")
+    md = render_markdown(verdicts, title=title)
+    if args.summary:
+        with open(args.summary, "w") as f:
+            f.write(md)
+    for v in verdicts:
+        if v["status"] in ("FAIL", "improved", "new", "missing"):
+            base_s = _fmt(v["base"], v["bytes"]) if "base" in v else "—"
+            cur_s = _fmt(v["cur"], v["bytes"]) if "cur" in v else "—"
+            print(f"{v['status']:>9}  {v['name']}  {base_s} -> {cur_s}"
+                  + (f"  [{v['note']}]" if "note" in v else ""))
+    ok = sum(v["status"] == "ok" for v in verdicts)
+    print(f"# {len(verdicts)} rows: {ok} ok, {n_fail} failing "
+          f"(time_rtol={args.time_rtol}x bytes_rtol={args.bytes_rtol}x "
+          f"abs_floor={args.abs_floor_us}us)")
+    return 1 if regressed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

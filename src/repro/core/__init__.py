@@ -19,5 +19,7 @@ from repro.core.combiner import (  # noqa: F401
     product_spec,
     sum_spec,
 )
+from repro.core.autotune import StreamTiling, autotune_stream  # noqa: F401
+from repro.core.collector import LoweringFallbackWarning  # noqa: F401
 from repro.core.optimizer import Derivation, derive_combiner  # noqa: F401
 from repro.core.plan import ExecutionPlan, plan_execution  # noqa: F401

@@ -29,6 +29,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as at
 from repro.core import collector as col
 from repro.core import engine as eng
 from repro.core import combiner as C
@@ -111,7 +112,14 @@ class MapReduce:
       * "reduce"  force the baseline flow (paper's un-optimized MR4J)
 
     stream_chunk_pairs bounds the emitted pairs materialized per streaming
-    chunk (peak intermediate state ≈ key_space + stream_chunk_pairs).
+    chunk (peak intermediate state ≈ key_space + stream_chunk_pairs).  The
+    default ``"auto"`` lets the roofline-driven autotuner size it (and the
+    key-block partition of the holder tables) from the analytic flow-bytes
+    and VMEM working-set models; pass an int to pin it.  stream_key_block
+    partitions the ``[K, D]`` holder tables for large key spaces
+    ("auto" / int / None to disable blocking).  autotune_probe=True adds
+    the measured micro-probe refinement on top of the model.  The decision
+    is recorded on the plan — see :meth:`explain`.
     """
 
     def __init__(
@@ -122,7 +130,9 @@ class MapReduce:
         trust_semantics: bool = False,
         combine_impl: str = "auto",
         use_kernels: bool = False,
-        stream_chunk_pairs: int = eng.DEFAULT_CHUNK_PAIRS,
+        stream_chunk_pairs: int | str = "auto",
+        stream_key_block: int | str | None = "auto",
+        autotune_probe: bool = False,
         donate: bool = False,
     ):
         if app.key_space <= 0:
@@ -131,17 +141,63 @@ class MapReduce:
         self.flow = flow
         self.combine_impl = combine_impl
         self.use_kernels = use_kernels
-        self.stream_chunk_pairs = stream_chunk_pairs
         self.plan = plan_execution(app, flow=flow,
                                    trust_semantics=trust_semantics)
+        self.tiling = None
+        key_block = None
+        if self.plan.flow == "stream":
+            self.tiling = at.autotune_stream(
+                app, self.plan.spec, use_kernels=use_kernels,
+                chunk_pairs=stream_chunk_pairs, key_block=stream_key_block,
+                probe=autotune_probe)
+            self.plan.tiling = self.tiling
+            stream_chunk_pairs = self.tiling.chunk_pairs
+            key_block = (self.tiling.key_block if self.tiling.blocked
+                         else None)
+            if self.tiling.mode == "scatter" and self.plan.spec.mxu_lowerable:
+                self.plan.diagnostics += (
+                    "stream fold degraded to exact scatter (dense budgets "
+                    "exceeded) — see tiling notes",)
+        elif not isinstance(stream_chunk_pairs, int):
+            stream_chunk_pairs = eng.DEFAULT_CHUNK_PAIRS
+        if (self.plan.flow == "combine" and self.plan.spec is not None
+                and self.plan.spec.mxu_lowerable
+                and app.key_space > col.ONEHOT_MAX_KEYS):
+            # below the legacy key-space cutoff the one-hot path holds at
+            # any pair count — nothing to flag there
+            if use_kernels:
+                self.plan.diagnostics += (
+                    f"combine flow: key_space={app.key_space} > "
+                    f"{col.ONEHOT_MAX_KEYS} exceeds the onehot_combine "
+                    f"kernel's VMEM-resident table cutoff; the collector "
+                    f"uses the exact scatter fallback "
+                    f"(LoweringFallbackWarning at trace time) — the "
+                    f"streaming flow's key-blocked fold kernel has no such "
+                    f"limit",)
+            else:
+                self.plan.diagnostics += (
+                    f"combine flow: at key_space={app.key_space} > "
+                    f"{col.ONEHOT_MAX_KEYS} the one-hot lowering holds up "
+                    f"to {col.ADDITIVE_FOLD_PAIRS_FUSED} pairs (the fused-"
+                    f"contraction regime); beyond that the collector "
+                    f"degrades to the exact scatter fallback "
+                    f"(LoweringFallbackWarning at trace time) — the "
+                    f"chunked stream flow has no such limit",)
+        self.stream_chunk_pairs = stream_chunk_pairs
         self._run = jax.jit(partial(eng.run_local, app, self.plan,
                                     combine_impl=combine_impl,
                                     use_kernels=use_kernels,
-                                    chunk_pairs=stream_chunk_pairs))
+                                    chunk_pairs=stream_chunk_pairs,
+                                    key_block=key_block))
 
     def run(self, items) -> MapReduceResult:
         keys, values, counts = self._run(items)
         return MapReduceResult(keys, values, counts, plan=self.plan)
+
+    def explain(self) -> str:
+        """The optimizer's decision record: flow, derived combiner, the
+        autotuned tiling and any lowering diagnostics."""
+        return self.plan.explain()
 
     # Lowering hooks for benchmarks / dry-run analysis.
     def lower(self, items):

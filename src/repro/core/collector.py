@@ -25,6 +25,7 @@ sentinel ``key_space`` and are dropped by out-of-bounds scatter semantics.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable
 
@@ -36,6 +37,19 @@ from jax import lax
 from repro.core import combiner as C
 
 SENTINEL = "sentinel"  # invalid-pair key == key_space
+
+#: legacy one-hot key-space cutoff for the single-shot combine flow (and
+#: the onehot_combine kernel's VMEM-resident table envelope); the default
+#: for ``combine_flow(onehot_max_keys=...)``.
+ONEHOT_MAX_KEYS = 2048
+
+
+class LoweringFallbackWarning(UserWarning):
+    """A collector lowering silently available in principle was not taken.
+
+    Emitted (at trace time, once per compilation) when an MXU-lowerable
+    combiner degrades to the exact-scatter fallback — the optimizer's plan
+    records the same decision so ``MapReduce.explain()`` shows it."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,20 +269,56 @@ def combine_flow(
     *,
     impl: str = "auto",
     onehot_fn: Callable | None = None,
-    onehot_max_keys: int = 2048,
+    onehot_max_keys: int = ONEHOT_MAX_KEYS,
 ) -> Grouped:
-    """Run the combining collector with the best available lowering."""
+    """Run the combining collector with the best available lowering.
+
+    One-hot eligibility: the legacy key-space cutoff (``K <=
+    onehot_max_keys``, where materializing the ``[N, K]`` expansion is the
+    combine flow's documented cost) — OR, new in PR 2, ANY key space while
+    the pair count stays inside the fused-contraction regime
+    (``N <= ADDITIVE_FOLD_PAIRS_FUSED``, where XLA keeps the one-hot
+    on-chip), so large-K low-N workloads no longer silently hit the
+    scatter fallback.  When neither holds, the single-shot combine flow
+    cannot keep the expansion affordable (exactly what the chunked
+    streaming flow fixes) and it degrades to scatter with a
+    :class:`LoweringFallbackWarning`.
+    """
     if impl == "auto":
+        n = stream.keys.shape[0]
+        # the fused-regime widening applies to the pure-JAX einsum only:
+        # the onehot_combine kernel has no key-block axis, so past the
+        # legacy cutoff its [K, Td] table would outgrow VMEM.
+        onehot_ok = (stream.key_space <= onehot_max_keys
+                     or (onehot_fn is None
+                         and n <= ADDITIVE_FOLD_PAIRS_FUSED))
         if spec.strategy == C.STRATEGY_SIZE:
             impl = "scatter"  # counts only; scatter path handles it
         elif spec.strategy == C.STRATEGY_FIRST:
             impl = "first"
-        elif spec.mxu_lowerable and stream.key_space <= onehot_max_keys:
+        elif spec.mxu_lowerable and onehot_ok:
             # MXU-native for additive monoids; without a Pallas kernel the
             # jnp einsum default applies — still preferable to the scatter
             # path, which XLA:CPU serializes into a per-pair while loop.
             impl = "onehot"
         elif spec.scatter_lowerable:
+            if spec.mxu_lowerable:
+                if onehot_fn is not None:
+                    reason = (f"key_space={stream.key_space} > "
+                              f"{onehot_max_keys} exceeds the "
+                              f"onehot_combine kernel's VMEM-resident "
+                              f"table cutoff")
+                else:
+                    reason = (f"key_space={stream.key_space} > "
+                              f"{onehot_max_keys} and {n} pairs exceed "
+                              f"the fused one-hot contraction regime "
+                              f"(N <= {ADDITIVE_FOLD_PAIRS_FUSED})")
+                warnings.warn(
+                    f"combine flow: {reason}; degrading to the exact "
+                    f"scatter fallback (serialized on XLA:CPU). The "
+                    f"chunked stream flow keeps large pair streams on the "
+                    f"one-hot path.",
+                    LoweringFallbackWarning, stacklevel=2)
             impl = "scatter"
         else:
             impl = "segment"
@@ -296,24 +346,59 @@ def combine_flow(
 # ---------------------------------------------------------------------------
 
 
-#: largest chunk_pairs × key_space dense expansion (one-hot / mask elements)
-#: the streaming folds may materialize per chunk (64 MB at f32).  Beyond it
-#: the collector falls back to exact scatter folds: larger-K apps keep the
-#: legacy scatter behaviour instead of regressing to an O(chunk·K) blow-up.
+#: largest chunk_pairs × key_block masked expansion (mask elements) the
+#: non-additive dense folds may materialize per chunk (64 MB at f32).  Key
+#: blocking divides the expansion — a blocked fold materializes one
+#: [chunk, key_block] mask at a time — so large-K apps stay on the dense
+#: path by shrinking the block instead of regressing to serialized scatters.
 DENSE_FOLD_ELEMS_BUDGET = 1 << 24
 
+#: largest per-fold pair count for which the pure-JAX one-hot contraction
+#: stays scatter-free AND on-chip: XLA's dot strength reduction keeps the
+#: ``[N, K]`` one-hot fused into the contraction (never materialized in
+#: HBM) while the reduction axis N is small — measured on XLA:CPU the
+#: regime holds to N≈3072 for ANY key space and breaks at N=4096, where
+#: the full expansion round-trips HBM.  The streaming flow's chunking is
+#: what keeps every fold inside this regime (the legacy combine flow
+#: cannot: it contracts all N pairs at once).  The Pallas kernels are
+#: exempt — their one-hot tile is VMEM-resident by construction.
+ADDITIVE_FOLD_PAIRS_FUSED = 2048
 
-def stream_mode(spec: C.CombinerSpec, *, dense_ok: bool = True) -> str:
-    """Pick the per-chunk fold lowering for the streaming collector."""
+
+def stream_mode(spec: C.CombinerSpec, *, dense_ok: bool = True,
+                additive_ok: bool | None = None) -> str:
+    """Pick the per-chunk fold lowering for the streaming collector.
+
+    ``dense_ok`` gates the masked-expansion folds (max/min/mul/bool);
+    ``additive_ok`` gates the one-hot matmul fold (defaults to ``dense_ok``
+    for backward compatibility — the budgets differ, see above).
+    """
+    if additive_ok is None:
+        additive_ok = dense_ok
     if spec.strategy == C.STRATEGY_SIZE:
         return "size"
     if spec.strategy == C.STRATEGY_FIRST:
         return "first"
-    if spec.mxu_lowerable and dense_ok:
+    if spec.mxu_lowerable and additive_ok:
         return "additive"
     if spec.scatter_lowerable:
         return "dense" if dense_ok else "scatter"
     return "sequential"
+
+
+def pow2_floor(x: int) -> int:
+    """Largest power of two <= max(x, 1)."""
+    return 1 << (max(int(x), 1).bit_length() - 1)
+
+
+def choose_dense_key_block(key_space: int, chunk_pairs: int | None,
+                     *, budget: int = DENSE_FOLD_ELEMS_BUDGET) -> int:
+    """Largest power-of-two key block whose ``chunk × block`` masked
+    expansion fits ``budget``; ``key_space`` itself when no blocking is
+    needed.  Floor of 8 keys (the masked fold needs a non-trivial tile)."""
+    if chunk_pairs is None or chunk_pairs * key_space <= budget:
+        return key_space
+    return pow2_floor(max(budget // max(chunk_pairs, 1), 8))
 
 
 class StreamCombiner:
@@ -342,26 +427,66 @@ class StreamCombiner:
     * first    — vectorized first-occurrence gather, kept only where the
       carried count is still zero.
     * size     — counts only.
-    * scatter  — exact ``table.at[keys].<op>`` folds, selected when
-      ``chunk_pairs × key_space`` exceeds :data:`DENSE_FOLD_ELEMS_BUDGET`
-      (large key spaces, where a dense per-chunk expansion would dominate).
+    * scatter  — exact ``table.at[keys].<op>`` folds, selected only when the
+      scatter-free lowerings cannot stay on-chip (pure-JAX additive folds:
+      ``chunk`` beyond :data:`ADDITIVE_FOLD_PAIRS_FUSED` — the Pallas
+      kernel path has no such limit; masked folds: ``chunk × key_block``
+      beyond :data:`DENSE_FOLD_ELEMS_BUDGET` at the minimum block).  Emits
+      :class:`LoweringFallbackWarning` when an MXU-lowerable spec degrades
+      this way.
     * sequential — per-pair gather/combine/write-back scan (coupled holders).
+
+    ``key_block`` partitions the ``[K, D]`` holder tables into
+    ``ceil(K / key_block)`` key blocks: the dense folds materialize (and the
+    Pallas kernels keep VMEM-resident) one block at a time, so large key
+    spaces keep the scatter-free lowerings.  ``None`` means unblocked.
+    ``mode`` forces a specific fold lowering (benchmark A/B hook).
     """
 
     def __init__(self, spec: C.CombinerSpec, key_space: int, value_aval,
                  *, fold_fn: Callable | None = None,
                  monoid_fold_fn: Callable | None = None,
-                 chunk_pairs: int | None = None):
+                 chunk_pairs: int | None = None,
+                 key_block: int | None = None,
+                 mode: str | None = None):
         self.spec = spec
         self.key_space = key_space
         self.value_aval = value_aval
         self.fold_fn = fold_fn
         self.monoid_fold_fn = monoid_fold_fn
-        self._dense_ok = (chunk_pairs is None or
-                          chunk_pairs * key_space <= DENSE_FOLD_ELEMS_BUDGET)
-        self.mode = stream_mode(spec, dense_ok=self._dense_ok)
+        if key_block is not None:
+            key_block = max(1, min(int(key_block), key_space))
+            if key_block == key_space:
+                key_block = None  # single block == unblocked
+        self.key_block = key_block
+        eff_block = key_block if key_block is not None else key_space
         holder = spec.holder_avals(value_aval)
         self._holder_leaves, self._holder_treedef = jax.tree.flatten(holder)
+        # kernel-path exemptions from the pure-JAX budgets apply only when
+        # the kernels will actually run: the fused additive kernel needs
+        # all-float holders (see _fused_acc), the monoid kernel f32 tables
+        # and add/max/min monoids (see _fold_dense's per-leaf kern_ok).
+        kernel_additive = (fold_fn is not None
+                          and spec.kernel_additive_ok(value_aval))
+        kernel_monoid = (monoid_fold_fn is not None
+                         and spec.kernel_monoid_ok(value_aval))
+        self._dense_ok = (kernel_monoid or chunk_pairs is None or
+                          chunk_pairs * eff_block <= DENSE_FOLD_ELEMS_BUDGET)
+        # the Pallas fold kernel keeps its one-hot tile VMEM-resident at any
+        # chunk size; the pure-JAX contraction stays fused (on-chip) only
+        # while the per-fold pair count is inside the fused regime.
+        additive_ok = (kernel_additive or chunk_pairs is None or
+                       chunk_pairs <= ADDITIVE_FOLD_PAIRS_FUSED)
+        self.mode = (mode if mode is not None else
+                     stream_mode(spec, dense_ok=self._dense_ok,
+                                 additive_ok=additive_ok))
+        if mode is None and spec.mxu_lowerable and self.mode == "scatter":
+            warnings.warn(
+                f"stream flow: dense fold budgets exceeded at key_space="
+                f"{key_space}, chunk_pairs={chunk_pairs}, key_block="
+                f"{eff_block}; degrading to the exact scatter fold "
+                f"(serialized on XLA:CPU). Shrink stream_chunk_pairs or the "
+                f"key block.", LoweringFallbackWarning, stacklevel=2)
 
     # -- state ---------------------------------------------------------------
 
@@ -412,11 +537,47 @@ class StreamCombiner:
         k_iota = jnp.arange(self.key_space, dtype=jnp.int32)
         return (keys[:, None] == k_iota[None, :]).astype(dtype)
 
+    def _block_lows(self) -> tuple[jax.Array, int, int]:
+        """(block starts, block size, block count) of the key-block grid."""
+        Kb = self.key_block
+        nb = -(-self.key_space // Kb)
+        return jnp.arange(nb, dtype=jnp.int32) * Kb, Kb, nb
+
+    def _blocked(self, per_block: Callable):
+        """Run ``per_block(lo) -> [Kb, ...]`` (or a pytree of such) over
+        the key-block grid and reassemble the full ``[K, ...]`` axis.
+        ``lax.map`` keeps the blocks sequential, so only one block's dense
+        expansion is live at a time — the pure-JAX mirror of the kernels'
+        key-block grid axis."""
+        lows, Kb, nb = self._block_lows()
+        blocks = lax.map(per_block, lows)  # pytree of [nb, Kb, ...]
+        return jax.tree.map(
+            lambda b: b.reshape((nb * Kb,) + b.shape[2:])[: self.key_space],
+            blocks)
+
+    def _block_hits(self, keys: jax.Array, lo: jax.Array) -> jax.Array:
+        """[n, Kb] bool hit mask of ``keys`` against block ``[lo, lo+Kb)``.
+
+        Sentinel keys (== key_space) either rebase outside ``[0, Kb)`` or
+        land in the padded tail rows that ``_blocked`` crops off."""
+        iota = jnp.arange(self.key_block, dtype=jnp.int32)
+        return (keys[:, None] - lo) == iota[None, :]
+
+    def _blocked_matmul(self, keys: jax.Array, flat: jax.Array) -> jax.Array:
+        """[K, D] per-key sums of ``flat`` rows, one key block at a time."""
+        def one(lo):
+            oh = self._block_hits(keys, lo).astype(flat.dtype)
+            return jnp.einsum("nk,nd->kd", oh, flat)
+        return self._blocked(one)
+
     def _chunk_counts(self, stream: PairStream) -> jax.Array:
-        if self._dense_ok:
-            return jnp.sum(self._onehot(stream.keys, jnp.int32), axis=0)
-        return jnp.zeros((self.key_space,), jnp.int32).at[stream.keys].add(
-            stream.valid.astype(jnp.int32), mode="drop")
+        if not self._dense_ok:
+            return jnp.zeros((self.key_space,), jnp.int32).at[stream.keys].add(
+                stream.valid.astype(jnp.int32), mode="drop")
+        if self.key_block is not None:
+            ones = stream.valid.astype(jnp.int32)[:, None]
+            return self._blocked_matmul(stream.keys, ones)[:, 0]
+        return jnp.sum(self._onehot(stream.keys, jnp.int32), axis=0)
 
     def fold_chunk(self, state, stream: PairStream):
         assert stream.key_space == self.key_space
@@ -468,28 +629,42 @@ class StreamCombiner:
         def onehot(dtype):
             return jax.nn.one_hot(stream.keys, self.key_space, dtype=dtype)
 
+        def delta_of(flat):
+            if self.key_block is not None:  # key-blocked contraction
+                return self._blocked_matmul(stream.keys, flat)
+            return jnp.einsum("nk,nd->kd", onehot(flat.dtype), flat)
+
+        # Deliberately one contraction per holder leaf plus one for the
+        # counts — NOT a single concatenated [n, ΣD+1] matrix like the
+        # fused kernel's accumulator: XLA:CPU's dot strength reduction
+        # keeps a matvec-shaped (D=1) one-hot contraction fused/on-chip,
+        # while a concatenated D>=2 matmat materializes the whole
+        # [chunk, K] one-hot in HBM (measured: 0.014 MB vs 4.2 MB at
+        # K=512, chunk=1024).  Integer channels also need their own
+        # dtype's exact contraction.
         out = []
         for tab, chan in zip(jax.tree.leaves(tables),
                              jax.tree.leaves(mapped)):
             acc_dt = (tab.dtype if jnp.issubdtype(tab.dtype, jnp.integer)
                       else jnp.float32)
             flat = chan.reshape(n, -1).astype(acc_dt)
-            delta = jnp.einsum("nk,nd->kd", onehot(acc_dt),
-                               flat).reshape(tab.shape)
+            delta = delta_of(flat).reshape(tab.shape)
             out.append(tab + delta.astype(tab.dtype))
         tables = jax.tree.unflatten(self._holder_treedef, out)
-        counts = counts + jnp.einsum(
-            "nk,n->k", onehot(jnp.int32),
-            stream.valid.astype(jnp.int32))
+        counts = counts + delta_of(
+            stream.valid.astype(jnp.int32)[:, None])[:, 0]
         return tables, counts
 
     def _fold_dense(self, tables, counts, stream: PairStream):
         mapped = _premap_stream(self.spec, stream.values)
         chans = jax.tree.leaves(mapped)
         tabs = jax.tree.leaves(tables)
-        oh = self._onehot(stream.keys, jnp.bool_)
-        out = []
-        for mono, tab, chan in zip(self.spec.monoids, tabs, chans):
+        blocked = self.key_block is not None
+        out: list = [None] * len(tabs)
+        pending = []  # (slot, monoid, masked_reduce) for one shared sweep
+
+        for i, (mono, tab, chan) in enumerate(zip(self.spec.monoids, tabs,
+                                                  chans)):
             kern_ok = (self.monoid_fold_fn is not None
                        and tab.dtype == jnp.float32
                        and mono.name in ("add", "max", "min"))
@@ -498,22 +673,45 @@ class StreamCombiner:
                 red = self.monoid_fold_fn(
                     stream.keys, chan.reshape(n, -1).astype(jnp.float32),
                     tab.reshape(self.key_space, -1), mono.name)
-                out.append(red.reshape(tab.shape).astype(tab.dtype))
+                out[i] = red.reshape(tab.shape).astype(tab.dtype)
                 continue
-            ident = mono.identity(chan.dtype)
-            bshape = oh.shape + (1,) * (chan.ndim - 1)
-            masked = jnp.where(oh.reshape(bshape), chan[:, None], ident)
-            red = mono.dense_reduce(masked, axis=0)
-            out.append(mono.op(tab, red.astype(tab.dtype)))
+
+            def masked_reduce(hits, chan=chan, mono=mono,
+                              ident=mono.identity(chan.dtype)):
+                bshape = hits.shape + (1,) * (chan.ndim - 1)
+                masked = jnp.where(hits.reshape(bshape), chan[:, None], ident)
+                return mono.dense_reduce(masked, axis=0)
+
+            pending.append((i, mono, masked_reduce))
+
+        # one hit-mask pass serves every pending leaf AND the counts (the
+        # blocked sweep builds each [chunk, key_block] mask exactly once —
+        # separate lax.map calls cannot be CSE'd by XLA)
+        if blocked:
+            def per_block(lo):
+                hits = self._block_hits(stream.keys, lo)
+                return (tuple(mr(hits) for _, _, mr in pending),
+                        jnp.sum(hits, axis=0, dtype=jnp.int32))
+            reds, cnt = self._blocked(per_block)
+        else:
+            oh = self._onehot(stream.keys, jnp.bool_)
+            reds = tuple(mr(oh) for _, _, mr in pending)
+            cnt = jnp.sum(oh, axis=0, dtype=jnp.int32)
+        for (i, mono, _), red in zip(pending, reds):
+            out[i] = mono.op(tabs[i], red.astype(tabs[i].dtype))
         tables = jax.tree.unflatten(self._holder_treedef, out)
-        counts = counts + jnp.sum(oh, axis=0, dtype=jnp.int32)
-        return tables, counts
+        return tables, counts + cnt
 
     def _fold_first(self, tables, counts, stream: PairStream):
         n = stream.keys.shape[0]
         mapped = _premap_stream(self.spec, stream.values)
         pos = jnp.arange(n, dtype=jnp.int32)
-        if self._dense_ok:
+        if self._dense_ok and self.key_block is not None:
+            first_pos = self._blocked(
+                lambda lo: jnp.min(jnp.where(
+                    self._block_hits(stream.keys, lo), pos[:, None], n),
+                    axis=0))
+        elif self._dense_ok:
             oh = self._onehot(stream.keys, jnp.bool_)
             first_pos = jnp.min(jnp.where(oh, pos[:, None], n), axis=0)
         else:  # large key space: scatter-min of arrival order (exact)

@@ -174,6 +174,39 @@ class CombinerSpec:
         """Shape/dtype of the holder for a given value aval."""
         return jax.eval_shape(lambda v: self.init(v), value_aval)
 
+    def holder_width(self, value_aval: PyTree) -> tuple[int, int]:
+        """(flattened holder elems per key, holder bytes per key).
+
+        The streaming autotuner sizes the key-block grid and the chunk
+        balance from these (the fused fold's accumulator width is
+        ``elems + 1`` for the counts column)."""
+        leaves = jax.tree.leaves(self.holder_avals(value_aval))
+        elems = sum(int(np.prod(l.shape)) for l in leaves)
+        nbytes = sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                     for l in leaves)
+        return max(elems, 1), nbytes
+
+    def kernel_additive_ok(self, value_aval: PyTree) -> bool:
+        """Whether the fused additive Pallas fold can carry this spec's
+        holders: the kernel accumulates one f32 matrix, so it is exact
+        only for float holders (integer tables take the per-leaf path,
+        which adds exact per-chunk deltas in the holder's own dtype).
+        Callers AND this with the kernel actually being supplied."""
+        return self.mxu_lowerable and all(
+            jnp.issubdtype(l.dtype, jnp.floating)
+            for l in jax.tree.leaves(self.holder_avals(value_aval)))
+
+    def kernel_monoid_ok(self, value_aval: PyTree) -> bool:
+        """Whether the chunk monoid-fold Pallas kernel can carry this
+        spec's holders (f32 tables, add/max/min monoids on every leaf).
+        Callers AND this with the kernel actually being supplied."""
+        return (self.monoids is not None and len(self.monoids) > 0
+                and all(m.name in ("add", "max", "min")
+                        for m in self.monoids)
+                and all(l.dtype == jnp.float32
+                        for l in jax.tree.leaves(
+                            self.holder_avals(value_aval))))
+
     def init_tables(self, key_space: int, value_aval: PyTree) -> tuple[PyTree, jax.Array]:
         """Identity-initialized dense holder tables ``[K, *holder]`` + counts.
 

@@ -131,33 +131,46 @@ def _onehot_kernel(use_kernels: bool) -> Callable | None:
     return ops.onehot_combine
 
 
-def _fold_kernels(use_kernels: bool) -> tuple[Callable | None, Callable | None]:
-    """(additive fold_fn, monoid_fold_fn) for the streaming collector."""
+def _fold_kernels(use_kernels: bool, key_block: int | None = None
+                  ) -> tuple[Callable | None, Callable | None]:
+    """(additive fold_fn, monoid_fold_fn) for the streaming collector.
+
+    ``key_block`` binds the kernels' key-block grid axis (None lets the
+    kernel wrapper auto-size the block against the VMEM budget)."""
     if not use_kernels:
         return None, None
     from repro.kernels import ops
 
-    return ops.onehot_fold, ops.chunk_monoid_fold
+    return (partial(ops.onehot_fold, block_k=key_block),
+            partial(ops.chunk_monoid_fold, block_k=key_block))
 
 
 #: default bound on emitted pairs materialized per streaming chunk.  While
 #: the whole pair buffer fits this budget the flow degenerates to a single
 #: fully-fused chunk (XLA keeps the pairs out of HBM on its own at that
 #: size); beyond it, chunking bounds peak intermediate state at the cost of
-#: re-touching the O(K) tables once per chunk.
-DEFAULT_CHUNK_PAIRS = 4096
+#: re-touching the O(K) tables once per chunk.  Tied to the fused
+#: one-hot-contraction regime so the non-autotuned entry points
+#: (run_distributed, direct stream_local_tables callers) keep the additive
+#: fold on its scatter-free fused path by default.
+DEFAULT_CHUNK_PAIRS = col.ADDITIVE_FOLD_PAIRS_FUSED
 
 
 def _stream_combiner(app, spec, *, use_kernels=False,
-                     chunk_pairs: int | None = None) -> col.StreamCombiner:
-    fold_fn, monoid_fold_fn = _fold_kernels(use_kernels)
+                     chunk_pairs: int | None = None,
+                     key_block: int | None = None,
+                     fold_mode: str | None = None) -> col.StreamCombiner:
+    fold_fn, monoid_fold_fn = _fold_kernels(use_kernels, key_block)
     return col.StreamCombiner(spec, app.key_space, app.value_aval,
                               fold_fn=fold_fn, monoid_fold_fn=monoid_fold_fn,
-                              chunk_pairs=chunk_pairs)
+                              chunk_pairs=chunk_pairs, key_block=key_block,
+                              mode=fold_mode)
 
 
 def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
-                        use_kernels: bool = False):
+                        use_kernels: bool = False,
+                        key_block: int | None = None,
+                        fold_mode: str | None = None):
     """Fused map+combine over ``items``: chunked scan, holder-table carry.
 
     Splits the item axis into chunks of ~``chunk_pairs`` emitted pairs, runs
@@ -174,8 +187,16 @@ def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PA
     cap = max(app.emit_capacity, 1)
     chunk_items = max(1, min(n_items, chunk_pairs // cap))
     n_chunks = -(-n_items // chunk_items)
+    if (n_chunks <= 1 and key_block is not None and not use_kernels
+            and spec.mxu_lowerable
+            and n_items * cap <= col.ADDITIVE_FOLD_PAIRS_FUSED):
+        # single-shot fold inside the fused-contraction regime: there is no
+        # scan body to blow up, and the unblocked contraction stays on-chip
+        # — blocking would only re-read the pairs once per block.
+        key_block = None
     sc = _stream_combiner(app, spec, use_kernels=use_kernels,
-                          chunk_pairs=chunk_items * cap)
+                          chunk_pairs=chunk_items * cap,
+                          key_block=key_block, fold_mode=fold_mode)
 
     state = sc.init_state()
     if n_chunks <= 1:
@@ -206,19 +227,23 @@ def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PA
 
 
 def run_local_stream(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
-                     use_kernels: bool = False):
+                     use_kernels: bool = False, key_block: int | None = None,
+                     fold_mode: str | None = None):
     tables, counts = stream_local_tables(
-        app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels)
+        app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels,
+        key_block=key_block, fold_mode=fold_mode)
     grouped = col.finalize_tables(spec, tables, counts, app.key_space)
     return grouped.keys, grouped.values, grouped.counts
 
 
 def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
-              chunk_pairs: int = DEFAULT_CHUNK_PAIRS):
+              chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
+              key_block: int | None = None):
     if plan.flow == "stream":
         return run_local_stream(app, plan.spec, items,
                                 chunk_pairs=chunk_pairs,
-                                use_kernels=use_kernels)
+                                use_kernels=use_kernels,
+                                key_block=key_block)
     stream = map_phase(app, items)
     if plan.flow == "combine":
         grouped = col.combine_flow(
@@ -314,14 +339,14 @@ def _combine_shard_fn(app, spec, *, combine_impl, use_kernels, axis_name,
 
 
 def _stream_shard_fn(app, spec, *, use_kernels, axis_name, scatter,
-                     chunk_pairs):
+                     chunk_pairs, key_block=None):
     """Streaming flow per shard: chunked local fold, then the same O(K)
     monoid collectives as the legacy combine flow."""
 
     def fn(local_items):
         tables, counts = stream_local_tables(
             app, spec, local_items, chunk_pairs=chunk_pairs,
-            use_kernels=use_kernels)
+            use_kernels=use_kernels, key_block=key_block)
         return _merge_shard_tables(app, spec, tables, counts,
                                    axis_name=axis_name, scatter=scatter)
 
@@ -439,6 +464,7 @@ def run_distributed(
     scatter_output: bool = False,
     shuffle_capacity: int | None = None,
     chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
+    key_block: int | None = None,
 ):
     """shard_map the chosen flow over ``data_axis`` of ``mesh``.
 
@@ -454,7 +480,8 @@ def run_distributed(
         if plan.flow == "stream":
             fn = _stream_shard_fn(app, plan.spec, use_kernels=use_kernels,
                                   axis_name=data_axis, scatter=scatter_output,
-                                  chunk_pairs=chunk_pairs)
+                                  chunk_pairs=chunk_pairs,
+                                  key_block=key_block)
         else:
             fn = _combine_shard_fn(app, plan.spec, combine_impl=combine_impl,
                                    use_kernels=use_kernels,

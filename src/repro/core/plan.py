@@ -24,11 +24,40 @@ class ExecutionPlan:
     derivation: Derivation | None
     spec: C.CombinerSpec | None
     reason: str = ""
+    #: the autotuner's StreamTiling when the streaming flow was selected
+    #: (attached by the API layer, which owns the tiling knobs).
+    tiling: object | None = None
+    #: human-readable optimizer/lowering decisions worth surfacing — e.g.
+    #: the one-hot -> scatter fallback that used to happen silently.
+    diagnostics: tuple[str, ...] = ()
 
     @property
     def optimized(self) -> bool:
         """True when a derived/manual combiner replaced the baseline flow."""
         return self.flow in ("stream", "combine")
+
+    def explain(self) -> str:
+        """Multi-line report of what the optimizer decided and why —
+        flow, derivation, the autotuned tiling, and any lowering
+        diagnostics (the paper's §3.2 decision, made inspectable)."""
+        lines = [f"flow: {self.flow} ({self.reason})"]
+        d = self.derivation
+        if d is not None:
+            v = "validated" if d.validated else "trusted"
+            lines.append(f"combiner: {d.strategy}"
+                         + (f" [{self.spec.describe}] ({v})"
+                            if self.spec is not None else "")
+                         + (f" — {d.failure}" if d.failure else ""))
+            lines.append(f"optimizer: detect={d.detect_s * 1e6:.0f}us "
+                         f"transform={d.transform_s * 1e3:.2f}ms "
+                         f"validate={d.validate_s * 1e3:.2f}ms")
+        if self.tiling is not None:
+            lines.append(f"tiling: {self.tiling.describe()}")
+            for note in getattr(self.tiling, "notes", ()):
+                lines.append(f"  - {note}")
+        for diag in self.diagnostics:
+            lines.append(f"diagnostic: {diag}")
+        return "\n".join(lines)
 
 
 def plan_execution(app, *, flow: str = "auto",

@@ -39,13 +39,16 @@ def _kernel(keys_ref, vals_ref, out_ref, *, key_space: int, n_tiles: int):
         preferred_element_type=jnp.float32)
 
 
-def _fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, key_space: int):
+def _fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, block_k: int):
     """Grid-accumulated ``acc + one_hot(keys)ᵀ @ vals`` — the streaming
-    collector's per-chunk fold.  The accumulator block is loaded into the
-    VMEM-resident output on the first pair tile and the chunk's tiles are
-    accumulated on top, so the carried holder table round-trips HBM once per
-    chunk (not per tile) and the one-hot never leaves VMEM."""
-    i = pl.program_id(1)  # innermost: pair-stream tile index
+    collector's per-chunk fold, over a key-block grid axis.  The accumulator
+    block is loaded into the VMEM-resident output on the first pair tile and
+    the chunk's tiles are accumulated on top, so each carried holder-table
+    block round-trips HBM once per chunk (not per tile) and the one-hot
+    never leaves VMEM.  Keys are rebased into the current key block; keys
+    outside it (and sentinels) produce all-zero one-hot rows."""
+    b = pl.program_id(0)  # outermost: key-block index
+    i = pl.program_id(2)  # innermost: pair-stream tile index
 
     @pl.when(i == 0)
     def _init():
@@ -53,15 +56,16 @@ def _fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, key_space: int):
 
     keys = keys_ref[...]  # [Tn] int32
     vals = vals_ref[...]  # [Tn, Td] f32
-    k_iota = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], key_space), 1)
-    onehot = (keys[:, None] == k_iota).astype(vals.dtype)  # [Tn, K]
+    local = keys - b * block_k  # rebased: hits only within [0, block_k)
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], block_k), 1)
+    onehot = (local[:, None] == k_iota).astype(vals.dtype)  # [Tn, Kb]
     out_ref[...] += jax.lax.dot_general(
         onehot, vals, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("key_space", "tile_n", "tile_d",
-                                             "interpret"))
+                                             "block_k", "interpret"))
 def onehot_fold(
     keys: jax.Array,
     values: jax.Array,
@@ -70,35 +74,48 @@ def onehot_fold(
     *,
     tile_n: int = 512,
     tile_d: int = 128,
+    block_k: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:
-    """[N] keys, [N, D] values, [K, D] acc -> acc + per-key sums (f32)."""
+    """[N] keys, [N, D] values, [K, D] acc -> acc + per-key sums (f32).
+
+    ``block_k`` partitions the key space into ``ceil(K / block_k)`` grid
+    blocks so only one ``[block_k, Td]`` table block (plus its one-hot tile)
+    is VMEM-resident per step — the large-K form of the fold.  ``None``
+    keeps the whole key space in one block."""
     n, d = values.shape
     tile_n = min(tile_n, max(n, 8))
     tile_d = min(tile_d, d)
+    if block_k is None or block_k >= key_space:
+        block_k = key_space
+    n_blocks = -(-key_space // block_k)
+    pad_k = n_blocks * block_k - key_space
 
     pad_n = (-n) % tile_n
     pad_d = (-d) % tile_d
     keys_p = jnp.pad(keys, (0, pad_n), constant_values=key_space)
     vals_p = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
-    acc_p = jnp.pad(acc.astype(jnp.float32), ((0, 0), (0, pad_d)))
+    acc_p = jnp.pad(acc.astype(jnp.float32), ((0, pad_k), (0, pad_d)))
     np_, dp = vals_p.shape
     n_tiles = np_ // tile_n
 
-    grid = (dp // tile_d, n_tiles)  # N innermost: table tile stays resident
+    # N innermost: the (key-block, d) table tile stays resident across the
+    # whole pair stream; the key-block axis is outermost so each block's
+    # accumulator is initialized exactly once.
+    grid = (n_blocks, dp // tile_d, n_tiles)
     out = pl.pallas_call(
-        functools.partial(_fold_kernel, key_space=key_space),
+        functools.partial(_fold_kernel, block_k=block_k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((tile_n,), lambda j, i: (i,)),
-            pl.BlockSpec((tile_n, tile_d), lambda j, i: (i, j)),
-            pl.BlockSpec((key_space, tile_d), lambda j, i: (0, j)),
+            pl.BlockSpec((tile_n,), lambda b, j, i: (i,)),
+            pl.BlockSpec((tile_n, tile_d), lambda b, j, i: (i, j)),
+            pl.BlockSpec((block_k, tile_d), lambda b, j, i: (b, j)),
         ],
-        out_specs=pl.BlockSpec((key_space, tile_d), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((key_space, dp), jnp.float32),
+        out_specs=pl.BlockSpec((block_k, tile_d), lambda b, j, i: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block_k, dp), jnp.float32),
         interpret=interpret,
     )(keys_p, vals_p, acc_p)
-    return out[:, :d]
+    return out[:key_space, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("key_space", "tile_n", "tile_d",

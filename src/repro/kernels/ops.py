@@ -7,6 +7,8 @@ and False on real TPU, where the Mosaic pipeline compiles the same kernel).
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +26,34 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _interpret_default() -> bool:
+    """interpret-mode default: JAX_PALLAS_INTERPRET env override (the CI
+    kernel job sets it to 1), else interpret everywhere but real TPU."""
+    env = os.environ.get("JAX_PALLAS_INTERPRET", "").strip().lower()
+    if env:
+        return env not in ("0", "false", "no")
+    return not _on_tpu()
+
+
+def _pow2_floor(x: int) -> int:
+    return 1 << (max(int(x), 1).bit_length() - 1)
+
+
+def auto_key_block(key_space: int, *, d: int = 1, tile_n: int = 512,
+                   tile_d: int = 128, budget: int = VMEM_BUDGET) -> int:
+    """Largest power-of-two key block whose fold working set fits ``budget``.
+
+    Per grid step the one-hot fold keeps a ``[Kb, Td]`` table block, a
+    ``[Tn, Kb]`` one-hot tile, and a ``[Tn, Td]`` value tile resident (f32);
+    half the budget is reserved for the pipeline's double buffers.  Returns
+    ``key_space`` when the whole table fits (no blocking needed)."""
+    td = min(tile_d, max(d, 1))
+    usable = budget // 2 // 4 - tile_n * td  # f32 elems for the Kb terms
+    blk = max(usable // (td + tile_n), 8)
+    blk = _pow2_floor(blk)
+    return key_space if blk >= key_space else blk
+
+
 def onehot_combine(keys, values, key_space, *, tile_n=512, tile_d=128,
                    interpret=None):
     """Additive combine via MXU one-hot matmul. [N],[N,D] -> [K,D] f32."""
@@ -35,19 +65,23 @@ def onehot_combine(keys, values, key_space, *, tile_n=512, tile_d=128,
         raise ValueError(
             f"key_space {key_space} too large for VMEM-resident table; use "
             "combine_scatter with key blocking or the jnp scatter path")
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _interpret_default() if interpret is None else interpret
     return _oc.onehot_combine(keys, values, key_space, tile_n=tile_n,
                               tile_d=tile_d, interpret=interpret)
 
 
 def onehot_fold(keys, values, acc, key_space=None, *, tile_n=512, tile_d=128,
-                interpret=None):
+                block_k=None, interpret=None):
     """Streaming-chunk additive fold: ``acc + one_hot(keys)ᵀ @ values``.
 
     [N] keys, [N, D] values, [K, D] f32 acc -> [K, D] f32.  The carried
     holder table round-trips HBM once per chunk; the one-hot tile lives in
     VMEM only (grid accumulation).  Signature matches the streaming
     collector's ``fold_fn(keys, mat, acc)`` when ``key_space`` is omitted.
+
+    ``block_k`` adds a key-block grid axis so only one ``[block_k, Td]``
+    table block is VMEM-resident per step; ``None`` auto-sizes it against
+    :data:`VMEM_BUDGET` (``key_space`` itself when the whole table fits).
     """
     if values.ndim != 2:
         raise ValueError("values must be [N, D]")
@@ -59,26 +93,31 @@ def onehot_fold(keys, values, acc, key_space=None, *, tile_n=512, tile_d=128,
     n, d = values.shape
     if n == 0:  # empty chunk: nothing to fold
         return acc.astype(jnp.float32)
-    # VMEM residents per grid step: the [K, Td] table block, the [Tn, K]
-    # one-hot temp, and the [Tn, Td] value tile
     tn, td = min(tile_n, max(n, 8)), min(tile_d, d)
-    step_bytes = (key_space * td + tn * key_space + tn * td) * 4
+    if block_k is None:
+        block_k = auto_key_block(key_space, d=d, tile_n=tn, tile_d=td)
+    block_k = min(block_k, key_space)
+    # VMEM residents per grid step: the [Kb, Td] table block, the [Tn, Kb]
+    # one-hot temp, and the [Tn, Td] value tile
+    step_bytes = (block_k * td + tn * block_k + tn * td) * 4
     if step_bytes > VMEM_BUDGET:
         raise ValueError(
-            f"key_space {key_space} too large for VMEM-resident fold "
-            f"(needs {step_bytes} bytes/step); shrink the chunk or use the "
-            "pure-JAX streaming fold")
-    interpret = (not _on_tpu()) if interpret is None else interpret
+            f"key block {block_k} too large for VMEM-resident fold "
+            f"(needs {step_bytes} bytes/step); shrink block_k or the chunk")
+    interpret = _interpret_default() if interpret is None else interpret
     return _oc.onehot_fold(keys, values, acc, key_space, tile_n=tile_n,
-                           tile_d=tile_d, interpret=interpret)
+                           tile_d=tile_d, block_k=block_k,
+                           interpret=interpret)
 
 
 def chunk_monoid_fold(keys, values, acc, op="add", *, tile_n=256,
-                      interpret=None):
+                      block_k=None, interpret=None):
     """Streaming-chunk monoid fold of an UNSORTED pair tile into [K, D] acc.
 
     Signature matches the streaming collector's
     ``monoid_fold_fn(keys, mat, acc, op)``; key space is taken from acc.
+    ``block_k`` adds the same key-block grid axis as :func:`onehot_fold`
+    (``None`` auto-sizes against the VMEM budget).
     """
     if values.ndim != 2:
         raise ValueError("values must be [N, D]")
@@ -86,19 +125,25 @@ def chunk_monoid_fold(keys, values, acc, op="add", *, tile_n=256,
     n, d = values.shape
     if n == 0:  # empty chunk: nothing to fold
         return acc.astype(jnp.float32)
-    # VMEM residents per grid step: the full [K, D] table, the [Tn, K] hit
-    # mask, and (max/min) the [Tn, K, D] masked expansion
     tn = min(tile_n, max(n, 8))
-    step_elems = key_space * d + tn * key_space
+    if block_k is None:
+        # residents per step: [Kb, D] block + [Tn, Kb] mask + (max/min) the
+        # [Tn, Kb, D] masked expansion
+        per_key = d + tn + (tn * d if op != "add" else 0)
+        usable = VMEM_BUDGET // 2 // 4
+        block_k = _pow2_floor(max(usable // per_key, 8))
+    block_k = min(block_k, key_space)
+    step_elems = block_k * d + tn * block_k
     if op != "add":
-        step_elems += tn * key_space * d
+        step_elems += tn * block_k * d
     if step_elems * 4 > VMEM_BUDGET:
         raise ValueError(
-            f"holder table/mask too large for VMEM residency "
-            f"({step_elems * 4} bytes/step); use the pure-JAX streaming fold")
-    interpret = (not _on_tpu()) if interpret is None else interpret
+            f"holder block/mask too large for VMEM residency "
+            f"({step_elems * 4} bytes/step); shrink block_k or the chunk")
+    interpret = _interpret_default() if interpret is None else interpret
     return _sr.chunk_monoid_fold(keys, values, acc, key_space, op,
-                                 tile_n=tile_n, interpret=interpret)
+                                 tile_n=tile_n, block_k=block_k,
+                                 interpret=interpret)
 
 
 def combine_scatter(keys, values, key_space, op="add", *, tile_n=256,
@@ -106,7 +151,7 @@ def combine_scatter(keys, values, key_space, op="add", *, tile_n=256,
     """General monoid combine (masked broadcast update). -> [K, D] f32."""
     if values.ndim != 2:
         raise ValueError("values must be [N, D]")
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _interpret_default() if interpret is None else interpret
     return _cs.combine_scatter(keys, values, key_space, op, tile_n=tile_n,
                                interpret=interpret)
 
@@ -119,7 +164,7 @@ def segment_reduce(sorted_keys, sorted_values, key_space, op="add", *,
     >= the max in-tile key spread (dynamic data -> computed on host if the
     keys are concrete, else full key space).
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _interpret_default() if interpret is None else interpret
     if block_k is None:
         try:  # concrete keys: exploit sorted locality
             ks = np.asarray(sorted_keys)
@@ -159,7 +204,7 @@ def flash_decode(q, k, v, kv_len, *, tile_s=512, interpret=None):
     _, S, Hkv, _ = k.shape
     if H % Hkv:
         raise ValueError("H must be a multiple of Hkv (GQA)")
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = _interpret_default() if interpret is None else interpret
     # keep K/V tile + holder within VMEM
     while tile_s * D * 4 * 2 + (H // Hkv) * (D + 2) * 4 > VMEM_BUDGET:
         tile_s //= 2

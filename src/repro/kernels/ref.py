@@ -21,20 +21,60 @@ def onehot_combine(keys: jax.Array, values: jax.Array, key_space: int) -> jax.Ar
     return jnp.einsum("nk,nd->kd", oh, values.astype(jnp.float32))
 
 
+def _blocked_kd(per_block, key_space: int, block_k: int) -> jax.Array:
+    """Assemble a [K, ...] table from ``per_block(lo) -> [block_k, ...]``
+    ran sequentially over the key-block grid — the pure-JAX mirror of the
+    kernels' key-block grid axis (one block's dense expansion live at a
+    time)."""
+    n_blocks = -(-key_space // block_k)
+    lows = jnp.arange(n_blocks, dtype=jnp.int32) * block_k
+    blocks = jax.lax.map(per_block, lows)
+    return blocks.reshape((n_blocks * block_k,) + blocks.shape[2:])[:key_space]
+
+
 def onehot_fold(keys: jax.Array, values: jax.Array, acc: jax.Array,
-                key_space: int | None = None) -> jax.Array:
-    """Streaming-chunk additive fold: ``acc + one_hot(keys)ᵀ @ values``."""
+                key_space: int | None = None,
+                block_k: int | None = None) -> jax.Array:
+    """Streaming-chunk additive fold: ``acc + one_hot(keys)ᵀ @ values``.
+
+    ``block_k`` computes the per-key sums one key block at a time (same
+    result; bounds the live one-hot to ``[N, block_k]``)."""
     if key_space is None:
         key_space = acc.shape[0]
-    return acc.astype(jnp.float32) + onehot_combine(keys, values, key_space)
+    if block_k is None or block_k >= key_space:
+        return (acc.astype(jnp.float32)
+                + onehot_combine(keys, values, key_space))
+    iota = jnp.arange(block_k, dtype=jnp.int32)
+
+    def one(lo):
+        oh = ((keys[:, None] - lo) == iota[None, :]).astype(jnp.float32)
+        return jnp.einsum("nk,nd->kd", oh, values.astype(jnp.float32))
+
+    return acc.astype(jnp.float32) + _blocked_kd(one, key_space, block_k)
 
 
 def chunk_monoid_fold(keys: jax.Array, values: jax.Array, acc: jax.Array,
-                      op: str = "add") -> jax.Array:
-    """Monoid fold of an unsorted chunk into the carried [K, D] table."""
-    chunk = combine_scatter(keys, values, acc.shape[0], op)
+                      op: str = "add",
+                      block_k: int | None = None) -> jax.Array:
+    """Monoid fold of an unsorted chunk into the carried [K, D] table.
+
+    ``block_k`` reduces the chunk one key block at a time (same result)."""
     f = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op]
-    return f(acc.astype(jnp.float32), chunk)
+    key_space = acc.shape[0]
+    if block_k is None or block_k >= key_space:
+        chunk = combine_scatter(keys, values, key_space, op)
+        return f(acc.astype(jnp.float32), chunk)
+    ident = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}[op]
+    red = {"add": jnp.sum, "max": jnp.max, "min": jnp.min}[op]
+    iota = jnp.arange(block_k, dtype=jnp.int32)
+    vals = values.astype(jnp.float32)
+
+    def one(lo):
+        hit = (keys[:, None] - lo) == iota[None, :]  # [N, Kb]
+        masked = jnp.where(hit[:, :, None], vals[:, None, :], ident)
+        return red(masked, axis=0)  # [Kb, D]
+
+    return f(acc.astype(jnp.float32), _blocked_kd(one, key_space, block_k))
 
 
 def combine_scatter(keys: jax.Array, values: jax.Array, key_space: int,

@@ -64,13 +64,15 @@ def _kernel(block_ids_ref, keys_ref, vals_ref, out_ref, *, block_k: int,
 
 
 def _chunk_fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, op: str,
-                       key_space: int):
+                       block_k: int):
     """Streaming-flow chunk fold for non-additive monoids: an UNSORTED pair
-    tile is masked against the whole key iota and monoid-reduced into the
-    VMEM-resident [K, D] table (loaded from the carried accumulator on the
-    first tile).  Complements ``segment_reduce``, which needs a key-sorted
-    stream; chunk streams arrive in emission order."""
-    i = pl.program_id(0)
+    tile is masked against the current key block's iota and monoid-reduced
+    into the VMEM-resident [Kb, D] table block (loaded from the carried
+    accumulator on the first tile).  Complements ``segment_reduce``, which
+    needs a key-sorted stream; chunk streams arrive in emission order.  The
+    key-block grid axis (outermost) bounds VMEM residency for large K."""
+    b = pl.program_id(0)  # outermost: key-block index
+    i = pl.program_id(1)  # innermost: pair-stream tile index
 
     @pl.when(i == 0)
     def _init():
@@ -79,8 +81,9 @@ def _chunk_fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, op: str,
     ident = jnp.float32(_IDENT[op])
     keys = keys_ref[...]  # [Tn] int32, unsorted, sentinel == key_space
     vals = vals_ref[...]  # [Tn, D] f32
-    k_iota = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], key_space), 1)
-    hit = (keys[:, None] == k_iota)  # sentinel/padding -> no hit
+    local = keys - b * block_k  # rebased; out-of-block/sentinel -> no hit
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], block_k), 1)
+    hit = (local[:, None] == k_iota)
 
     if op == "add":
         onehot = hit.astype(vals.dtype)
@@ -95,7 +98,7 @@ def _chunk_fold_kernel(keys_ref, vals_ref, acc_ref, out_ref, *, op: str,
 
 
 @functools.partial(jax.jit, static_argnames=("key_space", "op", "tile_n",
-                                             "interpret"))
+                                             "block_k", "interpret"))
 def chunk_monoid_fold(
     keys: jax.Array,
     values: jax.Array,
@@ -104,32 +107,44 @@ def chunk_monoid_fold(
     op: str = "add",
     *,
     tile_n: int = 256,
+    block_k: int | None = None,
     interpret: bool = True,
 ) -> jax.Array:
     """Unsorted [N] keys + [N, D] values folded into [K, D] acc (f32).
 
     ``acc`` rows for keys absent from the chunk are passed through
-    unchanged, so repeated calls implement the holder-carry contract."""
+    unchanged, so repeated calls implement the holder-carry contract.
+    ``block_k`` partitions the key space into grid blocks (see
+    ``onehot_fold``); ``None`` keeps one block."""
     n, d = values.shape
     tile_n = min(tile_n, max(n, 8))
+    if block_k is None or block_k >= key_space:
+        block_k = key_space
+    n_blocks = -(-key_space // block_k)
+    pad_k = n_blocks * block_k - key_space
+
     pad_n = (-n) % tile_n
     keys_p = jnp.pad(keys, (0, pad_n), constant_values=key_space)
     vals_p = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    # padded table rows absorb sentinel hits (cropped below); identity-fill
+    # keeps the non-add merges well-defined there.
+    acc_p = jnp.pad(acc.astype(jnp.float32), ((0, pad_k), (0, 0)),
+                    constant_values=_IDENT[op] if op != "add" else 0.0)
     n_tiles = keys_p.shape[0] // tile_n
 
     out = pl.pallas_call(
-        functools.partial(_chunk_fold_kernel, op=op, key_space=key_space),
-        grid=(n_tiles,),
+        functools.partial(_chunk_fold_kernel, op=op, block_k=block_k),
+        grid=(n_blocks, n_tiles),
         in_specs=[
-            pl.BlockSpec((tile_n,), lambda i: (i,)),
-            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
-            pl.BlockSpec((key_space, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile_n,), lambda b, i: (i,)),
+            pl.BlockSpec((tile_n, d), lambda b, i: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda b, i: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((key_space, d), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((key_space, d), jnp.float32),
+        out_specs=pl.BlockSpec((block_k, d), lambda b, i: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block_k, d), jnp.float32),
         interpret=interpret,
-    )(keys_p, vals_p, acc.astype(jnp.float32))
-    return out
+    )(keys_p, vals_p, acc_p)
+    return out[:key_space]
 
 
 @functools.partial(jax.jit, static_argnames=("key_space", "op", "tile_n",

@@ -198,6 +198,7 @@ def mapreduce_flow_bytes(
     value_bytes: int = 4,
     holder_bytes: int | None = None,
     chunk_pairs: int | None = None,
+    key_block: int | None = None,
     max_values_per_key: int | None = None,
 ) -> float:
     """First-order HBM-bytes model of the three collector flows (Figs 8/9).
@@ -231,7 +232,15 @@ def mapreduce_flow_bytes(
     if flow == "stream":
         n_chunks = max(1, -(-N // max(chunk_pairs, 1)))
         chunk = min(N, chunk_pairs)
-        return 2.0 * n_chunks * chunk * pair + 2.0 * n_chunks * table
+        # key-blocked fold: the [K, D] table is partitioned into
+        # ceil(K / key_block) blocks and each block's fold re-reads the
+        # chunk's pairs (the table itself is still touched once per chunk:
+        # the blocks tile it).  key_block == None / >= K -> single block.
+        n_blocks = 1
+        if key_block is not None and 0 < key_block < K:
+            n_blocks = -(-K // key_block)
+        return (2.0 * n_chunks * chunk * pair * n_blocks
+                + 2.0 * n_chunks * table)
     raise ValueError(f"unknown flow {flow!r}")
 
 
@@ -243,6 +252,7 @@ def mapreduce_flow_peak_bytes(
     value_bytes: int = 4,
     holder_bytes: int | None = None,
     chunk_pairs: int | None = None,
+    key_block: int | None = None,
     max_values_per_key: int | None = None,
 ) -> float:
     """First-order peak-residency model — the paper's actual Figs 8/9 axis
@@ -262,8 +272,30 @@ def mapreduce_flow_peak_bytes(
     if flow == "combine":
         return N * pair + table
     if flow == "stream":
+        del key_block  # blocking bounds the VMEM working set, not HBM peak
         return min(N, chunk_pairs) * pair + table
     raise ValueError(f"unknown flow {flow!r}")
+
+
+def stream_working_set_bytes(
+    *,
+    chunk_pairs: int,
+    key_block: int,
+    d: int = 1,
+    tile_n: int = 512,
+    tile_d: int = 128,
+) -> float:
+    """Per-grid-step VMEM residency model of the key-blocked one-hot fold.
+
+    The Pallas fold kernel keeps three residents per step: the
+    ``[key_block, tile_d]`` holder-table block, the ``[tile_n, key_block]``
+    one-hot tile, and the ``[tile_n, tile_d]`` value tile (all f32).  The
+    autotuner sizes ``key_block`` so this fits the VMEM budget with
+    double-buffering headroom; ``d`` is the flattened holder width
+    (channels + the counts column)."""
+    tn = min(tile_n, max(chunk_pairs, 8))
+    td = min(tile_d, max(d, 1))
+    return 4.0 * (key_block * td + tn * key_block + tn * td)
 
 
 def model_flops_estimate(cfg, shape_kind: str, seq: int, batch: int,

@@ -1,0 +1,226 @@
+"""The roofline-driven autotuner + key-blocked streaming fold.
+
+Property 1: the key-blocked folds are bitwise-equal to the unblocked
+reference across key spaces straddling the block boundary (integer
+channels, where bitwise equality is well-defined regardless of reduction
+shape).
+
+Property 2: autotuned tilings respect the budget models — the kernel-path
+working set fits the VMEM budget (with double-buffer headroom) and the
+masked dense expansion fits its elems budget.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MapReduce, make_app
+from repro.core import autotune as at
+from repro.core import collector as col
+from repro.core import combiner as C
+from repro.kernels import ops, ref
+from repro.roofline import analysis as roofline
+
+I32 = jnp.int32
+
+
+def _sum_app(key_space):
+    return make_app(
+        lambda item, emit: emit(item, jnp.ones_like(item)),
+        lambda k, v, c: jnp.sum(v),
+        key_space=key_space,
+        value_aval=jax.ShapeDtypeStruct((), I32),
+        emit_capacity=4, max_values_per_key=64,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property 1: blocked == unblocked, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kb,koff,n,seed", [
+    (8, -3, 1, 0), (8, 0, 33, 1), (16, 1, 80, 2), (32, -1, 64, 3),
+    (64, 3, 50, 4), (64, 0, 7, 5),
+])
+def test_blocked_collector_fold_bitwise_equals_unblocked(kb, koff, n, seed):
+    """Fixed-grid version of the hypothesis property in test_properties.py
+    (runs even without hypothesis installed)."""
+    K = max(kb * 3 + koff, 2)  # 3 blocks ± straddle
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, K + 1, n).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-5, 6, n).astype(np.int32))
+    stream = col.PairStream(keys, vals, K)
+    aval = jax.ShapeDtypeStruct((), I32)
+
+    def fold(key_block):
+        sc = col.StreamCombiner(C.sum_spec(), K, aval, chunk_pairs=n,
+                                key_block=key_block)
+        assert sc.mode == "additive"
+        tabs, counts = sc.tables_counts(
+            sc.fold_chunk(sc.init_state(), stream))
+        return (np.asarray(jax.tree.leaves(tabs)[0]), np.asarray(counts))
+
+    base_t, base_c = fold(None)
+    got_t, got_c = fold(kb)
+    np.testing.assert_array_equal(got_t, base_t)
+    np.testing.assert_array_equal(got_c, base_c)
+
+
+@pytest.mark.parametrize("kb,koff,n,d,seed", [
+    (8, -2, 17, 1, 0), (16, 1, 64, 3, 1), (16, -1, 40, 2, 2),
+    (64, 3, 33, 4, 3), (64, 0, 1, 1, 4),
+])
+def test_blocked_fold_kernel_bitwise_equals_unblocked(kb, koff, n, d, seed):
+    """The Pallas kernel's key-block grid axis partitions only the key
+    axis, so per-key accumulation order is unchanged — bitwise equality
+    holds even for floats carrying exact small integers."""
+    K = max(kb * 2 + koff, 2)
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, K + 1, n).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-4, 5, (n, d)).astype(np.float32))
+    acc = jnp.asarray(rng.integers(-4, 5, (K, d)).astype(np.float32))
+    blocked = ops.onehot_fold(keys, vals, acc, block_k=kb)
+    unblocked = ops.onehot_fold(keys, vals, acc, block_k=K)
+    want = ref.onehot_fold(keys, vals, acc)
+    np.testing.assert_array_equal(np.asarray(blocked), np.asarray(unblocked))
+    np.testing.assert_array_equal(np.asarray(blocked), np.asarray(want))
+
+
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+@pytest.mark.parametrize("kb,koff", [(16, 1), (16, -1), (32, 0)])
+def test_blocked_monoid_kernel_matches_refs(op, kb, koff):
+    K = kb * 2 + koff
+    rng = np.random.default_rng(7)
+    keys = jnp.asarray(rng.integers(0, K + 1, 50).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal((50, 3)).astype(np.float32))
+    acc = jnp.asarray(rng.standard_normal((K, 3)).astype(np.float32))
+    got = ops.chunk_monoid_fold(keys, vals, acc, op, block_k=kb)
+    want = ref.chunk_monoid_fold(keys, vals, acc, op)
+    want_b = ref.chunk_monoid_fold(keys, vals, acc, op, block_k=kb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(want_b), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_blocked_stream_end_to_end_parity():
+    """Full MapReduce run with a forced key block straddling K."""
+    K = 1000  # not a multiple of the 128-key block
+    app = _sum_app(K)
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, K, (256, 4)).astype(np.int32)
+    want = np.bincount(keys.reshape(-1), minlength=K)
+    res = MapReduce(app, flow="stream", stream_chunk_pairs=256,
+                    stream_key_block=128).run(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(res.values), want)
+    np.testing.assert_array_equal(np.asarray(res.counts), want)
+
+
+# ---------------------------------------------------------------------------
+# Property 2: autotuned tilings respect the budget models
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("logk", [3, 9, 12, 15, 18, 21])
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_autotuned_tiling_respects_budget_models(logk, use_kernels):
+    K = 1 << logk
+    app = _sum_app(K)
+    spec = C.sum_spec()
+    t = at.autotune_stream(app, spec, use_kernels=use_kernels)
+    # chunk stays within the clamp and the additive contraction budget
+    # (unless the floor itself exceeds it, which the fallback note records)
+    assert t.chunk_pairs <= at.MAX_CHUNK_PAIRS
+    if t.mode == "additive" and not use_kernels:
+        # pure-JAX one-hot folds stay inside the fused-contraction regime
+        assert t.chunk_pairs <= col.ADDITIVE_FOLD_PAIRS_FUSED
+    if use_kernels:
+        # kernel path: the per-step working set fits VMEM with
+        # double-buffer headroom
+        ws = roofline.stream_working_set_bytes(
+            chunk_pairs=t.chunk_pairs, key_block=t.key_block, d=2)
+        assert ws <= ops.VMEM_BUDGET // 2 + roofline.stream_working_set_bytes(
+            chunk_pairs=t.chunk_pairs, key_block=1, d=2)
+    # peak residency model: O(K + chunk), never O(N)
+    big_n = 1 << 24
+    peak = roofline.mapreduce_flow_peak_bytes(
+        "stream", n_pairs=big_n, key_space=K, chunk_pairs=t.chunk_pairs,
+        key_block=t.key_block)
+    assert peak < roofline.mapreduce_flow_peak_bytes(
+        "combine", n_pairs=big_n, key_space=K)
+
+
+def test_autotuner_blocks_kernel_path_at_large_k():
+    K = 1 << 18  # 256k keys: past the VMEM-resident table limit
+    # float values -> float holders -> the fused Pallas kernel actually
+    # runs, so the VMEM working-set model sizes the key block
+    app = make_app(
+        lambda item, emit: emit(item, jnp.ones_like(item, jnp.float32)),
+        lambda k, v, c: jnp.sum(v),
+        key_space=K, value_aval=jax.ShapeDtypeStruct((), jnp.float32),
+        emit_capacity=4, max_values_per_key=64,
+    )
+    t = at.autotune_stream(app, C.sum_spec(), use_kernels=True)
+    assert t.mode == "additive" and t.blocked
+    assert t.key_block * t.n_key_blocks >= K
+    ws = roofline.stream_working_set_bytes(
+        chunk_pairs=t.chunk_pairs, key_block=t.key_block, d=2)
+    assert ws <= ops.VMEM_BUDGET
+    # int holders bypass the fused kernel, so the same app with int values
+    # gets the pure-JAX tiling (fused-regime chunk cap + dense-budget block)
+    ti = at.autotune_stream(_sum_app(K), C.sum_spec(), use_kernels=True)
+    assert ti.chunk_pairs <= col.ADDITIVE_FOLD_PAIRS_FUSED
+    assert ti.chunk_pairs * ti.key_block <= col.DENSE_FOLD_ELEMS_BUDGET
+
+
+def test_autotuner_pins_manual_knobs():
+    app = _sum_app(512)
+    t = at.autotune_stream(app, C.sum_spec(), chunk_pairs=128, key_block=64)
+    assert (t.chunk_pairs, t.key_block, t.source) == (128, 64, "manual")
+
+
+def test_probe_mode_smoke():
+    app = _sum_app(64)
+    t = at.autotune_stream(app, C.sum_spec(), probe=True, probe_pairs=256)
+    assert t.source == "probe"
+    assert any("probe" in n for n in t.notes)
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics: fallbacks are loud and visible in explain()
+# ---------------------------------------------------------------------------
+
+
+def test_explain_reports_tiling():
+    mr = MapReduce(_sum_app(1 << 15))
+    text = mr.explain()
+    assert "tiling:" in text and "chunk_pairs=" in text
+    assert "mode=additive" in text
+
+
+def test_combine_large_n_scatter_fallback_warns_and_explains():
+    K = 4096  # past the legacy key-space cutoff...
+    n = col.ADDITIVE_FOLD_PAIRS_FUSED * 2  # ...AND the fused pair regime
+    spec = C.monoid_spec(C.ADD, premap=lambda v: (v,))
+    keys = jnp.asarray((np.arange(n) % K).astype(np.int32))
+    stream = col.PairStream(keys, jnp.ones((n,), I32), K)
+    with pytest.warns(col.LoweringFallbackWarning):
+        col.combine_flow(spec, stream)
+    # plan-level diagnostic for the combine flow names the threshold
+    mr = MapReduce(_sum_app(4096), flow="combine")
+    assert any("scatter fallback" in d for d in mr.plan.diagnostics)
+    assert "diagnostic:" in mr.explain()
+
+
+def test_no_fallback_warning_on_onehot_path():
+    spec = C.monoid_spec(C.ADD, premap=lambda v: (v,))
+    keys = jnp.asarray(np.arange(64, dtype=np.int32))
+    stream = col.PairStream(keys, jnp.ones((64,), I32), 4096)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", col.LoweringFallbackWarning)
+        grouped = col.combine_flow(spec, stream)
+    np.testing.assert_array_equal(np.asarray(grouped.counts)[:64], 1)

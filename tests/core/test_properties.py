@@ -132,3 +132,100 @@ def test_logsumexp_monoid_stability(seed):
     got = C.finalize_fold(spec, vals)
     want = jax.scipy.special.logsumexp(vals)
     np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 4 (PR 2): key-blocked streaming folds are bitwise-equal to the
+# unblocked reference across key spaces straddling the block boundary, and
+# autotuned tilings respect the budget models.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    kb=st.sampled_from([8, 16, 32, 64]),
+    koff=st.integers(-3, 3),  # key space straddles the block boundary
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_blocked_collector_fold_bitwise_equals_unblocked(kb, koff, n, seed):
+    from repro.core import collector as col
+
+    K = max(kb * 3 + koff, 2)  # 3 blocks ± straddle
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, K + 1, n).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-5, 6, n).astype(np.int32))
+    stream = col.PairStream(keys, vals, K)
+    aval = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fold(key_block):
+        sc = col.StreamCombiner(C.sum_spec(), K, aval, chunk_pairs=n,
+                                key_block=key_block)
+        assert sc.mode == "additive"
+        tabs, counts = sc.tables_counts(
+            sc.fold_chunk(sc.init_state(), stream))
+        return (np.asarray(jax.tree.leaves(tabs)[0]), np.asarray(counts))
+
+    base_t, base_c = fold(None)
+    got_t, got_c = fold(kb)
+    np.testing.assert_array_equal(got_t, base_t)
+    np.testing.assert_array_equal(got_c, base_c)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kb=st.sampled_from([8, 16, 64]),
+    koff=st.integers(-3, 3),
+    n=st.integers(1, 64),
+    d=st.integers(1, 4),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_blocked_fold_kernel_bitwise_equals_unblocked(kb, koff, n, d, seed):
+    """The Pallas kernel's key-block grid axis partitions only the key
+    axis, so per-key accumulation order is unchanged — bitwise equality
+    holds even for floats carrying exact small integers."""
+    from repro.kernels import ops, ref
+
+    K = max(kb * 2 + koff, 2)
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, K + 1, n).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-4, 5, (n, d)).astype(np.float32))
+    acc = jnp.asarray(rng.integers(-4, 5, (K, d)).astype(np.float32))
+    blocked = ops.onehot_fold(keys, vals, acc, block_k=kb)
+    unblocked = ops.onehot_fold(keys, vals, acc, block_k=K)
+    want = ref.onehot_fold(keys, vals, acc)
+    np.testing.assert_array_equal(np.asarray(blocked), np.asarray(unblocked))
+    np.testing.assert_array_equal(np.asarray(blocked), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logk=st.integers(3, 21),  # key spaces 8 .. 2M
+    use_kernels=st.booleans(),
+)
+def test_autotuned_tiling_respects_budget_models(logk, use_kernels):
+    from repro.core import autotune as at
+    from repro.core import collector as col
+    from repro.kernels import ops
+    from repro.roofline import analysis as roofline
+
+    K = 1 << logk
+    app = make_wc_app(K)
+    app.reduce = REDUCERS["sum"]
+    spec = C.sum_spec()
+    t = at.autotune_stream(app, spec, use_kernels=use_kernels)
+    assert t.chunk_pairs <= at.MAX_CHUNK_PAIRS
+    if t.mode == "additive" and not use_kernels:
+        # pure-JAX one-hot folds stay inside the fused-contraction regime
+        assert t.chunk_pairs <= col.ADDITIVE_FOLD_PAIRS_FUSED
+    if use_kernels:
+        ws = roofline.stream_working_set_bytes(
+            chunk_pairs=t.chunk_pairs, key_block=t.key_block, d=2)
+        assert ws <= ops.VMEM_BUDGET // 2 + roofline.stream_working_set_bytes(
+            chunk_pairs=t.chunk_pairs, key_block=1, d=2)
+    big_n = 1 << 24
+    peak = roofline.mapreduce_flow_peak_bytes(
+        "stream", n_pairs=big_n, key_space=K, chunk_pairs=t.chunk_pairs,
+        key_block=t.key_block)
+    assert peak < roofline.mapreduce_flow_peak_bytes(
+        "combine", n_pairs=big_n, key_space=K)

@@ -203,12 +203,14 @@ def test_stream_peak_residency_bounded():
     assert peak_stream < peak_combine / 2, (peak_stream, peak_combine)
 
 
-def test_large_key_space_scatter_fallback():
-    """key_space beyond the dense-fold budget falls back to exact scatter
-    folds instead of materializing a [chunk, K] one-hot."""
+def test_large_key_space_keeps_onehot_path():
+    """key_space beyond the old dense-fold budget now stays on the one-hot
+    additive fold (key-blocked where the lowering needs it) instead of
+    silently degrading to the scatter fallback."""
     from repro.core import collector as col
+    from repro.core import engine as eng
 
-    BIG_K = (col.DENSE_FOLD_ELEMS_BUDGET // 256) + 1  # chunk 256 over budget
+    BIG_K = (col.DENSE_FOLD_ELEMS_BUDGET // 256) + 1  # old scatter threshold
     app = make_app(
         lambda item, emit: emit(item, jnp.ones_like(item)),
         lambda k, v, c: jnp.sum(v),
@@ -219,14 +221,48 @@ def test_large_key_space_scatter_fallback():
     rng = np.random.default_rng(5)
     keys = rng.integers(0, BIG_K, (128, 4)).astype(np.int32)
     mr = MapReduce(app, flow="stream", stream_chunk_pairs=256)
-    sc = __import__("repro.core.engine", fromlist=["e"])._stream_combiner(
-        app, mr.plan.spec, chunk_pairs=256)
-    assert sc.mode == "scatter"
+    assert mr.tiling is not None and mr.tiling.mode == "additive"
+    sc = eng._stream_combiner(app, mr.plan.spec, chunk_pairs=256)
+    assert sc.mode == "additive"
     res = mr.run(jnp.asarray(keys))
     want = np.bincount(keys.reshape(-1), minlength=BIG_K)
     present = np.flatnonzero(want)
     np.testing.assert_array_equal(np.asarray(res.values)[present],
                                   want[present])
+
+
+def test_scatter_fallback_beyond_fused_regime_warns():
+    """Only past the fused-contraction pair regime does the pure-JAX
+    streaming fold degrade to exact scatter — and it says so instead of
+    choosing silently.  The Pallas kernel path is exempt (VMEM-resident
+    one-hot tile)."""
+    import pytest as _pytest
+
+    from repro.core import collector as col
+    from repro.core import combiner as C
+    from repro.kernels import ops
+
+    # past the fused pair regime AND the blocked dense budget at this
+    # (chunk, key_block) — nothing scatter-free is left
+    K = 1 << 16
+    chunk = col.ADDITIVE_FOLD_PAIRS_FUSED * 2
+    with _pytest.warns(col.LoweringFallbackWarning):
+        sc = col.StreamCombiner(C.sum_spec(), K,
+                                jax.ShapeDtypeStruct((), jnp.int32),
+                                chunk_pairs=chunk)
+    assert sc.mode == "scatter"
+    # kernel path (float holders -> fused kernel runs): VMEM-resident
+    # one-hot tile, no pair-regime limit
+    sck = col.StreamCombiner(C.sum_spec(), K,
+                             jax.ShapeDtypeStruct((), jnp.float32),
+                             chunk_pairs=chunk, fold_fn=ops.onehot_fold)
+    assert sck.mode == "additive"
+    # ...but int holders bypass the fused kernel (exact-accumulation path),
+    # so the pure-JAX budgets still apply under use_kernels
+    sci = col.StreamCombiner(C.sum_spec(), K,
+                             jax.ShapeDtypeStruct((), jnp.int32),
+                             chunk_pairs=chunk, fold_fn=ops.onehot_fold)
+    assert sci.mode == "scatter"
 
 
 def test_int_tables_accumulate_exactly_per_chunk():

@@ -173,8 +173,17 @@ def test_fold_kernels_empty_chunk():
     np.testing.assert_allclose(np.asarray(got), np.asarray(acc))
 
 
-def test_fold_kernel_vmem_guard_counts_onehot_temp():
-    """The VMEM guard accounts for the [Tn, K] one-hot, not just the table."""
+def test_fold_kernel_autoblocks_past_vmem_budget():
+    """A key space whose [Tn, K] one-hot would blow VMEM is auto-partitioned
+    into key blocks instead of raising; an explicitly oversized block still
+    trips the guard (which accounts for the one-hot, not just the table)."""
+    K = 1 << 20
+    assert ops.auto_key_block(K, d=1, tile_n=512) < K
+    keys = jnp.asarray(RNG.integers(0, K, 512).astype(np.int32))
+    got = ops.onehot_fold(keys, jnp.ones((512, 1), jnp.float32),
+                          jnp.zeros((K, 1), jnp.float32))
+    want = np.zeros(K); np.add.at(want, np.asarray(keys), 1.0)
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], want)
     with pytest.raises(ValueError, match="VMEM"):
         ops.onehot_fold(jnp.zeros(512, jnp.int32), jnp.zeros((512, 1)),
-                        jnp.zeros((1 << 20, 1)))
+                        jnp.zeros((K, 1)), block_k=K)
