@@ -19,7 +19,17 @@ from repro.core.combiner import (  # noqa: F401
     product_spec,
     sum_spec,
 )
-from repro.core.autotune import StreamTiling, autotune_stream  # noqa: F401
+from repro.core.autotune import (  # noqa: F401
+    StreamTiling,
+    autotune_sort,
+    autotune_stream,
+)
 from repro.core.collector import LoweringFallbackWarning  # noqa: F401
+from repro.core.cost_model import (  # noqa: F401
+    CostReport,
+    FlowCost,
+    choose_flow,
+    estimate_flow_cost,
+)
 from repro.core.optimizer import Derivation, derive_combiner  # noqa: F401
 from repro.core.plan import ExecutionPlan, plan_execution  # noqa: F401

@@ -102,14 +102,26 @@ class MapReduce:
 
     flow:
       * "auto"    derive a combiner; when possible, run the optimizer's
-                  recommended flow (the streaming fused flow), else reduce
-                  (exactly the paper's optimizer behaviour)
+                  recommended flow, else reduce (the paper's optimizer
+                  behaviour).  With ``n_pairs_hint`` the recommendation
+                  comes from the roofline+compute cost model
+                  (``core/cost_model.py``), which ranks the stream and
+                  sort flows for that workload size; without a hint the
+                  streaming fused flow is kept (one-flag behaviour).
       * "stream"  force the streaming map+combine fusion (error if not
                   derivable): map chunks fold straight into holder tables,
                   the full pair buffer is never materialized
+      * "sort"    force the sort-based flow (error if not derivable):
+                  chunks are radix-partitioned / stably sorted by key and
+                  ONE aggregate per distinct key merges into the holder
+                  tables — O(N·log N + K) compute vs the one-hot fold's
+                  O(N·K), the winner at large sparse key spaces
       * "combine" force the legacy combine flow (materialize pairs, fold
                   once); kept for A/B benchmarks
       * "reduce"  force the baseline flow (paper's un-optimized MR4J)
+
+    n_pairs_hint — expected emitted pairs per run; enables cost-model flow
+    selection under ``flow="auto"`` and sharpens the autotuned tiling.
 
     stream_chunk_pairs bounds the emitted pairs materialized per streaming
     chunk (peak intermediate state ≈ key_space + stream_chunk_pairs).  The
@@ -118,8 +130,9 @@ class MapReduce:
     and VMEM working-set models; pass an int to pin it.  stream_key_block
     partitions the ``[K, D]`` holder tables for large key spaces
     ("auto" / int / None to disable blocking).  autotune_probe=True adds
-    the measured micro-probe refinement on top of the model.  The decision
-    is recorded on the plan — see :meth:`explain`.
+    the measured micro-probe refinement on top of the model (persisted
+    across runs when ``JAX_PALLAS_TUNE_CACHE`` points at a cache file).
+    The decision is recorded on the plan — see :meth:`explain`.
     """
 
     def __init__(
@@ -130,6 +143,7 @@ class MapReduce:
         trust_semantics: bool = False,
         combine_impl: str = "auto",
         use_kernels: bool = False,
+        n_pairs_hint: int | None = None,
         stream_chunk_pairs: int | str = "auto",
         stream_key_block: int | str | None = "auto",
         autotune_probe: bool = False,
@@ -142,14 +156,16 @@ class MapReduce:
         self.combine_impl = combine_impl
         self.use_kernels = use_kernels
         self.plan = plan_execution(app, flow=flow,
-                                   trust_semantics=trust_semantics)
+                                   trust_semantics=trust_semantics,
+                                   n_pairs_hint=n_pairs_hint)
         self.tiling = None
         key_block = None
+        bucket_size = None
         if self.plan.flow == "stream":
             self.tiling = at.autotune_stream(
                 app, self.plan.spec, use_kernels=use_kernels,
                 chunk_pairs=stream_chunk_pairs, key_block=stream_key_block,
-                probe=autotune_probe)
+                n_pairs_hint=n_pairs_hint, probe=autotune_probe)
             self.plan.tiling = self.tiling
             stream_chunk_pairs = self.tiling.chunk_pairs
             key_block = (self.tiling.key_block if self.tiling.blocked
@@ -158,6 +174,14 @@ class MapReduce:
                 self.plan.diagnostics += (
                     "stream fold degraded to exact scatter (dense budgets "
                     "exceeded) — see tiling notes",)
+        elif self.plan.flow == "sort":
+            self.tiling = at.autotune_sort(
+                app, self.plan.spec, use_kernels=use_kernels,
+                chunk_pairs=stream_chunk_pairs, n_pairs_hint=n_pairs_hint)
+            self.plan.tiling = self.tiling
+            stream_chunk_pairs = self.tiling.chunk_pairs
+            bucket_size = (self.tiling.key_block if self.tiling.blocked
+                           else None)
         elif not isinstance(stream_chunk_pairs, int):
             stream_chunk_pairs = eng.DEFAULT_CHUNK_PAIRS
         if (self.plan.flow == "combine" and self.plan.spec is not None
@@ -188,7 +212,8 @@ class MapReduce:
                                     combine_impl=combine_impl,
                                     use_kernels=use_kernels,
                                     chunk_pairs=stream_chunk_pairs,
-                                    key_block=key_block))
+                                    key_block=key_block,
+                                    bucket_size=bucket_size))
 
     def run(self, items) -> MapReduceResult:
         keys, values, counts = self._run(items)

@@ -37,6 +37,8 @@ workload (measured micro-probe mode) and keeps the fastest.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Any
 
 import jax
@@ -45,6 +47,11 @@ import numpy as np
 
 from repro.core import collector as col
 from repro.roofline import analysis as roofline
+
+#: env var pointing at the persistent per-app tuning cache (JSON file).
+#: Unset (the default, and in CI) -> measured micro-probe results are not
+#: persisted and every probing run re-measures.
+TUNE_CACHE_ENV = "JAX_PALLAS_TUNE_CACHE"
 
 #: chunk-size clamp: floor keeps small workloads on the pre-autotuner
 #: single-chunk behaviour; the cap bounds compile-time unrolling and the
@@ -82,11 +89,65 @@ class StreamTiling:
         return self.key_block < self.key_space
 
     def describe(self) -> str:
-        blk = (f"key_block={self.key_block}×{self.n_key_blocks}"
-               if self.blocked else f"key_block={self.key_block} (single)")
+        if self.mode == "sort":
+            blk = (f"buckets={self.n_key_blocks}×{self.key_block}keys"
+                   if self.blocked else "buckets=1 (single full sort)")
+        else:
+            blk = (f"key_block={self.key_block}×{self.n_key_blocks}"
+                   if self.blocked else f"key_block={self.key_block} (single)")
         return (f"chunk_pairs={self.chunk_pairs} {blk} mode={self.mode} "
                 f"[{self.source}] peak≈{self.model_peak_bytes / 1e6:.2f}MB "
                 f"vmem_step≈{self.working_set_bytes / 1e6:.2f}MB")
+
+
+# ---------------------------------------------------------------------------
+# Persistent per-app tuning cache (file-backed, opt-in via env var)
+# ---------------------------------------------------------------------------
+
+
+def tune_cache_path() -> str | None:
+    """Path of the persistent tuning cache, or None when disabled."""
+    p = os.environ.get(TUNE_CACHE_ENV, "").strip()
+    return p or None
+
+
+def _tune_cache_key(app, spec, *, use_kernels: bool,
+                    n_pairs_hint: int | None) -> str:
+    aval = app.value_aval
+    return "|".join([
+        type(app).__name__,
+        f"K={app.key_space}",
+        f"cap={app.emit_capacity}",
+        f"v={jnp.dtype(aval.dtype).name}{tuple(aval.shape)}",
+        f"spec={spec.describe or spec.strategy}",
+        f"N={n_pairs_hint or 0}",
+        f"kern={int(use_kernels)}",
+    ])
+
+
+def load_tune_cache(path: str) -> dict:
+    """Read the cache file; IO/parse failures read as an empty cache."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def store_tune_entry(path: str, key: str, entry: dict) -> bool:
+    """Merge one measured entry into the cache file (advisory: best-effort,
+    failures are swallowed — the cache must never break a run)."""
+    try:
+        cache = load_tune_cache(path)
+        cache[key] = entry
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return True
+    except OSError:
+        return False
 
 
 def choose_chunk_pairs(key_space: int, *, holder_bytes: int, pair_bytes: int,
@@ -189,11 +250,35 @@ def autotune_stream(
 
     blk = pick_block(chunk)
     measured = False
+    cached = False
     if probe and not manual_chunk:
-        chunk, measured = _probe_chunk(
-            app, spec, chunk, use_kernels=use_kernels,
-            key_block=None if blk >= K else blk,
-            probe_pairs=probe_pairs, notes=notes, items=probe_items)
+        # persistent micro-probe cache (opt-in via JAX_PALLAS_TUNE_CACHE):
+        # a prior run's measured chunk for the same app/shape/lowering is
+        # reused instead of re-timing the candidates.
+        cache_path = tune_cache_path()
+        ckey = (None if cache_path is None else
+                _tune_cache_key(app, spec, use_kernels=use_kernels,
+                                n_pairs_hint=n_pairs_hint))
+        if cache_path is not None:
+            hit = load_tune_cache(cache_path).get(ckey)
+            if isinstance(hit, dict) and "chunk_pairs" in hit:
+                chunk = int(hit["chunk_pairs"])
+                cached = True
+                notes.append(f"probe cache hit: chunk={chunk} "
+                             f"({hit.get('t_us', 0):.0f}us/fold measured "
+                             f"by a previous run)")
+        if not cached:
+            chunk, measured = _probe_chunk(
+                app, spec, chunk, use_kernels=use_kernels,
+                key_block=None if blk >= K else blk,
+                probe_pairs=probe_pairs, notes=notes, items=probe_items)
+            if measured and cache_path is not None:
+                t_us = _last_probe_us(notes)
+                if store_tune_entry(cache_path, ckey,
+                                    {"chunk_pairs": int(chunk),
+                                     "t_us": t_us}):
+                    notes.append(f"probe cache: stored chunk={chunk} "
+                                 f"under {cache_path}")
         blk = pick_block(chunk)  # block budgets depend on the chunk
 
     additive_ok = (kernel_additive
@@ -225,10 +310,85 @@ def autotune_stream(
         chunk_pairs=chunk, key_block=blk, d=d + 1)
 
     source = ("manual" if manual_chunk and manual_block
+              else "cache" if cached
               else "probe" if measured else "model")
     return StreamTiling(
         chunk_pairs=chunk, key_block=blk, key_space=K, mode=mode,
         source=source, model_bytes=model_bytes, model_peak_bytes=model_peak,
+        working_set_bytes=working_set, n_pairs_hint=hint,
+        notes=tuple(notes))
+
+
+def _last_probe_us(notes: list) -> float:
+    """Best-candidate time recorded by the last probe note (for the cache)."""
+    for n in reversed(notes):
+        if n.startswith("probe: measured") and "us/fold" in n:
+            try:
+                return float(n.rsplit("(", 1)[1].split("us/fold")[0])
+            except (IndexError, ValueError):  # pragma: no cover
+                return 0.0
+    return 0.0
+
+
+def autotune_sort(
+    app,
+    spec,
+    *,
+    use_kernels: bool = False,
+    chunk_pairs: int | str = "auto",
+    n_pairs_hint: int | None = None,
+) -> StreamTiling:
+    """Pick the sort-flow tiling: chunk size + radix bucket granularity.
+
+    The sort flow touches the O(K) tables once per chunk and its per-pair
+    cost grows only as log(chunk), so the chunk is sized as large as the
+    clamp allows (bounded by the workload hint — no point chunking beyond
+    the stream).  ``key_block`` records the radix bucket width the Pallas
+    pipeline partitions with (``kernels/ops.auto_bucket_size``); the
+    pure-JAX lowering runs one full packed sort per chunk instead — noted.
+    """
+    notes: list[str] = []
+    value_bytes = int(jnp.dtype(app.value_aval.dtype).itemsize *
+                      max(1, int(np.prod(app.value_aval.shape))))
+    pair_bytes = 4 + value_bytes
+    d, holder_bytes = spec.holder_width(app.value_aval)
+    K = app.key_space
+
+    manual_chunk = isinstance(chunk_pairs, int)
+    if manual_chunk:
+        chunk = int(chunk_pairs)
+    else:
+        from repro.core.engine import DEFAULT_SORT_CHUNK_PAIRS
+
+        chunk = DEFAULT_SORT_CHUNK_PAIRS
+        if n_pairs_hint is not None and n_pairs_hint > 0:
+            chunk = min(chunk, _pow2_round(n_pairs_hint))
+        chunk = max(min(chunk, MAX_CHUNK_PAIRS), app.emit_capacity, 1)
+
+    try:
+        from repro.kernels import ops
+
+        bucket = ops.auto_bucket_size(K, d=d + 1)
+    except Exception:  # pragma: no cover
+        bucket = K
+    if not use_kernels:
+        notes.append("pure-JAX lowering: one packed stable sort per chunk "
+                     "(the radix buckets below are the kernel pipeline's "
+                     "partition granularity)")
+
+    hint = n_pairs_hint if n_pairs_hint else max(chunk * 4, 1 << 16)
+    model_bytes = roofline.mapreduce_flow_bytes(
+        "sort", n_pairs=hint, key_space=K, value_bytes=value_bytes,
+        holder_bytes=holder_bytes, chunk_pairs=chunk)
+    model_peak = roofline.mapreduce_flow_peak_bytes(
+        "sort", n_pairs=hint, key_space=K, value_bytes=value_bytes,
+        holder_bytes=holder_bytes, chunk_pairs=chunk)
+    working_set = (min(chunk, hint) * pair_bytes * 2.0 + bucket * (d + 1) * 4.0
+                   if use_kernels else 0.0)
+    return StreamTiling(
+        chunk_pairs=chunk, key_block=bucket, key_space=K, mode="sort",
+        source="manual" if manual_chunk else "model",
+        model_bytes=model_bytes, model_peak_bytes=model_peak,
         working_set_bytes=working_set, n_pairs_hint=hint,
         notes=tuple(notes))
 

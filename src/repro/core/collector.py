@@ -52,6 +52,21 @@ class LoweringFallbackWarning(UserWarning):
     records the same decision so ``MapReduce.explain()`` shows it."""
 
 
+def _emit_fallback(msg: str, on_fallback: Callable | None,
+                   stacklevel: int = 3) -> None:
+    """Route a fallback diagnostic to ``on_fallback`` when given, else warn.
+
+    The engine passes a per-plan callback that warns ONCE per plan and
+    appends every message to the plan's diagnostic list, so re-traces of
+    the same plan (every chunked scan body, each new input shape) no
+    longer spam one :class:`LoweringFallbackWarning` per trace while the
+    plan record stays complete."""
+    if on_fallback is not None:
+        on_fallback(msg)
+    else:
+        warnings.warn(msg, LoweringFallbackWarning, stacklevel=stacklevel)
+
+
 @dataclasses.dataclass(frozen=True)
 class PairStream:
     """Flat emitted pairs. keys[i] == key_space marks an invalid slot."""
@@ -270,6 +285,7 @@ def combine_flow(
     impl: str = "auto",
     onehot_fn: Callable | None = None,
     onehot_max_keys: int = ONEHOT_MAX_KEYS,
+    on_fallback: Callable | None = None,
 ) -> Grouped:
     """Run the combining collector with the best available lowering.
 
@@ -313,12 +329,11 @@ def combine_flow(
                               f"{onehot_max_keys} and {n} pairs exceed "
                               f"the fused one-hot contraction regime "
                               f"(N <= {ADDITIVE_FOLD_PAIRS_FUSED})")
-                warnings.warn(
+                _emit_fallback(
                     f"combine flow: {reason}; degrading to the exact "
                     f"scatter fallback (serialized on XLA:CPU). The "
                     f"chunked stream flow keeps large pair streams on the "
-                    f"one-hot path.",
-                    LoweringFallbackWarning, stacklevel=2)
+                    f"one-hot path.", on_fallback)
             impl = "scatter"
         else:
             impl = "segment"
@@ -448,7 +463,8 @@ class StreamCombiner:
                  monoid_fold_fn: Callable | None = None,
                  chunk_pairs: int | None = None,
                  key_block: int | None = None,
-                 mode: str | None = None):
+                 mode: str | None = None,
+                 on_fallback: Callable | None = None):
         self.spec = spec
         self.key_space = key_space
         self.value_aval = value_aval
@@ -481,12 +497,12 @@ class StreamCombiner:
                      stream_mode(spec, dense_ok=self._dense_ok,
                                  additive_ok=additive_ok))
         if mode is None and spec.mxu_lowerable and self.mode == "scatter":
-            warnings.warn(
+            _emit_fallback(
                 f"stream flow: dense fold budgets exceeded at key_space="
                 f"{key_space}, chunk_pairs={chunk_pairs}, key_block="
                 f"{eff_block}; degrading to the exact scatter fold "
                 f"(serialized on XLA:CPU). Shrink stream_chunk_pairs or the "
-                f"key block.", LoweringFallbackWarning, stacklevel=2)
+                f"key block.", on_fallback)
 
     # -- state ---------------------------------------------------------------
 
@@ -726,3 +742,296 @@ class StreamCombiner:
             out.append(jnp.where(sel, chan[safe], tab))
         tables = jax.tree.unflatten(self._holder_treedef, out)
         return tables, counts + self._chunk_counts(stream)
+
+
+# ---------------------------------------------------------------------------
+# Sort flow (radix-bucketed segment reduce)
+# ---------------------------------------------------------------------------
+
+
+def stable_sort_by_key(keys: jax.Array, key_space: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Stable key sort of ``keys`` (sentinel == key_space sorts last).
+
+    Returns ``(sorted_keys, order)``.  When ``(key, index)`` fits 31 bits
+    the sort runs as ONE int32 sort of the packed words — measurably faster
+    on XLA:CPU than the two-operand comparator sort, which is the whole
+    wall-clock budget of the pure-JAX sort flow.  Keys must already be in
+    ``[0, key_space]`` (the Emitter guarantees it).
+    """
+    n = keys.shape[0]
+    idx_bits = max(n - 1, 0).bit_length()
+    key_bits = max(key_space, 1).bit_length()  # sentinel == key_space
+    if key_bits + idx_bits <= 31:
+        packed = (keys << idx_bits) | jnp.arange(n, dtype=jnp.int32)
+        sp = lax.sort(packed)
+        return sp >> idx_bits, sp & ((1 << idx_bits) - 1)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    sk, order = lax.sort((keys, iota), num_keys=2)  # (key, idx) lexicographic
+    return sk, order
+
+
+def segmented_scan(op: Callable, flags: jax.Array, vals: jax.Array
+                   ) -> jax.Array:
+    """Inclusive segmented scan: ``op``-accumulate, restarting at ``flags``.
+
+    ``flags[i]`` marks the start of a new segment.  Standard associative
+    lift: ``(fa, va) ⊕ (fb, vb) = (fa|fb, vb if fb else op(va, vb))`` —
+    O(N log N) vectorized work, no serial dependency.
+    """
+    def comb(a, b):
+        fa, va = a
+        fb, vb = b
+        sel = fb.reshape(fb.shape + (1,) * (va.ndim - fb.ndim))
+        return fa | fb, jnp.where(sel, vb, op(va, vb))
+
+    _, out = lax.associative_scan(comb, (flags, vals), axis=0)
+    return out
+
+
+def _run_aggregate(mono: C.Monoid, flat: jax.Array, is_start: jax.Array,
+                   start_pos: jax.Array) -> jax.Array:
+    """Per-run ``mono`` aggregate of a key-sorted channel, valid at run ends.
+
+    Additive monoids use the cumsum-difference form (one pass); the rest go
+    through :func:`segmented_scan`.
+    """
+    if mono.is_additive:
+        csum = jnp.cumsum(flat, axis=0)
+        prev = jnp.where(
+            (start_pos > 0).reshape((-1,) + (1,) * (flat.ndim - 1)),
+            csum[jnp.maximum(start_pos - 1, 0)], jnp.zeros_like(flat))
+        return csum - prev
+    return segmented_scan(mono.op, is_start, flat)
+
+
+class SortCombiner:
+    """Chunked sort-based fold: partition by key, reduce presorted segments.
+
+    The fourth execution flow (``flow="sort"``): each chunk's pairs are
+    stably sorted by key, per-run monoid aggregates are computed with
+    vectorized segmented scans (cumsum-difference for additive monoids),
+    and ONE aggregate per distinct key is merged into the carried holder
+    tables with the monoid's scatter method — O(N·log N + K) compute and
+    O(N + K) bytes per chunk, versus the one-hot fold's O(N·K) compute.
+    This is what dominates the stream flow at large sparse key spaces
+    (``core/cost_model.py`` quantifies the crossover).
+
+    Under ``use_kernels`` the per-chunk fold runs as the Pallas radix
+    pipeline instead: two-pass histogram + bucket-scatter partition
+    (``kernels/radix_partition.py``) feeding the existing ``segment_reduce``
+    kernel bucket-by-bucket — ``sort_fold_fn(keys, mat, acc, op)`` with the
+    same merge contract as the pure-JAX path.  Same interface as
+    :class:`StreamCombiner` (init_state / fold_chunk / tables_counts /
+    finalize) so the engine's chunk scan is shared.
+
+    Modes: ``monoid`` (scatter-merge of run aggregates), ``first``
+    (run-start gather — the stable sort makes the first pair of each run
+    the first-arrived), ``size`` (run lengths only; the payload is never
+    gathered), ``sequential`` (coupled holders: sorted sequential fold, the
+    chunked form of ``combine_segment``).
+    """
+
+    def __init__(self, spec: C.CombinerSpec, key_space: int, value_aval,
+                 *, sort_fold_fn: Callable | None = None,
+                 mode: str | None = None):
+        self.spec = spec
+        self.key_space = key_space
+        self.value_aval = value_aval
+        holder = spec.holder_avals(value_aval)
+        self._holder_leaves, self._holder_treedef = jax.tree.flatten(holder)
+        if mode is None:
+            if spec.strategy == C.STRATEGY_SIZE:
+                mode = "size"
+            elif spec.strategy == C.STRATEGY_FIRST:
+                mode = "first"
+            elif spec.scatter_lowerable:
+                mode = "monoid"
+            else:
+                mode = "sequential"
+        self.mode = mode
+        # the radix kernel pipeline accumulates f32 and supports
+        # add/max/min — same envelope as the chunk monoid-fold kernel
+        self._use_kernel = (sort_fold_fn is not None and mode == "monoid"
+                            and spec.kernel_monoid_ok(value_aval))
+        self.sort_fold_fn = sort_fold_fn
+
+    # -- state (same contract as StreamCombiner) -----------------------------
+
+    @property
+    def _fused_acc(self) -> bool:
+        # all-additive float-holder specs carry one [K, D+1] f32 matrix so
+        # the per-chunk run aggregates land in ONE scatter (channels + the
+        # counts column share the cumsum and the merge) — same exactness
+        # envelope as StreamCombiner's fused kernel accumulator (2^24
+        # integer bound on the f32 counts column).
+        return (self.mode == "monoid" and not self._use_kernel
+                and self.spec.mxu_lowerable
+                and all(jnp.issubdtype(l.dtype, jnp.floating)
+                        for l in self._holder_leaves))
+
+    def init_state(self):
+        if self.mode == "size":
+            return jnp.zeros((self.key_space,), jnp.int32)
+        if self._fused_acc:
+            d_tot = sum(int(np.prod(l.shape)) for l in self._holder_leaves)
+            return jnp.zeros((self.key_space, d_tot + 1), jnp.float32)
+        return self.spec.init_tables(self.key_space, self.value_aval)
+
+    def tables_counts(self, state) -> tuple[Any, jax.Array]:
+        if self.mode == "size":
+            return (), state
+        if self._fused_acc:
+            acc = state
+            tabs, off = [], 0
+            for aval in self._holder_leaves:
+                size = int(np.prod(aval.shape))
+                tabs.append(acc[:, off:off + size]
+                            .reshape((self.key_space,) + tuple(aval.shape))
+                            .astype(aval.dtype))
+                off += size
+            tables = jax.tree.unflatten(self._holder_treedef, tabs)
+            return tables, acc[:, -1].astype(jnp.int32)
+        return state
+
+    def finalize(self, state) -> Grouped:
+        tables, counts = self.tables_counts(state)
+        return finalize_tables(self.spec, tables, counts, self.key_space)
+
+    # -- per-chunk fold ------------------------------------------------------
+
+    def _run_layout(self, sk: jax.Array):
+        """(is_start, start_pos, run_len, end_target) of the sorted runs."""
+        n = sk.shape[0]
+        pos = jnp.arange(n, dtype=jnp.int32)
+        if n == 1:
+            is_start = jnp.ones((1,), bool)
+            is_end = jnp.ones((1,), bool)
+        else:
+            change = sk[1:] != sk[:-1]
+            is_start = jnp.concatenate([jnp.ones((1,), bool), change])
+            is_end = jnp.concatenate([change, jnp.ones((1,), bool)])
+        start_pos = lax.cummax(jnp.where(is_start, pos, 0))
+        run_len = pos - start_pos + 1
+        # run ends scatter to their key; everything else to the dropped
+        # sentinel slot.  Sentinel-key runs (== key_space) drop themselves.
+        tgt = jnp.where(is_end, sk, self.key_space)
+        return is_start, start_pos, run_len, tgt
+
+    def fold_chunk(self, state, stream: PairStream):
+        assert stream.key_space == self.key_space
+        n = stream.keys.shape[0]
+        if n == 0:
+            return state
+        if self.mode == "monoid" and self._use_kernel:
+            return self._fold_kernel(state, stream)
+        sk, order = stable_sort_by_key(stream.keys, self.key_space)
+        if self.mode == "size":
+            _, _, run_len, tgt = self._run_layout(sk)
+            return state.at[tgt].add(run_len, mode="drop")
+        if self._fused_acc:
+            svals = jax.tree.map(lambda v: v[order], stream.values)
+            mapped = _premap_stream(self.spec, svals)
+            is_start, start_pos, _, tgt = self._run_layout(sk)
+            cols = [l.reshape(n, -1).astype(jnp.float32)
+                    for l in jax.tree.leaves(mapped)]
+            cols.append((sk < self.key_space).astype(jnp.float32)[:, None])
+            agg = _run_aggregate(C.ADD, jnp.concatenate(cols, axis=1),
+                                 is_start, start_pos)
+            return state.at[tgt].add(agg, mode="drop")
+        tables, counts = state
+        if self.mode == "sequential":
+            svals = jax.tree.map(lambda v: v[order], stream.values)
+            return _sequential_fold(self.spec, tables, counts, sk, svals)
+        svals = jax.tree.map(lambda v: v[order], stream.values)
+        mapped = _premap_stream(self.spec, svals)
+        is_start, start_pos, run_len, tgt = self._run_layout(sk)
+        if self.mode == "first":
+            return self._fold_first(tables, counts, mapped, sk,
+                                    is_start, run_len, tgt)
+        out = []
+        for mono, tab, chan in zip(self.spec.monoids,
+                                   jax.tree.leaves(tables),
+                                   jax.tree.leaves(mapped)):
+            acc_dt = (tab.dtype if jnp.issubdtype(tab.dtype, jnp.integer)
+                      or tab.dtype == jnp.bool_ else jnp.float32)
+            agg = _run_aggregate(mono, chan.astype(acc_dt), is_start,
+                                 start_pos)
+            upd = getattr(tab.at[tgt], mono.scatter_method)
+            out.append(upd(agg.astype(tab.dtype), mode="drop"))
+        tables = jax.tree.unflatten(self._holder_treedef, out)
+        counts = counts.at[tgt].add(run_len, mode="drop")
+        return tables, counts
+
+    def _fold_first(self, tables, counts, mapped, sk, is_start, run_len,
+                    tgt):
+        """Keep the first-arriving value per key across chunk boundaries.
+
+        The stable sort preserves emission order within a run, so the run
+        START carries the chunk-first value; it lands only where the
+        carried count is still zero."""
+        K = self.key_space
+        tgt_s = jnp.where(is_start, sk, K)
+        cnt_delta = jnp.zeros((K,), jnp.int32).at[tgt].add(
+            run_len, mode="drop")
+        fresh = (counts == 0) & (cnt_delta > 0)
+        out = []
+        for tab, chan in zip(jax.tree.leaves(tables),
+                             jax.tree.leaves(mapped)):
+            cand = jnp.zeros_like(tab).at[tgt_s].set(
+                chan.astype(tab.dtype), mode="drop")
+            sel = fresh.reshape((K,) + (1,) * (chan.ndim - 1))
+            out.append(jnp.where(sel, cand, tab))
+        tables = jax.tree.unflatten(self._holder_treedef, out)
+        return tables, counts + cnt_delta
+
+    def _fold_kernel(self, state, stream: PairStream):
+        """Radix partition + segment_reduce Pallas pipeline, per leaf.
+
+        The counts column rides along with the first additive leaf (one
+        partition serves channels + counts); only all-max/min specs pay a
+        separate counts pass — each pipeline run re-partitions the keys,
+        so sharing it matters."""
+        tables, counts = state
+        n = stream.keys.shape[0]
+        mapped = _premap_stream(self.spec, stream.values)
+        ones = stream.valid.astype(jnp.float32)[:, None]
+        out = []
+        new_counts = None
+        for mono, tab, chan in zip(self.spec.monoids,
+                                   jax.tree.leaves(tables),
+                                   jax.tree.leaves(mapped)):
+            flat = chan.reshape(n, -1).astype(jnp.float32)
+            acc = tab.reshape(self.key_space, -1)
+            if mono.name == "add" and new_counts is None:
+                flat = jnp.concatenate([flat, ones], axis=1)
+                acc = jnp.concatenate(
+                    [acc, counts.astype(jnp.float32)[:, None]], axis=1)
+                red = self.sort_fold_fn(stream.keys, flat, acc, "add")
+                new_counts = red[:, -1].astype(jnp.int32)
+                red = red[:, :-1]
+            else:
+                red = self.sort_fold_fn(stream.keys, flat, acc, mono.name)
+            out.append(red.reshape(tab.shape).astype(tab.dtype))
+        tables = jax.tree.unflatten(self._holder_treedef, out)
+        if new_counts is None:
+            new_counts = self.sort_fold_fn(
+                stream.keys, ones, counts.astype(jnp.float32)[:, None],
+                "add")[:, 0].astype(jnp.int32)
+        return tables, new_counts
+
+
+def sort_flow(
+    spec: C.CombinerSpec,
+    stream: PairStream,
+    *,
+    sort_fold_fn: Callable | None = None,
+    mode: str | None = None,
+) -> Grouped:
+    """Single-shot sort flow: one chunk through :class:`SortCombiner`."""
+    value_aval = jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), stream.values)
+    sc = SortCombiner(spec, stream.key_space, value_aval,
+                      sort_fold_fn=sort_fold_fn, mode=mode)
+    state = sc.fold_chunk(sc.init_state(), stream)
+    return sc.finalize(state)

@@ -1,6 +1,6 @@
 """Execution engine: map phase + local and distributed runs of the flows.
 
-Three execution flows:
+Four execution flows:
 
 * stream  — **fused map+combine** (the optimizer's default): the item axis is
   scanned in chunks; each chunk's emitted pairs are folded straight into the
@@ -9,6 +9,12 @@ Three execution flows:
   O(K + chunk_pairs).  This is what restores the paper's Figs 8/9 story at
   the bytes level: the legacy combine flow still materialized every pair
   before folding.
+* sort    — **radix-bucketed segment reduce** (``collector.SortCombiner``):
+  each chunk's pairs are partitioned by key (stable packed sort, or the
+  Pallas radix-partition kernel under ``use_kernels``) and ONE aggregate per
+  distinct key merges into the carried tables — O(N·log N + K) compute
+  where the one-hot stream fold pays O(N·K); the cost model
+  (``core/cost_model.py``) picks it for large sparse key spaces.
 * combine — the legacy combining collector (materialize pairs, fold once);
   kept for A/B benchmarks against the paper's optimized flow.
 * reduce  — the paper's baseline (materialize, sort, group, per-key reduce).
@@ -23,6 +29,11 @@ posture):
 * reduce flow — raw pairs are key-partitioned and exchanged with
   ``lax.all_to_all`` (fixed-capacity buckets, Phoenix-buffer style), then each
   shard sorts/groups/reduces its key range.  Collective volume: **O(N)**.
+* sort flow — the shard key ranges ARE the top-level radix buckets: the same
+  key-partitioned all-to-all as the reduce flow (O(N) traffic) hands every
+  shard presorted-by-range segments, which it folds with the local sort
+  collector — the reduce-flow shuffle machinery reused, without the O(K·Lmax)
+  window gather on the far side.
 
 The contrast is the distributed version of the paper's observation that the
 combiner "minimizes data transfers before the reduce phase" (§2.2.1), and is
@@ -145,6 +156,41 @@ def _fold_kernels(use_kernels: bool, key_block: int | None = None
             partial(ops.chunk_monoid_fold, block_k=key_block))
 
 
+def _sort_fold_kernel(use_kernels: bool, bucket_size: int | None = None
+                      ) -> Callable | None:
+    """Radix-partition + segment-reduce pipeline for the sort collector."""
+    if not use_kernels:
+        return None
+    from repro.kernels import ops
+
+    return partial(ops.sort_segment_fold, bucket_size=bucket_size)
+
+
+def _plan_fallback_cb(plan) -> Callable | None:
+    """Per-plan fallback sink: warn ONCE per plan, record every diagnostic.
+
+    The collectors used to ``warnings.warn`` at construction time, which
+    fires again on every re-trace of the same plan (each chunked scan
+    specialization, every new input shape).  Routing through the plan keeps
+    the user-facing warning to one per plan while ``plan.diagnostics``
+    stays complete for ``explain()``."""
+    if plan is None:
+        return None
+
+    def cb(msg: str) -> None:
+        import warnings
+
+        from repro.core import collector as _col
+
+        if not getattr(plan, "_fallback_warned", False):
+            warnings.warn(msg, _col.LoweringFallbackWarning, stacklevel=4)
+            plan._fallback_warned = True
+        if msg not in plan.diagnostics:
+            plan.diagnostics += (msg,)
+
+    return cb
+
+
 #: default bound on emitted pairs materialized per streaming chunk.  While
 #: the whole pair buffer fits this budget the flow degenerates to a single
 #: fully-fused chunk (XLA keeps the pairs out of HBM on its own at that
@@ -159,18 +205,55 @@ DEFAULT_CHUNK_PAIRS = col.ADDITIVE_FOLD_PAIRS_FUSED
 def _stream_combiner(app, spec, *, use_kernels=False,
                      chunk_pairs: int | None = None,
                      key_block: int | None = None,
-                     fold_mode: str | None = None) -> col.StreamCombiner:
+                     fold_mode: str | None = None,
+                     on_fallback: Callable | None = None
+                     ) -> col.StreamCombiner:
     fold_fn, monoid_fold_fn = _fold_kernels(use_kernels, key_block)
     return col.StreamCombiner(spec, app.key_space, app.value_aval,
                               fold_fn=fold_fn, monoid_fold_fn=monoid_fold_fn,
                               chunk_pairs=chunk_pairs, key_block=key_block,
-                              mode=fold_mode)
+                              mode=fold_mode, on_fallback=on_fallback)
+
+
+def _fold_items_chunked(app, combiner, items, chunk_items: int):
+    """Scan the item axis in chunks, folding each chunk into the carried
+    collector state (shared scaffolding of the stream and sort flows).
+
+    Pad items run through the map like real ones; their emissions are
+    masked to the sentinel key before the fold and so never land.
+    """
+    n_items = jax.tree.leaves(items)[0].shape[0]
+    n_chunks = -(-n_items // chunk_items)
+    state = combiner.init_state()
+    if n_chunks <= 1:
+        return combiner.fold_chunk(state, map_phase(app, items))
+
+    padded = n_chunks * chunk_items
+    pad = padded - n_items
+    items_p = jax.tree.map(
+        lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), items)
+    chunked = jax.tree.map(
+        lambda a: a.reshape((n_chunks, chunk_items) + a.shape[1:]), items_p)
+    item_mask = (jnp.arange(padded) < n_items).reshape(n_chunks, chunk_items)
+
+    def body(state, xs):
+        citems, cmask = xs
+        stream = map_phase(app, citems)
+        keys = jnp.where(jnp.repeat(cmask, app.emit_capacity),
+                         stream.keys, app.key_space)
+        state = combiner.fold_chunk(
+            state, col.PairStream(keys, stream.values, app.key_space))
+        return state, None
+
+    state, _ = lax.scan(body, state, (chunked, item_mask))
+    return state
 
 
 def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
                         use_kernels: bool = False,
                         key_block: int | None = None,
-                        fold_mode: str | None = None):
+                        fold_mode: str | None = None,
+                        on_fallback: Callable | None = None):
     """Fused map+combine over ``items``: chunked scan, holder-table carry.
 
     Splits the item axis into chunks of ~``chunk_pairs`` emitted pairs, runs
@@ -196,59 +279,89 @@ def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PA
         key_block = None
     sc = _stream_combiner(app, spec, use_kernels=use_kernels,
                           chunk_pairs=chunk_items * cap,
-                          key_block=key_block, fold_mode=fold_mode)
-
-    state = sc.init_state()
-    if n_chunks <= 1:
-        state = sc.fold_chunk(state, map_phase(app, items))
-        return sc.tables_counts(state)
-
-    padded = n_chunks * chunk_items
-    pad = padded - n_items
-    items_p = jax.tree.map(
-        lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), items)
-    chunked = jax.tree.map(
-        lambda a: a.reshape((n_chunks, chunk_items) + a.shape[1:]), items_p)
-    # pad items run through the map like real ones; their emissions are
-    # masked to the sentinel key before the fold and so never land.
-    item_mask = (jnp.arange(padded) < n_items).reshape(n_chunks, chunk_items)
-
-    def body(state, xs):
-        citems, cmask = xs
-        stream = map_phase(app, citems)
-        keys = jnp.where(jnp.repeat(cmask, app.emit_capacity),
-                         stream.keys, app.key_space)
-        state = sc.fold_chunk(
-            state, col.PairStream(keys, stream.values, app.key_space))
-        return state, None
-
-    state, _ = lax.scan(body, state, (chunked, item_mask))
+                          key_block=key_block, fold_mode=fold_mode,
+                          on_fallback=on_fallback)
+    state = _fold_items_chunked(app, sc, items, chunk_items)
     return sc.tables_counts(state)
 
 
 def run_local_stream(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
                      use_kernels: bool = False, key_block: int | None = None,
-                     fold_mode: str | None = None):
+                     fold_mode: str | None = None,
+                     on_fallback: Callable | None = None):
     tables, counts = stream_local_tables(
         app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels,
-        key_block=key_block, fold_mode=fold_mode)
+        key_block=key_block, fold_mode=fold_mode, on_fallback=on_fallback)
+    grouped = col.finalize_tables(spec, tables, counts, app.key_space)
+    return grouped.keys, grouped.values, grouped.counts
+
+
+#: default bound on pairs materialized per sort-flow chunk.  The sort flow
+#: touches the O(K) tables once per chunk and its per-pair cost is
+#: O(log chunk), so bigger chunks amortize the table pass; no
+#: fused-contraction cap applies (nothing is contracted dense).
+DEFAULT_SORT_CHUNK_PAIRS = 1 << 14
+
+
+def sort_local_tables(app, spec, items, *,
+                      chunk_pairs: int = DEFAULT_SORT_CHUNK_PAIRS,
+                      use_kernels: bool = False,
+                      bucket_size: int | None = None,
+                      sort_mode: str | None = None):
+    """Sort flow over ``items``: chunked scan, per-chunk radix/sort fold.
+
+    Same chunk scaffolding as the stream flow; each chunk is partitioned by
+    key and ONE aggregate per distinct key merges into the carried tables
+    (``collector.SortCombiner``).  Returns un-finalized ``(tables, counts)``.
+    """
+    n_items = jax.tree.leaves(items)[0].shape[0]
+    cap = max(app.emit_capacity, 1)
+    chunk_items = max(1, min(n_items, chunk_pairs // cap))
+    sc = col.SortCombiner(
+        spec, app.key_space, app.value_aval,
+        sort_fold_fn=_sort_fold_kernel(use_kernels, bucket_size),
+        mode=sort_mode)
+    state = _fold_items_chunked(app, sc, items, chunk_items)
+    return sc.tables_counts(state)
+
+
+def run_local_sort(app, spec, items, *,
+                   chunk_pairs: int = DEFAULT_SORT_CHUNK_PAIRS,
+                   use_kernels: bool = False,
+                   bucket_size: int | None = None,
+                   sort_mode: str | None = None):
+    tables, counts = sort_local_tables(
+        app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels,
+        bucket_size=bucket_size, sort_mode=sort_mode)
     grouped = col.finalize_tables(spec, tables, counts, app.key_space)
     return grouped.keys, grouped.values, grouped.counts
 
 
 def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
-              chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
-              key_block: int | None = None):
+              chunk_pairs: int | None = None,
+              key_block: int | None = None,
+              bucket_size: int | None = None):
     if plan.flow == "stream":
         return run_local_stream(app, plan.spec, items,
-                                chunk_pairs=chunk_pairs,
+                                chunk_pairs=(DEFAULT_CHUNK_PAIRS
+                                             if chunk_pairs is None
+                                             else chunk_pairs),
                                 use_kernels=use_kernels,
-                                key_block=key_block)
+                                key_block=key_block,
+                                on_fallback=_plan_fallback_cb(plan))
+    if plan.flow == "sort":
+        return run_local_sort(app, plan.spec, items,
+                              chunk_pairs=(DEFAULT_SORT_CHUNK_PAIRS
+                                           if chunk_pairs is None
+                                           else chunk_pairs),
+                              use_kernels=use_kernels,
+                              bucket_size=bucket_size)
     stream = map_phase(app, items)
     if plan.flow == "combine":
         grouped = col.combine_flow(
             plan.spec, stream, impl=combine_impl,
-            onehot_fn=_onehot_kernel(use_kernels))
+            onehot_fn=_onehot_kernel(use_kernels),
+            on_fallback=_plan_fallback_cb(plan))
     else:
         grouped = col.reduce_flow(
             app.reduce, stream,
@@ -392,47 +505,60 @@ def _merge_shard_tables(app, spec, tables, counts, *, axis_name, scatter):
 # ---------------------------------------------------------------------------
 
 
-def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity):
+def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
+                   shuffle_capacity) -> tuple[col.PairStream, jax.Array]:
+    """Key-partitioned all-to-all of raw pairs (the reduce-flow shuffle).
+
+    Range partitioning: key k -> shard ``k // ceil(K/S)`` — the shard key
+    ranges are the top-level radix buckets, which is why the sort flow can
+    reuse this machinery verbatim.  Returns the received local stream
+    (keys rebased into ``[0, K_local]``) and this shard's key offset.
+    """
     K = app.key_space
     S = num_shards
     K_local = -(-K // S)  # ceil
+    n = stream.keys.shape[0]
+    B = shuffle_capacity or -(-2 * n // S)
 
+    tgt = jnp.where(stream.valid, stream.keys // K_local, S)
+    oh = (tgt[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
+    rank = jnp.take_along_axis(
+        jnp.cumsum(oh, axis=0), jnp.minimum(tgt, S - 1)[:, None],
+        axis=1)[:, 0] - 1
+    ok = stream.valid & (rank < B)
+    slot = jnp.where(ok, jnp.minimum(tgt, S - 1) * B + rank, S * B)
+
+    send_keys = jnp.full((S * B,), K, jnp.int32).at[slot].set(
+        stream.keys, mode="drop").reshape(S, B)
+    send_vals = jax.tree.map(
+        lambda v: jnp.zeros((S * B,) + v.shape[1:], v.dtype).at[slot].set(
+            v, mode="drop").reshape((S, B) + v.shape[1:]),
+        stream.values)
+
+    recv_keys = lax.all_to_all(send_keys, axis_name, split_axis=0,
+                               concat_axis=0, tiled=True)
+    recv_vals = jax.tree.map(
+        lambda v: lax.all_to_all(v, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True),
+        send_vals)
+
+    me = lax.axis_index(axis_name)
+    lo = me * K_local
+    lkeys = jnp.where(recv_keys < K, recv_keys - lo, K_local)
+    lkeys = jnp.where((lkeys >= 0) & (lkeys <= K_local), lkeys, K_local)
+    lstream = col.PairStream(
+        lkeys.reshape(-1),
+        jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]), recv_vals),
+        K_local)
+    return lstream, lo
+
+
+def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity):
     def fn(local_items):
         stream = map_phase(app, local_items)
-        n = stream.keys.shape[0]
-        B = shuffle_capacity or -(-2 * n // S)
-
-        # range partitioning: key k -> shard k // ceil(K/S) (int32-safe)
-        tgt = jnp.where(stream.valid, stream.keys // K_local, S)
-        oh = (tgt[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
-        rank = jnp.take_along_axis(
-            jnp.cumsum(oh, axis=0), jnp.minimum(tgt, S - 1)[:, None],
-            axis=1)[:, 0] - 1
-        ok = stream.valid & (rank < B)
-        slot = jnp.where(ok, jnp.minimum(tgt, S - 1) * B + rank, S * B)
-
-        send_keys = jnp.full((S * B,), K, jnp.int32).at[slot].set(
-            stream.keys, mode="drop").reshape(S, B)
-        send_vals = jax.tree.map(
-            lambda v: jnp.zeros((S * B,) + v.shape[1:], v.dtype).at[slot].set(
-                v, mode="drop").reshape((S, B) + v.shape[1:]),
-            stream.values)
-
-        recv_keys = lax.all_to_all(send_keys, axis_name, split_axis=0,
-                                   concat_axis=0, tiled=True)
-        recv_vals = jax.tree.map(
-            lambda v: lax.all_to_all(v, axis_name, split_axis=0,
-                                     concat_axis=0, tiled=True),
-            send_vals)
-
-        me = lax.axis_index(axis_name)
-        lo = me * K_local
-        lkeys = jnp.where(recv_keys < K, recv_keys - lo, K_local)
-        lkeys = jnp.where((lkeys >= 0) & (lkeys <= K_local), lkeys, K_local)
-        lstream = col.PairStream(lkeys.reshape(-1),
-                                 jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]),
-                                              recv_vals),
-                                 K_local)
+        lstream, lo = _shuffle_pairs(app, stream, axis_name=axis_name,
+                                     num_shards=num_shards,
+                                     shuffle_capacity=shuffle_capacity)
 
         def reduce_global(k, vals, cnt):
             return app.reduce(k + lo, vals, cnt)
@@ -443,6 +569,53 @@ def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity):
             pad_value=app.pad_value)
         # output stays key-sharded: [K_local] per shard -> [S*K_local] global
         return grouped.keys + lo, grouped.values, grouped.counts
+
+    return fn
+
+
+def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
+                   use_kernels, chunk_pairs, bucket_size=None):
+    """Sort flow per shard: the reduce-flow key-partitioned all-to-all
+    (bucket boundaries == shard key ranges, O(N) traffic), then the local
+    sort collector folds the received presorted-by-range segment in
+    ``chunk_pairs``-sized pieces and finalizes its key range.  Output
+    key-sharded like the reduce flow."""
+
+    def fn(local_items):
+        stream = map_phase(app, local_items)
+        lstream, lo = _shuffle_pairs(app, stream, axis_name=axis_name,
+                                     num_shards=num_shards,
+                                     shuffle_capacity=shuffle_capacity)
+        K_local = lstream.key_space
+        sc = col.SortCombiner(
+            spec, K_local, app.value_aval,
+            sort_fold_fn=_sort_fold_kernel(use_kernels, bucket_size))
+        state = sc.init_state()
+        n = lstream.keys.shape[0]
+        if n <= chunk_pairs:
+            state = sc.fold_chunk(state, lstream)
+        else:
+            n_chunks = -(-n // chunk_pairs)
+            pad = n_chunks * chunk_pairs - n
+            keys_p = jnp.pad(lstream.keys, (0, pad),
+                             constant_values=K_local).reshape(
+                n_chunks, chunk_pairs)
+            vals_p = jax.tree.map(
+                lambda v: jnp.pad(
+                    v, [(0, pad)] + [(0, 0)] * (v.ndim - 1)).reshape(
+                    (n_chunks, chunk_pairs) + v.shape[1:]),
+                lstream.values)
+
+            def body(state, xs):
+                ck, cv = xs
+                return sc.fold_chunk(
+                    state, col.PairStream(ck, cv, K_local)), None
+
+            state, _ = lax.scan(body, state, (keys_p, vals_p))
+        tables, counts = sc.tables_counts(state)
+        keys = jnp.arange(K_local, dtype=jnp.int32) + lo
+        vals = jax.vmap(spec.finalize)(keys, tables, counts)
+        return keys, vals, counts
 
     return fn
 
@@ -463,19 +636,46 @@ def run_distributed(
     use_kernels: bool = False,
     scatter_output: bool = False,
     shuffle_capacity: int | None = None,
-    chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
+    chunk_pairs: int | None = None,
     key_block: int | None = None,
+    bucket_size: int | None = None,
 ):
     """shard_map the chosen flow over ``data_axis`` of ``mesh``.
 
     Returns (keys, values, counts); stream/combine flow results are
-    replicated (or key-sharded with ``scatter_output=True``), reduce flow
-    results are key-sharded over the data axis (padded to ceil(K/S)*S keys).
+    replicated (or key-sharded with ``scatter_output=True``), reduce and
+    sort flow results are key-sharded over the data axis (padded to
+    ceil(K/S)*S keys).
+
+    ``chunk_pairs=None`` (the default) re-derives the streaming tiling from
+    the PER-SHARD item count — each shard sees ``ceil(n_items / S)`` items,
+    so reusing a tiling autotuned for the global workload would oversize
+    the chunk (and undersize the key block) by the shard factor.  Pass an
+    int to pin the per-shard chunk explicitly.
     """
-    from jax.sharding import NamedSharding
     from jax.experimental.shard_map import shard_map
 
     S = mesh.shape[data_axis]
+    if plan.flow == "stream" and (chunk_pairs is None or key_block is None):
+        # per-shard autotune (not the local tiling): hint with the shard's
+        # pair count so the chunk knee and the key block match what each
+        # shard actually folds.
+        from repro.core import autotune as at
+
+        n_items = jax.tree.leaves(items)[0].shape[0]
+        n_shard_pairs = max(-(-n_items // S), 1) * max(app.emit_capacity, 1)
+        tiling = at.autotune_stream(
+            app, plan.spec, use_kernels=use_kernels,
+            n_pairs_hint=n_shard_pairs)
+        if chunk_pairs is None:
+            chunk_pairs = tiling.chunk_pairs
+        if key_block is None and tiling.blocked:
+            key_block = tiling.key_block
+    if plan.flow == "sort" and chunk_pairs is None:
+        chunk_pairs = DEFAULT_SORT_CHUNK_PAIRS
+    if chunk_pairs is None:
+        chunk_pairs = DEFAULT_CHUNK_PAIRS
+
     if plan.flow in ("combine", "stream"):
         if plan.flow == "stream":
             fn = _stream_shard_fn(app, plan.spec, use_kernels=use_kernels,
@@ -490,6 +690,12 @@ def run_distributed(
         out_spec = (P(data_axis) if scatter_output else P(),
                     P(data_axis) if scatter_output else P(),
                     P(data_axis) if scatter_output else P())
+    elif plan.flow == "sort":
+        fn = _sort_shard_fn(app, plan.spec, axis_name=data_axis,
+                            num_shards=S, shuffle_capacity=shuffle_capacity,
+                            use_kernels=use_kernels, chunk_pairs=chunk_pairs,
+                            bucket_size=bucket_size)
+        out_spec = (P(data_axis), P(data_axis), P(data_axis))
     else:
         fn = _reduce_shard_fn(app, axis_name=data_axis, num_shards=S,
                               shuffle_capacity=shuffle_capacity)

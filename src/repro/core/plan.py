@@ -5,6 +5,13 @@ the optimized combining execution flow" (§3.2 step 6).  ``plan_execution`` is
 that decision point, plus the bookkeeping used by
 ``benchmarks/bench_optimizer_overhead.py`` to reproduce the paper's
 81 µs detection / 7.6 ms transformation table.
+
+Beyond the paper (following the plan-selection line of Jahani et al. and
+Casper): when the caller supplies a workload-size hint the planner does not
+just flip one flag — it ranks the semantically equivalent flows (the
+streaming one-hot fold vs the sort-based radix fold) with the roofline +
+compute cost model (``core/cost_model.py``) and records the full report on
+the plan, so ``explain()`` shows the quantitative decision.
 """
 
 from __future__ import annotations
@@ -13,20 +20,26 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import combiner as C
+from repro.core import cost_model as cm
 from repro.core.optimizer import Derivation, derive_combiner
+
+FLOWS = ("auto", "stream", "sort", "combine", "reduce")
 
 
 @dataclasses.dataclass
 class ExecutionPlan:
-    flow: str  # "stream" | "combine" | "reduce"
+    flow: str  # "stream" | "sort" | "combine" | "reduce"
     derivation: Derivation | None
     spec: C.CombinerSpec | None
     reason: str = ""
-    #: the autotuner's StreamTiling when the streaming flow was selected
+    #: the autotuner's StreamTiling when the stream/sort flow was selected
     #: (attached by the API layer, which owns the tiling knobs).
     tiling: object | None = None
+    #: the cost model's ranking when a workload hint enabled it.
+    cost: cm.CostReport | None = None
     #: human-readable optimizer/lowering decisions worth surfacing — e.g.
     #: the one-hot -> scatter fallback that used to happen silently.
     diagnostics: tuple[str, ...] = ()
@@ -34,12 +47,13 @@ class ExecutionPlan:
     @property
     def optimized(self) -> bool:
         """True when a derived/manual combiner replaced the baseline flow."""
-        return self.flow in ("stream", "combine")
+        return self.flow in ("stream", "sort", "combine")
 
     def explain(self) -> str:
         """Multi-line report of what the optimizer decided and why —
-        flow, derivation, the autotuned tiling, and any lowering
-        diagnostics (the paper's §3.2 decision, made inspectable)."""
+        flow, derivation, the cost-model ranking, the autotuned tiling,
+        and any lowering diagnostics (the paper's §3.2 decision, made
+        inspectable)."""
         lines = [f"flow: {self.flow} ({self.reason})"]
         d = self.derivation
         if d is not None:
@@ -51,6 +65,8 @@ class ExecutionPlan:
             lines.append(f"optimizer: detect={d.detect_s * 1e6:.0f}us "
                          f"transform={d.transform_s * 1e3:.2f}ms "
                          f"validate={d.validate_s * 1e3:.2f}ms")
+        if self.cost is not None:
+            lines.append(self.cost.describe())
         if self.tiling is not None:
             lines.append(f"tiling: {self.tiling.describe()}")
             for note in getattr(self.tiling, "notes", ()):
@@ -60,16 +76,52 @@ class ExecutionPlan:
         return "\n".join(lines)
 
 
+def _cost_candidates(spec: C.CombinerSpec) -> tuple[str, ...]:
+    """Flows the cost model may choose for this combiner.
+
+    The sort flow's vectorized run-aggregate path needs scatter monoids (or
+    the first/size idioms, whose run layout it exploits directly); coupled
+    holders would fall back to the sequential fold, which has no edge over
+    the stream flow's — don't offer it.
+    """
+    if (spec.scatter_lowerable
+            or spec.strategy in (C.STRATEGY_FIRST, C.STRATEGY_SIZE)):
+        return ("stream", "sort")
+    return ("stream",)
+
+
+def flow_cost_report(app, spec: C.CombinerSpec, n_pairs_hint: int
+                     ) -> cm.CostReport:
+    """Rank the eligible flows for ``app``/``spec`` at a workload size.
+
+    The planner calls this under ``flow="auto"``; benchmarks use it
+    directly to check the model's verdict against measured winners without
+    re-running combiner derivation (the spec is already in hand)."""
+    value_bytes = int(jnp.dtype(app.value_aval.dtype).itemsize *
+                      max(1, int(np.prod(app.value_aval.shape))))
+    d, holder_bytes = spec.holder_width(app.value_aval)
+    return cm.choose_flow(
+        n_pairs=n_pairs_hint, key_space=app.key_space, d=d,
+        value_bytes=value_bytes, holder_bytes=holder_bytes,
+        max_values_per_key=getattr(app, "max_values_per_key", None),
+        candidates=_cost_candidates(spec))
+
+
 def plan_execution(app, *, flow: str = "auto",
-                   trust_semantics: bool = False) -> ExecutionPlan:
+                   trust_semantics: bool = False,
+                   n_pairs_hint: int | None = None) -> ExecutionPlan:
     """Pick the execution flow.
 
     flow="auto" runs the optimizer and, when a combiner is derived, selects
-    the flow the optimizer recommends (the streaming fused flow).  "stream"
-    and "combine" force the respective optimized flow (error if no combiner
-    can be derived); "reduce" forces the paper's baseline.
+    the flow the optimizer recommends.  Without a workload hint that is the
+    streaming fused flow (the paper's one-flag behaviour); with
+    ``n_pairs_hint`` the cost model ranks the equivalent flows (stream vs
+    sort) for that workload size and the cheapest wins — the report lands
+    on ``plan.cost``.  "stream" / "sort" / "combine" force the respective
+    optimized flow (error if no combiner can be derived); "reduce" forces
+    the paper's baseline.
     """
-    if flow not in ("auto", "stream", "combine", "reduce"):
+    if flow not in FLOWS:
         raise ValueError(f"unknown flow {flow!r}")
     if flow == "reduce":
         return ExecutionPlan("reduce", None, None, reason="forced by user")
@@ -78,18 +130,29 @@ def plan_execution(app, *, flow: str = "auto",
     if spec is not None:
         d = Derivation(spec=spec, strategy=C.STRATEGY_MANUAL, reapply_ok=False,
                        validated=False, detect_s=0.0, transform_s=0.0)
-        chosen = d.recommended_flow if flow == "auto" else flow
-        return ExecutionPlan(chosen, d, spec, reason="manual combiner")
+        reason = "manual combiner"
+        derived = d
+    else:
+        key_aval = jax.ShapeDtypeStruct((), jnp.int32)
+        derived = derive_combiner(app.reduce, key_aval, app.value_aval,
+                                  trust_semantics=trust_semantics)
+        if not derived.combinable:
+            if flow in ("combine", "stream", "sort"):
+                raise ValueError(
+                    f"{flow} flow forced but derivation failed: "
+                    f"{derived.failure}")
+            return ExecutionPlan("reduce", derived, None,
+                                 reason=f"not combinable: {derived.failure}")
+        spec = derived.spec
+        reason = f"derived ({derived.strategy})"
 
-    key_aval = jax.ShapeDtypeStruct((), jnp.int32)
-    d = derive_combiner(app.reduce, key_aval, app.value_aval,
-                        trust_semantics=trust_semantics)
-    if d.combinable:
-        chosen = d.recommended_flow if flow == "auto" else flow
-        return ExecutionPlan(chosen, d, d.spec,
-                             reason=f"derived ({d.strategy})")
-    if flow in ("combine", "stream"):
-        raise ValueError(
-            f"{flow} flow forced but derivation failed: {d.failure}")
-    return ExecutionPlan("reduce", d, None,
-                         reason=f"not combinable: {d.failure}")
+    if flow != "auto":
+        return ExecutionPlan(flow, derived, spec, reason=reason)
+    if n_pairs_hint is not None:
+        report = flow_cost_report(app, spec, n_pairs_hint)
+        return ExecutionPlan(
+            report.chosen, derived, spec, cost=report,
+            reason=f"{reason}; cost model [{report.backend}] at "
+                   f"N={n_pairs_hint}")
+    return ExecutionPlan(derived.recommended_flow, derived, spec,
+                         reason=reason)

@@ -16,6 +16,7 @@ import numpy as np
 from repro.kernels import combine_scatter as _cs
 from repro.kernels import flash_decode as _fd
 from repro.kernels import onehot_combine as _oc
+from repro.kernels import radix_partition as _rp
 from repro.kernels import segment_reduce as _sr
 
 #: v5e VMEM budget we tile against (bytes); leave headroom for double buffers.
@@ -144,6 +145,73 @@ def chunk_monoid_fold(keys, values, acc, op="add", *, tile_n=256,
     return _sr.chunk_monoid_fold(keys, values, acc, key_space, op,
                                  tile_n=tile_n, block_k=block_k,
                                  interpret=interpret)
+
+
+def auto_bucket_size(key_space: int, *, d: int = 1, pad_align: int = 256,
+                     budget: int = VMEM_BUDGET) -> int:
+    """Radix bucket width for the sort-flow pipeline.
+
+    The bucket is the ``segment_reduce`` output block, so it must keep a
+    ``[bucket, D]`` table block VMEM-resident; buckets much smaller than
+    ``pad_align`` would drown in per-bucket padding, so the floor is a few
+    K of keys and small key spaces keep a single bucket (plain segment
+    reduce, no partition needed)."""
+    blk = _pow2_floor(max(key_space // 64, 8 * pad_align))
+    while blk > 8 and blk * max(d, 1) * 4 > budget // 8:
+        blk //= 2
+    return key_space if blk >= key_space else blk
+
+
+def radix_partition(keys, values, key_space, *, bucket_size=None,
+                    pad_align=256, tile_n=256, interpret=None):
+    """Two-pass radix partition of a pair chunk into padded bucket regions.
+
+    [N] keys + [N, D] values -> (pkeys, pvals, starts); bucket ``b`` holds
+    keys in ``[b·bucket_size, (b+1)·bucket_size)``, every region a
+    ``pad_align`` multiple (sentinel-padded) — the layout ``segment_reduce``
+    consumes with ``block_k=bucket_size, tile_n=pad_align``."""
+    if values.ndim != 2:
+        raise ValueError("values must be [N, D]")
+    n, d = values.shape
+    if bucket_size is None:
+        bucket_size = auto_bucket_size(key_space, d=d, pad_align=pad_align)
+    num_buckets = -(-key_space // bucket_size)
+    out_slots = n + num_buckets * pad_align + pad_align
+    if (out_slots * (4 + 4 * d) + num_buckets * 8) > VMEM_BUDGET:
+        raise ValueError(
+            f"radix partition of {n} pairs x {num_buckets} buckets does not "
+            f"fit the VMEM budget; shrink the chunk or grow bucket_size")
+    interpret = _interpret_default() if interpret is None else interpret
+    return _rp.radix_partition(keys, values, key_space,
+                               bucket_size=bucket_size, pad_align=pad_align,
+                               tile_n=tile_n, interpret=interpret)
+
+
+def sort_segment_fold(keys, values, acc, op="add", *, bucket_size=None,
+                      pad_align=256, interpret=None):
+    """Sort-flow chunk fold: radix partition + bucket-wise segment reduce,
+    merged into the carried ``[K, D]`` f32 accumulator.
+
+    Signature matches the sort collector's ``sort_fold_fn(keys, mat, acc,
+    op)``.  The partition guarantees every reduce tile falls inside one
+    aligned ``bucket_size`` K-block, so ``segment_reduce`` runs with
+    ``block_k=bucket_size`` — presorted segments, no per-pair scatter."""
+    if values.ndim != 2:
+        raise ValueError("values must be [N, D]")
+    key_space = acc.shape[0]
+    n, d = values.shape
+    if n == 0:
+        return acc.astype(jnp.float32)
+    if bucket_size is None:
+        bucket_size = auto_bucket_size(key_space, d=d, pad_align=pad_align)
+    pkeys, pvals, _ = radix_partition(
+        keys, values, key_space, bucket_size=bucket_size,
+        pad_align=pad_align, interpret=interpret)
+    chunk = segment_reduce(pkeys, pvals, key_space, op,
+                           tile_n=pad_align, block_k=bucket_size,
+                           interpret=interpret)
+    f = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op]
+    return f(acc.astype(jnp.float32), chunk)
 
 
 def combine_scatter(keys, values, key_space, op="add", *, tile_n=256,

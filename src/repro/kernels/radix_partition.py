@@ -1,0 +1,169 @@
+"""Two-pass radix partition: histogram + bucket-scatter, for the sort flow.
+
+The sort flow's shuffle on TPU: a chunk of emitted pairs is partitioned by
+key into ``num_buckets`` contiguous bucket regions (bucket ``b`` holds keys
+in ``[b·bucket_size, (b+1)·bucket_size)``), each region padded to a multiple
+of ``pad_align`` pairs — exactly the alignment the ``segment_reduce`` kernel
+needs so that every pair tile falls inside ONE aligned K-block of size
+``bucket_size``.  The partition is the chunk-local form of the paper's
+shuffle: pairs move once, bucket-by-bucket, and the reduce consumes
+presorted segments instead of scattering per pair.
+
+Pass 1 (``_hist_kernel``): per-bucket pair counts via one-hot column sums —
+a [Tn, B] compare + reduce per tile, MXU/VPU-friendly, no scatter.
+
+Pass 2 (``_scatter_kernel``): sequential grid over pair tiles with a
+VMEM-resident per-bucket cursor carried across tiles.  Each tile computes
+its pairs' destination slots (bucket cursor + stable within-tile rank) and
+stores them with per-pair dynamic writes — VMEM dynamic-update-slices, the
+TPU scatter idiom; the partitioned copy never round-trips HBM between the
+two passes and the reduce.  Within a bucket the original emission order is
+preserved (stable), which the first-element idiom relies on.
+
+Preconditions (ops.py enforces): the padded output fits the VMEM budget;
+keys are int32 in ``[0, num_buckets·bucket_size]`` with the sentinel
+``>= num_buckets·bucket_size`` dropped into the trash slot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hist_kernel(keys_ref, out_ref, *, bucket_size: int, num_buckets: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # [Tn] int32; sentinel -> bucket >= num_buckets
+    b = keys // bucket_size
+    iota = lax.broadcasted_iota(jnp.int32, (keys.shape[0], num_buckets), 1)
+    hit = (b[:, None] == iota)  # sentinel rows are all-zero
+    out_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=0)
+
+
+def _scatter_kernel(starts_ref, keys_ref, vals_ref, out_keys_ref,
+                    out_vals_ref, cursor_ref, *, bucket_size: int,
+                    num_buckets: int, out_slots: int, sentinel: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cursor_ref[...] = starts_ref[...]
+        # pad/trash slots must read as dropped pairs downstream
+        out_keys_ref[...] = jnp.full_like(out_keys_ref, sentinel)
+        out_vals_ref[...] = jnp.zeros_like(out_vals_ref)
+
+    keys = keys_ref[...]  # [Tn]
+    vals = vals_ref[...]  # [Tn, D]
+    tn = keys.shape[0]
+    b = keys // bucket_size
+    valid = b < num_buckets
+    bc = jnp.minimum(b, num_buckets - 1)
+
+    # stable within-tile rank: pairs of the same bucket keep arrival order
+    iota_n = lax.broadcasted_iota(jnp.int32, (tn, tn), 0)
+    same = (bc[None, :] == bc[:, None]) & (iota_n.T <= iota_n)
+    rank = jnp.sum(same & valid[None, :], axis=1) - 1
+
+    cursor = cursor_ref[...]
+    dst = jnp.where(valid, cursor[bc] + rank, out_slots - 1)  # trash slot
+
+    def write(j, _):
+        d = dst[j]
+        out_keys_ref[pl.ds(d, 1)] = keys[j][None]
+        out_vals_ref[pl.ds(d, 1), :] = vals[j][None, :]
+        return 0
+
+    lax.fori_loop(0, tn, write, 0)
+
+    iota_b = lax.broadcasted_iota(jnp.int32, (tn, num_buckets), 1)
+    tile_counts = jnp.sum(((b[:, None] == iota_b) &
+                           valid[:, None]).astype(jnp.int32), axis=0)
+    cursor_ref[...] = cursor + tile_counts
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "key_space", "bucket_size", "pad_align", "tile_n", "interpret"))
+def radix_partition(
+    keys: jax.Array,
+    values: jax.Array,
+    key_space: int,
+    *,
+    bucket_size: int,
+    pad_align: int = 256,
+    tile_n: int = 256,
+    interpret: bool = True,
+):
+    """Partition [N] keys + [N, D] values into padded bucket regions.
+
+    Returns ``(pkeys [Np], pvals [Np, D], starts [B])`` with
+    ``Np = N + B·pad_align + pad_align`` (static): bucket ``b`` occupies
+    ``pkeys[starts[b] : starts[b] + padded_count[b]]``, every region is a
+    ``pad_align`` multiple, pad slots carry the sentinel ``key_space`` and
+    the final ``pad_align`` slots are the invalid-pair trash region.
+    """
+    n = keys.shape[0]
+    d = values.shape[1]
+    num_buckets = -(-key_space // bucket_size)
+    tile_n = min(tile_n, max(n, 8))
+
+    pad_n = (-n) % tile_n
+    # tile padding must be INVALID (trash-bound), not the sentinel: when
+    # key_space is not a bucket_size multiple the sentinel still maps into
+    # the last bucket (harmless for real sentinel pairs — their rows are
+    # cropped downstream — but padding must not consume bucket slots).
+    invalid = num_buckets * bucket_size
+    keys_p = jnp.pad(keys, (0, pad_n), constant_values=invalid)
+    vals_p = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, 0)))
+    n_tiles = keys_p.shape[0] // tile_n
+
+    hist = pl.pallas_call(
+        functools.partial(_hist_kernel, bucket_size=bucket_size,
+                          num_buckets=num_buckets),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((num_buckets,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        interpret=interpret,
+    )(keys_p)
+
+    padded = -(-hist // pad_align) * pad_align  # per-bucket padded counts
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    out_slots = n + num_buckets * pad_align + pad_align  # + trash region
+    out_slots += (-out_slots) % pad_align
+
+    pkeys, pvals = pl.pallas_call(
+        functools.partial(_scatter_kernel, bucket_size=bucket_size,
+                          num_buckets=num_buckets, out_slots=out_slots,
+                          sentinel=key_space),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((num_buckets,), lambda i: (0,)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((out_slots,), lambda i: (0,)),
+            pl.BlockSpec((out_slots, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_slots,), jnp.int32),
+            jax.ShapeDtypeStruct((out_slots, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((num_buckets,), jnp.int32)],
+        interpret=interpret,
+    )(starts, keys_p, vals_p)
+    # trash/pad slots may carry the invalid pad constant — normalize every
+    # dropped slot to the one sentinel the consumers check for
+    pkeys = jnp.minimum(pkeys, key_space)
+    return pkeys, pvals, starts

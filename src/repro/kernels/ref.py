@@ -97,6 +97,59 @@ def combine_scatter(keys: jax.Array, values: jax.Array, key_space: int,
     raise ValueError(op)
 
 
+def radix_partition(keys: jax.Array, values: jax.Array, key_space: int,
+                    *, bucket_size: int, pad_align: int = 256):
+    """Oracle for the two-pass radix partition kernel.
+
+    ``jnp.argsort``-based ground truth with the kernel's exact padded
+    layout: stable sort by bucket id, then place bucket ``b``'s pairs at
+    ``starts[b] + rank`` where every bucket region is padded to a
+    ``pad_align`` multiple (sentinel-filled) and the trailing ``pad_align``
+    slots absorb invalid pairs.
+    """
+    n = keys.shape[0]
+    num_buckets = -(-key_space // bucket_size)
+    b = keys // bucket_size
+    valid = b < num_buckets
+
+    hist = jnp.sum((b[:, None] == jnp.arange(num_buckets)[None, :]) &
+                   valid[:, None], axis=0).astype(jnp.int32)
+    padded = -(-hist // pad_align) * pad_align
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    out_slots = n + num_buckets * pad_align + pad_align
+    out_slots += (-out_slots) % pad_align
+
+    order = jnp.argsort(jnp.where(valid, b, num_buckets), stable=True)
+    sb = jnp.where(valid, b, num_buckets)[order]
+    excl = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(hist).astype(jnp.int32)])
+    rank = jnp.arange(n, dtype=jnp.int32) - excl[jnp.minimum(sb, num_buckets)]
+    dst = jnp.where(sb < num_buckets,
+                    starts[jnp.minimum(sb, num_buckets - 1)] + rank,
+                    out_slots - 1)
+    pkeys = jnp.full((out_slots,), key_space, jnp.int32).at[dst].set(
+        keys[order], mode="drop")
+    pvals = jnp.zeros((out_slots,) + values.shape[1:], jnp.float32).at[
+        dst].set(values[order].astype(jnp.float32), mode="drop")
+    # the shared trash slot ends up holding the LAST invalid pair; the
+    # kernel's contract only promises sentinel keys there — normalize.
+    pkeys = pkeys.at[out_slots - 1].set(key_space)
+    pvals = pvals.at[out_slots - 1].set(0.0)
+    return pkeys, pvals, starts
+
+
+def sort_segment_fold(keys: jax.Array, values: jax.Array, acc: jax.Array,
+                      op: str = "add") -> jax.Array:
+    """Oracle for the sort-flow fold: argsort + segment reduce, merged into
+    the carried ``[K, D]`` accumulator (rows of absent keys unchanged)."""
+    key_space = acc.shape[0]
+    order = jnp.argsort(keys)
+    chunk = segment_reduce(keys[order], values[order], key_space, op)
+    f = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op]
+    return f(acc.astype(jnp.float32), chunk)
+
+
 def segment_reduce(sorted_keys: jax.Array, sorted_values: jax.Array,
                    key_space: int, op: str = "add") -> jax.Array:
     """Baseline reduce phase: segmented reduce over key-sorted pairs.

@@ -216,10 +216,19 @@ def mapreduce_flow_bytes(
       per scan step (written + read), plus the carried O(K) holder tables
       re-touched (read + write) once per chunk — the bytes-level form of
       the paper's "minimize data transfers before the reduce phase".
+    * sort    — the radix-bucketed segment-reduce flow: each chunk's pairs
+      are written + read once; the radix partition / packed sort works on
+      the chunk in fast memory (the Pallas bucket-scatter keeps the
+      partitioned copy VMEM-resident, never an extra HBM round-trip), and
+      the carried tables are re-touched once per chunk — same O(N + K)
+      bytes class as the stream flow, but O(N·log N + K) compute instead
+      of the one-hot fold's O(N·K).
     """
     if chunk_pairs is None:  # keep the model in sync with the engine
-        from repro.core.engine import DEFAULT_CHUNK_PAIRS
-        chunk_pairs = DEFAULT_CHUNK_PAIRS
+        from repro.core.engine import (DEFAULT_CHUNK_PAIRS,
+                                       DEFAULT_SORT_CHUNK_PAIRS)
+        chunk_pairs = (DEFAULT_SORT_CHUNK_PAIRS if flow == "sort"
+                       else DEFAULT_CHUNK_PAIRS)
     K, N = key_space, n_pairs
     pair = 4 + value_bytes  # int32 key + value
     hold = (holder_bytes if holder_bytes is not None else value_bytes) + 4
@@ -241,6 +250,15 @@ def mapreduce_flow_bytes(
             n_blocks = -(-K // key_block)
         return (2.0 * n_chunks * chunk * pair * n_blocks
                 + 2.0 * n_chunks * table)
+    if flow == "sort":
+        n_chunks = max(1, -(-N // max(chunk_pairs, 1)))
+        # pairs in/out once per chunk; the radix partition stays in fast
+        # memory (VMEM bucket-scatter / fused packed sort); the carried
+        # tables are re-touched (read + write) per chunk, minus the first
+        # read (identity init).  Equal to the single-chunk combine-flow
+        # bytes — the sort flow's win is the compute term
+        # (see core/cost_model.py).
+        return 2.0 * N * pair + (2.0 * n_chunks - 1.0) * table
     raise ValueError(f"unknown flow {flow!r}")
 
 
@@ -260,8 +278,10 @@ def mapreduce_flow_peak_bytes(
     and independent of N; the legacy flows grow with the full pair stream.
     """
     if chunk_pairs is None:  # keep the model in sync with the engine
-        from repro.core.engine import DEFAULT_CHUNK_PAIRS
-        chunk_pairs = DEFAULT_CHUNK_PAIRS
+        from repro.core.engine import (DEFAULT_CHUNK_PAIRS,
+                                       DEFAULT_SORT_CHUNK_PAIRS)
+        chunk_pairs = (DEFAULT_SORT_CHUNK_PAIRS if flow == "sort"
+                       else DEFAULT_CHUNK_PAIRS)
     K, N = key_space, n_pairs
     pair = 4 + value_bytes
     hold = (holder_bytes if holder_bytes is not None else value_bytes) + 4
@@ -274,6 +294,10 @@ def mapreduce_flow_peak_bytes(
     if flow == "stream":
         del key_block  # blocking bounds the VMEM working set, not HBM peak
         return min(N, chunk_pairs) * pair + table
+    if flow == "sort":
+        del key_block
+        # chunk buffer + its partitioned/sorted copy + the carried tables
+        return 2.0 * min(N, chunk_pairs) * pair + table
     raise ValueError(f"unknown flow {flow!r}")
 
 

@@ -135,6 +135,42 @@ def test_logsumexp_monoid_stability(seed):
 
 
 # ---------------------------------------------------------------------------
+# Invariant (PR 3): the sort flow (radix-bucketed segment reduce) computes
+# exactly what the reduce flow computes, for any reducer/keys/chunking —
+# including chunk boundaries that split key runs.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    reducer=st.sampled_from(sorted(REDUCERS)),
+    key_space=st.integers(2, 12),
+    n=st.integers(1, 40),
+    chunk=st.sampled_from([16, 64, 4096]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_sort_flow_equals_reduce_flow(reducer, key_space, n, chunk, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, size=(n, 4)).astype(np.int32)
+    vals = rng.standard_normal((n, 4)).astype(np.float32)
+
+    app = make_wc_app(key_space)
+    app.reduce = REDUCERS[reducer]
+    app.pad_value = PADS[reducer]
+
+    items = (jnp.asarray(keys), jnp.asarray(vals))
+    r_sort = MapReduce(app, flow="sort", stream_chunk_pairs=chunk).run(items)
+    r_red = MapReduce(app, flow="reduce").run(items)
+
+    cnt = np.asarray(r_red.counts)
+    mask = cnt > 0
+    np.testing.assert_array_equal(np.asarray(r_sort.counts), cnt)
+    np.testing.assert_allclose(
+        np.asarray(r_sort.values)[mask], np.asarray(r_red.values)[mask],
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # Invariant 4 (PR 2): key-blocked streaming folds are bitwise-equal to the
 # unblocked reference across key spaces straddling the block boundary, and
 # autotuned tilings respect the budget models.

@@ -69,6 +69,90 @@ def test_distributed_engine_flows():
     assert "DIST_OK" in out
 
 
+def test_distributed_sort_flow():
+    """Sort flow on a 4-device mesh: the reduce-flow key-partitioned
+    all-to-all (shard ranges == top-level radix buckets) feeding the local
+    sort collector — same answer, key-sharded output, O(N) wire traffic."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduceApp, plan_execution
+        from repro.core import engine as eng
+
+        VOCAB = 48
+        class WC(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 256
+            emit_capacity = 8
+            def map(self, item, emit): emit(item, jnp.ones_like(item))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = jax.make_mesh((4,), ("data",))
+        rng = np.random.default_rng(0)
+        toks = jax.device_put(
+            jnp.asarray(rng.integers(0, VOCAB, (64, 8)).astype(np.int32)),
+            NamedSharding(mesh, P("data")))
+        want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
+        app = WC()
+        with mesh:
+            plan_s = plan_execution(app, flow="sort")
+            k, v, c = eng.run_distributed(app, plan_s, toks, mesh=mesh)
+            got = np.zeros(VOCAB, np.int64)
+            for kk, vv, cc in zip(np.asarray(k), np.asarray(v), np.asarray(c)):
+                if kk < VOCAB and cc > 0: got[kk] = vv
+            assert np.array_equal(got, want)
+            txt = jax.jit(partial(eng.run_distributed, app, plan_s,
+                                  mesh=mesh)).lower(toks).compile().as_text()
+        assert "all-to-all" in txt and "all-reduce" not in txt
+        print("DIST_SORT_OK")
+    """)
+    assert "DIST_SORT_OK" in out
+
+
+def test_distributed_stream_per_shard_autotune():
+    """run_distributed re-derives the streaming tiling from the per-shard
+    item count (ROADMAP open item) instead of reusing a global tiling."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduceApp, plan_execution
+        from repro.core import autotune as at
+        from repro.core import engine as eng
+
+        VOCAB = 4096
+        class WC(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 256
+            emit_capacity = 8
+            def map(self, item, emit): emit(item, jnp.ones_like(item))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        app = WC()
+        mesh = jax.make_mesh((4,), ("data",))
+        rng = np.random.default_rng(0)
+        toks = jax.device_put(
+            jnp.asarray(rng.integers(0, VOCAB, (256, 8)).astype(np.int32)),
+            NamedSharding(mesh, P("data")))
+        want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
+        with mesh:
+            plan = plan_execution(app, flow="auto")
+            # default (chunk_pairs=None): per-shard autotune, answer exact
+            k, v, c = eng.run_distributed(app, plan, toks, mesh=mesh)
+            assert np.array_equal(np.asarray(v), want)
+        # the per-shard hint changes the derived tiling vs the global one
+        t_global = at.autotune_stream(app, plan.spec,
+                                      n_pairs_hint=256 * 8)
+        t_shard = at.autotune_stream(app, plan.spec,
+                                     n_pairs_hint=(256 // 4) * 8)
+        assert t_shard.chunk_pairs <= t_global.chunk_pairs
+        print("SHARD_TUNE_OK")
+    """)
+    assert "SHARD_TUNE_OK" in out
+
+
 def test_elastic_reshard_8_to_4():
     """Checkpoint on an (4,2) mesh, restore resharded onto (2,2)."""
     out = run_with_devices("""

@@ -173,6 +173,71 @@ def test_fold_kernels_empty_chunk():
     np.testing.assert_allclose(np.asarray(got), np.asarray(acc))
 
 
+@pytest.mark.parametrize("n,k,bs,pa", [
+    (64, 64, 16, 8), (200, 128, 32, 16), (300, 100, 32, 16),  # K % bs != 0
+    (50, 256, 256, 16),  # single bucket
+])
+def test_radix_partition_matches_ref(n, k, bs, pa):
+    """Two-pass histogram + bucket-scatter vs the argsort oracle: identical
+    padded layout, bucket-grouped keys, stable within-bucket order."""
+    keys = RNG.integers(0, k + 1, size=n).astype(np.int32)  # incl. sentinel
+    vals = _vals((n, 4), np.float32)
+    got_k, got_v, got_s = ops.radix_partition(
+        jnp.asarray(keys), jnp.asarray(vals), k, bucket_size=bs, pad_align=pa,
+        tile_n=pa)
+    want_k, want_v, want_s = ref.radix_partition(
+        jnp.asarray(keys), jnp.asarray(vals), k, bucket_size=bs, pad_align=pa)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+    # value rows: only real-pair slots are contractual (pad slots carry
+    # zeros in both; sentinel/trash slot contents are dropped downstream)
+    real = np.asarray(want_k) < k
+    np.testing.assert_allclose(np.asarray(got_v)[real],
+                               np.asarray(want_v)[real], rtol=1e-6)
+
+
+def test_radix_partition_bucket_invariants():
+    """Every non-sentinel key lies inside its bucket's key range and every
+    bucket region is pad_align-aligned."""
+    n, k, bs, pa = 500, 512, 64, 32
+    keys = RNG.integers(0, k, size=n).astype(np.int32)
+    vals = _vals((n, 1), np.float32)
+    pk, _, starts = ops.radix_partition(jnp.asarray(keys), jnp.asarray(vals),
+                                        k, bucket_size=bs, pad_align=pa)
+    pk, starts = np.asarray(pk), np.asarray(starts)
+    assert (starts % pa == 0).all()
+    for b in range(k // bs):
+        lo = starts[b]
+        hi = starts[b + 1] if b + 1 < len(starts) else len(pk)
+        seg = pk[lo:hi]
+        real = seg[seg < k]
+        assert ((real >= b * bs) & (real < (b + 1) * bs)).all(), b
+    got = np.sort(pk[pk < k])
+    np.testing.assert_array_equal(got, np.sort(keys))
+
+
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+@pytest.mark.parametrize("n,d,k,bs", [(100, 3, 64, 16), (333, 2, 1000, 256)])
+def test_sort_segment_fold_matches_ref(op, n, d, k, bs):
+    """Radix partition + segment_reduce pipeline == argsort/segment oracle,
+    merged into a carried accumulator."""
+    keys = RNG.integers(0, k + 1, size=n).astype(np.int32)
+    vals = jnp.asarray(_vals((n, d), np.float32))
+    acc = jnp.asarray(_vals((k, d), np.float32))
+    got = ops.sort_segment_fold(jnp.asarray(keys), vals, acc, op,
+                                bucket_size=bs)
+    want = ref.sort_segment_fold(jnp.asarray(keys), vals, acc, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_radix_partition_vmem_guard():
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.radix_partition(jnp.zeros(1 << 16, jnp.int32),
+                            jnp.zeros((1 << 16, 128), jnp.float32),
+                            key_space=1 << 20, bucket_size=256)
+
+
 def test_fold_kernel_autoblocks_past_vmem_budget():
     """A key space whose [Tn, K] one-hot would blow VMEM is auto-partitioned
     into key blocks instead of raising; an explicitly oversized block still
