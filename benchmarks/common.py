@@ -41,3 +41,22 @@ def time_fn(fn, *args, warmup: int = 3, iters: int = 10) -> float:
 
 def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def parse_rows(text: str) -> list[dict]:
+    """Parse ``name,us_per_call,derived`` CSV lines into artifact rows
+    (shared by run.py's harness and the standalone --json modes)."""
+    rows = []
+    for line in text.splitlines():
+        if line.startswith("#") or "," not in line:
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({"name": parts[0], "us_per_call": us,
+                     "derived": parts[2] if len(parts) > 2 else ""})
+    return rows

@@ -20,10 +20,17 @@ missing from the current run FAIL unless ``--allow-missing`` (losing a
 benchmark is itself a regression).  ``*_FAILED`` rows and a non-empty
 ``failures`` list in the current artifact always fail.
 
+``--update-baseline`` regenerates the committed baseline from the current
+artifact instead of gating on it: the diff is still computed (and written
+to ``--summary`` for the job log), then the baseline file is overwritten
+with the current run — replacing the old hand-edit workflow.  A current
+artifact with module failures is refused (a broken run must never become
+the baseline).
+
 Usage:
   python benchmarks/compare.py BASELINE.json CURRENT.json \
       [--time-rtol 3.0] [--bytes-rtol 1.2] [--abs-floor-us 2000] \
-      [--summary compare.md] [--allow-missing]
+      [--summary compare.md] [--allow-missing] [--update-baseline]
 """
 
 from __future__ import annotations
@@ -129,6 +136,10 @@ def main(argv=None) -> int:
                          "job summary)")
     ap.add_argument("--allow-missing", action="store_true",
                     help="missing rows warn instead of failing")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite BASELINE with CURRENT after diffing "
+                         "(the workflow_dispatch regeneration job); exits "
+                         "0 unless the current run has module failures")
     args = ap.parse_args(argv)
 
     base, _ = load_rows(args.baseline)
@@ -160,6 +171,19 @@ def main(argv=None) -> int:
     print(f"# {len(verdicts)} rows: {ok} ok, {n_fail} failing "
           f"(time_rtol={args.time_rtol}x bytes_rtol={args.bytes_rtol}x "
           f"abs_floor={args.abs_floor_us}us)")
+    if args.update_baseline:
+        if cur_failures:
+            print("# refusing to update the baseline: current artifact has "
+                  "module failures")
+            return 1
+        with open(args.current) as f:
+            data = json.load(f)
+        with open(args.baseline, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        print(f"# baseline {args.baseline} updated from {args.current} "
+              f"({len(cur)} rows; the table above is the old-vs-new diff)")
+        return 0
     return 1 if regressed else 0
 
 

@@ -44,23 +44,6 @@ MODULE_NAMES = (
 CI_SCALE = 0.05
 
 
-def _parse_rows(text: str) -> list[dict]:
-    rows = []
-    for line in text.splitlines():
-        if line.startswith("#") or "," not in line:
-            continue
-        parts = line.split(",", 2)
-        if len(parts) < 2:
-            continue
-        try:
-            us = float(parts[1])
-        except ValueError:
-            continue
-        rows.append({"name": parts[0], "us_per_call": us,
-                     "derived": parts[2] if len(parts) > 2 else ""})
-    return rows
-
-
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--preset", choices=("full", "ci"), default="full",
@@ -73,7 +56,7 @@ def main(argv=None) -> int:
                     help="subset of benchmark modules to run")
     args = ap.parse_args(argv)
 
-    from benchmarks.common import bench_scale
+    from benchmarks.common import bench_scale, parse_rows
 
     # precedence: --scale > --preset ci > pre-set REPRO_BENCH_SCALE > 1.0
     if args.scale is not None:
@@ -105,7 +88,7 @@ def main(argv=None) -> int:
             continue
         text = buf.getvalue()
         sys.stdout.write(text)
-        rows.extend(_parse_rows(text))
+        rows.extend(parse_rows(text))
 
     if args.json:
         with open(args.json, "w") as f:

@@ -115,7 +115,11 @@ class MapReduce:
                   chunks are radix-partitioned / stably sorted by key and
                   ONE aggregate per distinct key merges into the holder
                   tables — O(N·log N + K) compute vs the one-hot fold's
-                  O(N·K), the winner at large sparse key spaces
+                  O(N·K), the winner at large sparse key spaces.  Past one
+                  bucket sweep the partition runs the multi-pass hierarchy
+                  (``kernels/ops.plan_radix_levels``; the pure-JAX sort a
+                  multi-pass packed digit radix), so K in the millions
+                  keeps the fast path — ``explain()`` shows levels×buckets
       * "combine" force the legacy combine flow (materialize pairs, fold
                   once); kept for A/B benchmarks
       * "reduce"  force the baseline flow (paper's un-optimized MR4J)
@@ -161,6 +165,7 @@ class MapReduce:
         self.tiling = None
         key_block = None
         bucket_size = None
+        level_fanouts = None
         if self.plan.flow == "stream":
             self.tiling = at.autotune_stream(
                 app, self.plan.spec, use_kernels=use_kernels,
@@ -182,6 +187,11 @@ class MapReduce:
             stream_chunk_pairs = self.tiling.chunk_pairs
             bucket_size = (self.tiling.key_block if self.tiling.blocked
                            else None)
+            # the hierarchical level decomposition rides with the bucket;
+            # an infeasible plan leaves bucket_size=None so the engine
+            # re-checks and fires the LoweringFallbackWarning on the plan
+            level_fanouts = (self.tiling.level_fanouts
+                             if bucket_size is not None else None)
         elif not isinstance(stream_chunk_pairs, int):
             stream_chunk_pairs = eng.DEFAULT_CHUNK_PAIRS
         if (self.plan.flow == "combine" and self.plan.spec is not None
@@ -213,7 +223,8 @@ class MapReduce:
                                     use_kernels=use_kernels,
                                     chunk_pairs=stream_chunk_pairs,
                                     key_block=key_block,
-                                    bucket_size=bucket_size))
+                                    bucket_size=bucket_size,
+                                    level_fanouts=level_fanouts))
 
     def run(self, items) -> MapReduceResult:
         keys, values, counts = self._run(items)

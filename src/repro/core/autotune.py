@@ -79,6 +79,11 @@ class StreamTiling:
     working_set_bytes: float  # per-grid-step VMEM model (kernel path)
     n_pairs_hint: int
     notes: tuple[str, ...] = ()
+    #: hierarchical radix fan-outs of the sort flow's kernel partition
+    #: (() == single level / no partition); the pure-JAX lowering's
+    #: multi-pass packed-sort count is recorded in sort_passes.
+    level_fanouts: tuple[int, ...] = ()
+    sort_passes: int = 1
 
     @property
     def n_key_blocks(self) -> int:
@@ -88,10 +93,19 @@ class StreamTiling:
     def blocked(self) -> bool:
         return self.key_block < self.key_space
 
+    @property
+    def levels(self) -> int:
+        return max(len(self.level_fanouts), 1)
+
     def describe(self) -> str:
         if self.mode == "sort":
             blk = (f"buckets={self.n_key_blocks}×{self.key_block}keys"
                    if self.blocked else "buckets=1 (single full sort)")
+            if len(self.level_fanouts) > 1:
+                fan = "·".join(str(b) for b in self.level_fanouts)
+                blk += f" levels={len(self.level_fanouts)}({fan})"
+            if self.sort_passes > 1:
+                blk += f" sort_passes={self.sort_passes}"
         else:
             blk = (f"key_block={self.key_block}×{self.n_key_blocks}"
                    if self.blocked else f"key_block={self.key_block} (single)")
@@ -338,14 +352,20 @@ def autotune_sort(
     chunk_pairs: int | str = "auto",
     n_pairs_hint: int | None = None,
 ) -> StreamTiling:
-    """Pick the sort-flow tiling: chunk size + radix bucket granularity.
+    """Pick the sort-flow tiling: chunk size + radix level decomposition.
 
     The sort flow touches the O(K) tables once per chunk and its per-pair
     cost grows only as log(chunk), so the chunk is sized as large as the
     clamp allows (bounded by the workload hint — no point chunking beyond
-    the stream).  ``key_block`` records the radix bucket width the Pallas
-    pipeline partitions with (``kernels/ops.auto_bucket_size``); the
-    pure-JAX lowering runs one full packed sort per chunk instead — noted.
+    the stream).  ``key_block`` records the LEAF radix bucket width and
+    ``level_fanouts`` the hierarchical decomposition the Pallas pipeline
+    partitions with (``kernels/ops.plan_radix_levels``, sized against the
+    VMEM budget); the pure-JAX lowering sorts each chunk instead —
+    ``sort_passes`` packed digit sorts once the 31-bit packed regime runs
+    out (noted).  An infeasible level plan (key space past the level
+    budget) is noted here; the engine fires the
+    :class:`LoweringFallbackWarning` when the kernel path is actually
+    requested.
     """
     notes: list[str] = []
     value_bytes = int(jnp.dtype(app.value_aval.dtype).itemsize *
@@ -365,21 +385,51 @@ def autotune_sort(
             chunk = min(chunk, _pow2_round(n_pairs_hint))
         chunk = max(min(chunk, MAX_CHUNK_PAIRS), app.emit_capacity, 1)
 
+    fanouts: tuple[int, ...] = ()
+    kernels_feasible = False
     try:
         from repro.kernels import ops
 
-        bucket = ops.auto_bucket_size(K, d=d + 1)
+        plan = ops.plan_radix_levels(K, d=d + 1)
+        if plan.feasible:
+            kernels_feasible = True
+            bucket = plan.bucket_size
+            fanouts = plan.fanouts
+            if plan.levels > 1:
+                notes.append(
+                    f"hierarchical radix partition: {plan.describe()} — "
+                    f"key space past one bucket sweep, each level's "
+                    f"fan-out bounded at {ops.MAX_RADIX_FANOUT}")
+        else:
+            bucket = K
+            notes.append(
+                f"LEVEL BUDGET: {plan.reason}; the kernel pipeline "
+                f"degrades to the pure-JAX multi-pass sorted fold "
+                f"(LoweringFallbackWarning at run time)")
     except Exception:  # pragma: no cover
         bucket = K
+    sort_passes = col.sort_radix_passes(min(chunk, MAX_CHUNK_PAIRS), K)
     if not use_kernels:
-        notes.append("pure-JAX lowering: one packed stable sort per chunk "
-                     "(the radix buckets below are the kernel pipeline's "
-                     "partition granularity)")
+        if sort_passes > 1:
+            notes.append(
+                f"pure-JAX lowering: (key, index) no longer fits one "
+                f"31-bit packed word at chunk={chunk} — multi-pass packed "
+                f"radix sort, {sort_passes} digit sorts per chunk "
+                f"(lax.scan over levels)")
+        else:
+            notes.append("pure-JAX lowering: one packed stable sort per "
+                         "chunk (the radix buckets below are the kernel "
+                         "pipeline's partition granularity)")
 
     hint = n_pairs_hint if n_pairs_hint else max(chunk * 4, 1 << 16)
+    # bytes model per ACTUAL lowering: the kernel hierarchy only when its
+    # plan is feasible — the infeasible fallback runs the pure-JAX
+    # multi-pass sort and pays its per-pass traffic
+    levels = (max(len(fanouts), 1) if use_kernels and kernels_feasible
+              else sort_passes)
     model_bytes = roofline.mapreduce_flow_bytes(
         "sort", n_pairs=hint, key_space=K, value_bytes=value_bytes,
-        holder_bytes=holder_bytes, chunk_pairs=chunk)
+        holder_bytes=holder_bytes, chunk_pairs=chunk, sort_levels=levels)
     model_peak = roofline.mapreduce_flow_peak_bytes(
         "sort", n_pairs=hint, key_space=K, value_bytes=value_bytes,
         holder_bytes=holder_bytes, chunk_pairs=chunk)
@@ -390,7 +440,7 @@ def autotune_sort(
         source="manual" if manual_chunk else "model",
         model_bytes=model_bytes, model_peak_bytes=model_peak,
         working_set_bytes=working_set, n_pairs_hint=hint,
-        notes=tuple(notes))
+        notes=tuple(notes), level_fanouts=fanouts, sort_passes=sort_passes)
 
 
 def _probe_chunk(app, spec, chunk: int, *, use_kernels: bool,

@@ -115,7 +115,8 @@ class CostReport:
         return "\n".join(lines)
 
 
-def _cpu_terms(flow: str, *, n, k, d, lmax, chunk_pairs, fused_combine):
+def _cpu_terms(flow: str, *, n, k, d, lmax, chunk_pairs, fused_combine,
+               sort_passes=1):
     c = CPU_COEFF
     logn = max(math.log2(max(min(n, chunk_pairs), 2)), 1.0)
     terms = [("dispatch", c["dispatch"]), ("map", c["pair"] * n)]
@@ -125,7 +126,10 @@ def _cpu_terms(flow: str, *, n, k, d, lmax, chunk_pairs, fused_combine):
         terms.append(("onehot", c["nk"] * n * k * d))
         terms.append(("table", c["table"] * k * d))
     elif flow == "sort":
-        terms.append(("sort", c["sortn"] * n * logn))
+        # one packed digit sort per radix pass: past the 31-bit packed
+        # regime the pure-JAX lowering pays ceil(key_bits / digit_bits)
+        # passes (collector.sort_radix_passes), each n·log n
+        terms.append(("sort", c["sortn"] * n * logn * max(sort_passes, 1)))
         terms.append(("segments", c["seg"] * n * d))
         terms.append(("table", c["table"] * k * d))
     elif flow == "combine":
@@ -143,13 +147,16 @@ def _cpu_terms(flow: str, *, n, k, d, lmax, chunk_pairs, fused_combine):
     return terms
 
 
-def _tpu_terms(flow: str, *, n, k, d, lmax, model_bytes, fused_combine):
+def _tpu_terms(flow: str, *, n, k, d, lmax, model_bytes, fused_combine,
+               sort_levels=1):
     mem_s = model_bytes / roofline.HBM_BW
     if flow in ("stream", "combine"):
         flops = 2.0 * n * k * d  # one-hot contraction on the MXU
         comp_s = flops / (roofline.PEAK_FLOPS * TPU_MXU_UTIL)
     elif flow == "sort":
-        comp_s = (n * RADIX_PASSES / TPU_SCALAR_PAIRS
+        # hist + bucket-scatter per hierarchy level: the per-pair dynamic
+        # VMEM stores run on the scalar unit once per level
+        comp_s = (n * RADIX_PASSES * max(sort_levels, 1) / TPU_SCALAR_PAIRS
                   + (n * d + k * d) / TPU_VPU_ELEMS)
     else:  # reduce
         logn = max(math.log2(max(n, 2)), 1.0)
@@ -173,24 +180,42 @@ def estimate_flow_cost(
     n, k = max(int(n_pairs), 1), max(int(key_space), 1)
     lmax = max_values_per_key or max(n // k, 1)
     chunk = chunk_pairs or n
+    from repro.core import collector as col
+
+    # the sort flow's level count per lowering: pure-JAX digit-sort passes
+    # on the cpu profile, hierarchical partition levels (kernel path) on
+    # tpu — derived only when the sort flow is the one being priced
+    sort_levels = 1
+    if flow == "sort":
+        if backend == "tpu":
+            try:
+                from repro.kernels import ops
+
+                rplan = ops.plan_radix_levels(k, d=d + 1)
+                sort_levels = max(rplan.levels, 1) if rplan.feasible else 1
+            except Exception:  # pragma: no cover
+                sort_levels = 1
+        else:
+            sort_levels = col.sort_radix_passes(max(min(n, chunk), 1), k)
     model_bytes = roofline.mapreduce_flow_bytes(
         flow, n_pairs=n, key_space=k, value_bytes=value_bytes,
         holder_bytes=holder_bytes, chunk_pairs=chunk,
-        max_values_per_key=lmax)
+        max_values_per_key=lmax,
+        sort_levels=sort_levels if flow == "sort" else 1)
     # the legacy combine flow keeps the fused one-hot contraction only
     # while N is inside the fused regime or K under the legacy cutoff
-    from repro.core import collector as col
-
     fused_combine = (n <= col.ADDITIVE_FOLD_PAIRS_FUSED
                      or k <= col.ONEHOT_MAX_KEYS)
     if backend == "cpu":
         terms = _cpu_terms(flow, n=n, k=k, d=d, lmax=lmax,
-                           chunk_pairs=chunk, fused_combine=fused_combine)
+                           chunk_pairs=chunk, fused_combine=fused_combine,
+                           sort_passes=sort_levels)
         est = sum(v for _, v in terms)
     elif backend == "tpu":
         terms = _tpu_terms(flow, n=n, k=k, d=d, lmax=lmax,
                            model_bytes=model_bytes,
-                           fused_combine=fused_combine)
+                           fused_combine=fused_combine,
+                           sort_levels=sort_levels)
         est = max(v for _, v in terms)  # overlappable roofline terms
     else:
         raise ValueError(f"unknown backend profile {backend!r}")

@@ -10,11 +10,14 @@ Four execution flows:
   the bytes level: the legacy combine flow still materialized every pair
   before folding.
 * sort    — **radix-bucketed segment reduce** (``collector.SortCombiner``):
-  each chunk's pairs are partitioned by key (stable packed sort, or the
-  Pallas radix-partition kernel under ``use_kernels``) and ONE aggregate per
-  distinct key merges into the carried tables — O(N·log N + K) compute
+  each chunk's pairs are partitioned by key (stable packed sort — multi-pass
+  digit radix past the 31-bit packed regime — or the hierarchical Pallas
+  radix-partition kernel pipeline under ``use_kernels``) and ONE aggregate
+  per distinct key merges into the carried tables — O(N·log N + K) compute
   where the one-hot stream fold pays O(N·K); the cost model
-  (``core/cost_model.py``) picks it for large sparse key spaces.
+  (``core/cost_model.py``) picks it for large sparse key spaces, and the
+  level decomposition (``kernels/ops.plan_radix_levels``) keeps the fast
+  path through K in the millions instead of silently degrading.
 * combine — the legacy combining collector (materialize pairs, fold once);
   kept for A/B benchmarks against the paper's optimized flow.
 * reduce  — the paper's baseline (materialize, sort, group, per-key reduce).
@@ -156,14 +159,50 @@ def _fold_kernels(use_kernels: bool, key_block: int | None = None
             partial(ops.chunk_monoid_fold, block_k=key_block))
 
 
-def _sort_fold_kernel(use_kernels: bool, bucket_size: int | None = None
+def _sort_fold_kernel(use_kernels: bool, bucket_size: int | None = None,
+                      level_fanouts: tuple[int, ...] | None = None
                       ) -> Callable | None:
-    """Radix-partition + segment-reduce pipeline for the sort collector."""
+    """Radix-partition + segment-reduce pipeline for the sort collector.
+
+    ``level_fanouts`` binds the hierarchical multi-pass decomposition
+    (``ops.plan_radix_levels``); ``None`` lets the wrapper re-derive it."""
     if not use_kernels:
         return None
     from repro.kernels import ops
 
-    return partial(ops.sort_segment_fold, bucket_size=bucket_size)
+    return partial(ops.sort_segment_fold, bucket_size=bucket_size,
+                   fanouts=level_fanouts)
+
+
+def _check_sort_kernel_plan(spec, key_space: int, value_aval,
+                            use_kernels: bool,
+                            bucket_size: int | None,
+                            level_fanouts: tuple[int, ...] | None,
+                            on_fallback: Callable | None):
+    """Resolve the radix level plan for the kernel sort fold.
+
+    Returns ``(use_kernels, bucket_size, level_fanouts)``.  A key space
+    whose decomposition exceeds the level budget fires a
+    :class:`LoweringFallbackWarning` (once, through the plan sink) with the
+    plan diagnostics and drops to the pure-JAX multi-pass sorted fold —
+    instead of the old behaviour of silently clamping the bucket count
+    past the padded-layout envelope."""
+    if not use_kernels or bucket_size is not None:
+        return use_kernels, bucket_size, level_fanouts
+    if not spec.kernel_monoid_ok(value_aval):
+        return use_kernels, bucket_size, level_fanouts  # kernel unused
+    from repro.kernels import ops
+
+    d, _ = spec.holder_width(value_aval)
+    plan = ops.plan_radix_levels(key_space, d=d + 1)
+    if not plan.feasible:
+        col._emit_fallback(
+            f"sort flow: {plan.reason}; degrading to the pure-JAX "
+            f"multi-pass sorted fold (the radix-partition kernel pipeline "
+            f"is disabled for this key space). Raise MAX_RADIX_LEVELS or "
+            f"shard the key space.", on_fallback)
+        return False, None, None
+    return use_kernels, plan.bucket_size, plan.fanouts
 
 
 def _plan_fallback_cb(plan) -> Callable | None:
@@ -307,20 +346,28 @@ def sort_local_tables(app, spec, items, *,
                       chunk_pairs: int = DEFAULT_SORT_CHUNK_PAIRS,
                       use_kernels: bool = False,
                       bucket_size: int | None = None,
-                      sort_mode: str | None = None):
+                      level_fanouts: tuple[int, ...] | None = None,
+                      sort_mode: str | None = None,
+                      sort_impl: str = "auto",
+                      on_fallback: Callable | None = None):
     """Sort flow over ``items``: chunked scan, per-chunk radix/sort fold.
 
     Same chunk scaffolding as the stream flow; each chunk is partitioned by
-    key and ONE aggregate per distinct key merges into the carried tables
+    key (hierarchically, past one bucket sweep) and ONE aggregate per
+    distinct key merges into the carried tables
     (``collector.SortCombiner``).  Returns un-finalized ``(tables, counts)``.
     """
     n_items = jax.tree.leaves(items)[0].shape[0]
     cap = max(app.emit_capacity, 1)
     chunk_items = max(1, min(n_items, chunk_pairs // cap))
+    use_kernels, bucket_size, level_fanouts = _check_sort_kernel_plan(
+        spec, app.key_space, app.value_aval, use_kernels, bucket_size,
+        level_fanouts, on_fallback)
     sc = col.SortCombiner(
         spec, app.key_space, app.value_aval,
-        sort_fold_fn=_sort_fold_kernel(use_kernels, bucket_size),
-        mode=sort_mode)
+        sort_fold_fn=_sort_fold_kernel(use_kernels, bucket_size,
+                                       level_fanouts),
+        mode=sort_mode, sort_impl=sort_impl)
     state = _fold_items_chunked(app, sc, items, chunk_items)
     return sc.tables_counts(state)
 
@@ -329,10 +376,14 @@ def run_local_sort(app, spec, items, *,
                    chunk_pairs: int = DEFAULT_SORT_CHUNK_PAIRS,
                    use_kernels: bool = False,
                    bucket_size: int | None = None,
-                   sort_mode: str | None = None):
+                   level_fanouts: tuple[int, ...] | None = None,
+                   sort_mode: str | None = None,
+                   sort_impl: str = "auto",
+                   on_fallback: Callable | None = None):
     tables, counts = sort_local_tables(
         app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels,
-        bucket_size=bucket_size, sort_mode=sort_mode)
+        bucket_size=bucket_size, level_fanouts=level_fanouts,
+        sort_mode=sort_mode, sort_impl=sort_impl, on_fallback=on_fallback)
     grouped = col.finalize_tables(spec, tables, counts, app.key_space)
     return grouped.keys, grouped.values, grouped.counts
 
@@ -340,7 +391,8 @@ def run_local_sort(app, spec, items, *,
 def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
               chunk_pairs: int | None = None,
               key_block: int | None = None,
-              bucket_size: int | None = None):
+              bucket_size: int | None = None,
+              level_fanouts: tuple[int, ...] | None = None):
     if plan.flow == "stream":
         return run_local_stream(app, plan.spec, items,
                                 chunk_pairs=(DEFAULT_CHUNK_PAIRS
@@ -355,7 +407,9 @@ def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
                                            if chunk_pairs is None
                                            else chunk_pairs),
                               use_kernels=use_kernels,
-                              bucket_size=bucket_size)
+                              bucket_size=bucket_size,
+                              level_fanouts=level_fanouts,
+                              on_fallback=_plan_fallback_cb(plan))
     stream = map_phase(app, items)
     if plan.flow == "combine":
         grouped = col.combine_flow(
@@ -574,12 +628,19 @@ def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity):
 
 
 def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
-                   use_kernels, chunk_pairs, bucket_size=None):
+                   use_kernels, chunk_pairs, bucket_size=None,
+                   level_fanouts=None, on_fallback=None):
     """Sort flow per shard: the reduce-flow key-partitioned all-to-all
     (bucket boundaries == shard key ranges, O(N) traffic), then the local
     sort collector folds the received presorted-by-range segment in
     ``chunk_pairs``-sized pieces and finalizes its key range.  Output
-    key-sharded like the reduce flow."""
+    key-sharded like the reduce flow.
+
+    The shard key ranges ARE the hierarchy's top-level digits: the
+    all-to-all is the distributed form of radix level 0 (wire format
+    unchanged from the reduce flow), and each shard re-derives the
+    remaining level decomposition for its own ``K/S`` range — one fewer
+    level than the local pipeline needs at the full key space."""
 
     def fn(local_items):
         stream = map_phase(app, local_items)
@@ -587,9 +648,12 @@ def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
                                      num_shards=num_shards,
                                      shuffle_capacity=shuffle_capacity)
         K_local = lstream.key_space
+        uk, bs, lf = _check_sort_kernel_plan(
+            spec, K_local, app.value_aval, use_kernels, bucket_size,
+            level_fanouts, on_fallback)
         sc = col.SortCombiner(
             spec, K_local, app.value_aval,
-            sort_fold_fn=_sort_fold_kernel(use_kernels, bucket_size))
+            sort_fold_fn=_sort_fold_kernel(uk, bs, lf))
         state = sc.init_state()
         n = lstream.keys.shape[0]
         if n <= chunk_pairs:
@@ -639,6 +703,7 @@ def run_distributed(
     chunk_pairs: int | None = None,
     key_block: int | None = None,
     bucket_size: int | None = None,
+    level_fanouts: tuple[int, ...] | None = None,
 ):
     """shard_map the chosen flow over ``data_axis`` of ``mesh``.
 
@@ -694,7 +759,9 @@ def run_distributed(
         fn = _sort_shard_fn(app, plan.spec, axis_name=data_axis,
                             num_shards=S, shuffle_capacity=shuffle_capacity,
                             use_kernels=use_kernels, chunk_pairs=chunk_pairs,
-                            bucket_size=bucket_size)
+                            bucket_size=bucket_size,
+                            level_fanouts=level_fanouts,
+                            on_fallback=_plan_fallback_cb(plan))
         out_spec = (P(data_axis), P(data_axis), P(data_axis))
     else:
         fn = _reduce_shard_fn(app, axis_name=data_axis, num_shards=S,

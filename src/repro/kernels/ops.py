@@ -7,6 +7,7 @@ and False on real TPU, where the Mosaic pipeline compiles the same kernel).
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
 import jax
@@ -162,14 +163,116 @@ def auto_bucket_size(key_space: int, *, d: int = 1, pad_align: int = 256,
     return key_space if blk >= key_space else blk
 
 
-def radix_partition(keys, values, key_space, *, bucket_size=None,
-                    pad_align=256, tile_n=256, interpret=None):
-    """Two-pass radix partition of a pair chunk into padded bucket regions.
+#: per-level fan-out cap of the hierarchical radix partition: bounds each
+#: level's [Tn, B] one-hot histogram sweep and the per-level region padding
+#: (B·pad_align slots).  One level covers key_space <= fan-out·leaf.
+MAX_RADIX_FANOUT = 32
 
-    [N] keys + [N, D] values -> (pkeys, pvals, starts); bucket ``b`` holds
-    keys in ``[b·bucket_size, (b+1)·bucket_size)``, every region a
+#: level budget of the hierarchical partition — the knob ISSUE 4's fallback
+#: warning reports against.  3 levels × fan-out 32 × a 16k leaf covers
+#: K = 512M; anything past it degrades to the pure-JAX sorted fold with a
+#: LoweringFallbackWarning instead of silently clamping the bucket count.
+MAX_RADIX_LEVELS = 3
+
+#: leaf bucket cap: the segment_reduce output block is [leaf, D] f32 and on
+#: TPU D tiles at 128 lanes, so a 16k leaf keeps the block at 8 MB even for
+#: wide holders — past this the hierarchy adds a level instead of growing
+#: the leaf out of VMEM.
+LEAF_BUCKET_CAP = 16384
+
+
+@dataclasses.dataclass(frozen=True)
+class RadixPlan:
+    """Level decomposition of the sort-flow radix partition.
+
+    ``fanouts == ()`` means no partition at all (single bucket — the plain
+    segment reduce); ``len(fanouts) == 1`` is the classic single-level
+    two-pass partition; more entries run the hierarchical multi-pass.
+    ``feasible == False`` marks a key space whose decomposition would
+    exceed ``max_levels`` — callers must NOT silently clamp; they emit a
+    :class:`LoweringFallbackWarning` and take the pure-JAX sorted fold.
+    """
+
+    bucket_size: int
+    fanouts: tuple[int, ...]
+    key_space: int
+    feasible: bool = True
+    reason: str = ""
+
+    @property
+    def levels(self) -> int:
+        return len(self.fanouts)
+
+    @property
+    def num_leaves(self) -> int:
+        return -(-self.key_space // self.bucket_size)
+
+    def describe(self) -> str:
+        if not self.feasible:
+            return f"INFEASIBLE ({self.reason})"
+        if not self.fanouts:
+            return "buckets=1 (single full segment reduce)"
+        fan = "·".join(str(b) for b in self.fanouts)
+        return (f"buckets={self.num_leaves}×{self.bucket_size}keys "
+                f"levels={self.levels}({fan})")
+
+
+def plan_radix_levels(key_space: int, *, d: int = 1, pad_align: int = 256,
+                      max_fanout: int | None = None,
+                      max_levels: int | None = None,
+                      leaf_cap: int | None = None,
+                      budget: int = VMEM_BUDGET) -> RadixPlan:
+    """Pick the leaf bucket and per-level fan-outs for a key space.
+
+    The leaf is the ``segment_reduce`` block (VMEM-resident ``[leaf, D]``,
+    capped at ``leaf_cap``); the leaf count is then decomposed into the
+    fewest levels whose fan-outs stay within ``max_fanout`` (near-uniform
+    powers of two).  A key space needing more than ``max_levels`` levels is
+    reported infeasible — the caller warns and falls back instead of
+    clamping the bucket count past the padded-layout envelope (the old
+    silent degrade).  The budget knobs default to the module constants at
+    call time (patchable in tests)."""
+    max_fanout = MAX_RADIX_FANOUT if max_fanout is None else max_fanout
+    max_levels = MAX_RADIX_LEVELS if max_levels is None else max_levels
+    leaf_cap = LEAF_BUCKET_CAP if leaf_cap is None else leaf_cap
+    leaf = _pow2_floor(max(key_space // max_fanout, 8 * pad_align))
+    leaf = min(leaf, _pow2_floor(leaf_cap))
+    while leaf > 8 and leaf * max(d, 1) * 4 > budget // 8:
+        leaf //= 2
+    if leaf >= key_space:
+        return RadixPlan(key_space, (), key_space)
+    num_leaves = -(-key_space // leaf)
+    # fan-outs are powers of two, so the cap that actually binds is the
+    # pow2 floor of max_fanout — level count and bit split both use it
+    # (a non-pow2 cap must never round a level's fan-out above itself)
+    fan_bits = max(max_fanout.bit_length() - 1, 1)
+    bits = max(num_leaves - 1, 1).bit_length()
+    levels = -(-bits // fan_bits)
+    if levels > max_levels:
+        return RadixPlan(
+            leaf, (), key_space, feasible=False,
+            reason=f"key_space={key_space} needs {levels} radix levels at "
+                   f"fan-out {1 << fan_bits} (leaf bucket {leaf}), over "
+                   f"the max_levels={max_levels} budget")
+    # near-uniform power-of-two fan-outs covering num_leaves
+    base, extra = divmod(bits, levels)
+    fanouts = tuple(1 << (base + (1 if i < extra else 0))
+                    for i in range(levels))
+    return RadixPlan(leaf, fanouts, key_space)
+
+
+def radix_partition(keys, values, key_space, *, bucket_size=None,
+                    fanouts=None, pad_align=256, tile_n=256, interpret=None):
+    """Radix partition of a pair chunk into padded LEAF bucket regions.
+
+    [N] keys + [N, D] values -> (pkeys, pvals, starts); leaf bucket ``b``
+    holds keys in ``[b·bucket_size, (b+1)·bucket_size)``, every region a
     ``pad_align`` multiple (sentinel-padded) — the layout ``segment_reduce``
-    consumes with ``block_k=bucket_size, tile_n=pad_align``."""
+    consumes with ``block_k=bucket_size, tile_n=pad_align``.
+
+    ``fanouts`` selects the hierarchical multi-pass decomposition (see
+    :func:`plan_radix_levels`); ``None`` keeps the classic single-level
+    two-pass partition."""
     if values.ndim != 2:
         raise ValueError("values must be [N, D]")
     n, d = values.shape
@@ -177,35 +280,58 @@ def radix_partition(keys, values, key_space, *, bucket_size=None,
         bucket_size = auto_bucket_size(key_space, d=d, pad_align=pad_align)
     num_buckets = -(-key_space // bucket_size)
     out_slots = n + num_buckets * pad_align + pad_align
-    if (out_slots * (4 + 4 * d) + num_buckets * 8) > VMEM_BUDGET:
+    cursor_rows = num_buckets
+    if fanouts:
+        # the widest per-level cursor: the leaf level's parent·fanout rows
+        cursor_rows = max(num_buckets, -(-key_space // (
+            bucket_size * fanouts[-1])) * fanouts[-1])
+    if (out_slots * (4 + 4 * d) + cursor_rows * 8) > VMEM_BUDGET:
         raise ValueError(
             f"radix partition of {n} pairs x {num_buckets} buckets does not "
             f"fit the VMEM budget; shrink the chunk or grow bucket_size")
     interpret = _interpret_default() if interpret is None else interpret
+    if fanouts and len(fanouts) > 1:
+        # forwarded as-is: the multi-pass driver enforces its documented
+        # tile_n == pad_align contract (raises on mismatch)
+        return _rp.radix_partition_multi(
+            keys, values, key_space, bucket_size=bucket_size,
+            fanouts=tuple(fanouts), pad_align=pad_align, tile_n=tile_n,
+            interpret=interpret)
     return _rp.radix_partition(keys, values, key_space,
                                bucket_size=bucket_size, pad_align=pad_align,
                                tile_n=tile_n, interpret=interpret)
 
 
 def sort_segment_fold(keys, values, acc, op="add", *, bucket_size=None,
-                      pad_align=256, interpret=None):
+                      fanouts=None, pad_align=256, interpret=None):
     """Sort-flow chunk fold: radix partition + bucket-wise segment reduce,
     merged into the carried ``[K, D]`` f32 accumulator.
 
     Signature matches the sort collector's ``sort_fold_fn(keys, mat, acc,
     op)``.  The partition guarantees every reduce tile falls inside one
     aligned ``bucket_size`` K-block, so ``segment_reduce`` runs with
-    ``block_k=bucket_size`` — presorted segments, no per-pair scatter."""
+    ``block_k=bucket_size`` — presorted segments, no per-pair scatter.
+
+    ``bucket_size=None`` derives the level decomposition from
+    :func:`plan_radix_levels` (multi-pass past one bucket sweep); an
+    infeasible plan raises — the engine checks feasibility first and falls
+    back to the pure-JAX sorted fold with a warning."""
     if values.ndim != 2:
         raise ValueError("values must be [N, D]")
     key_space = acc.shape[0]
     n, d = values.shape
     if n == 0:
         return acc.astype(jnp.float32)
-    if bucket_size is None:
+    if bucket_size is None and fanouts is None:
+        plan = plan_radix_levels(key_space, d=d, pad_align=pad_align)
+        if not plan.feasible:
+            raise ValueError(f"sort_segment_fold: {plan.reason}; use the "
+                             f"pure-JAX sorted fold for this key space")
+        bucket_size, fanouts = plan.bucket_size, plan.fanouts
+    elif bucket_size is None:
         bucket_size = auto_bucket_size(key_space, d=d, pad_align=pad_align)
     pkeys, pvals, _ = radix_partition(
-        keys, values, key_space, bucket_size=bucket_size,
+        keys, values, key_space, bucket_size=bucket_size, fanouts=fanouts,
         pad_align=pad_align, interpret=interpret)
     chunk = segment_reduce(pkeys, pvals, key_space, op,
                            tile_n=pad_align, block_k=bucket_size,

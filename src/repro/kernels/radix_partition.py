@@ -1,13 +1,15 @@
-"""Two-pass radix partition: histogram + bucket-scatter, for the sort flow.
+"""Multi-pass hierarchical radix partition for the sort flow.
 
 The sort flow's shuffle on TPU: a chunk of emitted pairs is partitioned by
-key into ``num_buckets`` contiguous bucket regions (bucket ``b`` holds keys
-in ``[b·bucket_size, (b+1)·bucket_size)``), each region padded to a multiple
+key into contiguous bucket regions (bucket ``b`` holds keys in
+``[b·bucket_size, (b+1)·bucket_size)``), each region padded to a multiple
 of ``pad_align`` pairs — exactly the alignment the ``segment_reduce`` kernel
 needs so that every pair tile falls inside ONE aligned K-block of size
 ``bucket_size``.  The partition is the chunk-local form of the paper's
 shuffle: pairs move once, bucket-by-bucket, and the reduce consumes
 presorted segments instead of scattering per pair.
+
+One level (``radix_partition``, the K ≤ fan-out·bucket regime):
 
 Pass 1 (``_hist_kernel``): per-bucket pair counts via one-hot column sums —
 a [Tn, B] compare + reduce per tile, MXU/VPU-friendly, no scatter.
@@ -20,9 +22,23 @@ TPU scatter idiom; the partitioned copy never round-trips HBM between the
 two passes and the reduce.  Within a bucket the original emission order is
 preserved (stable), which the first-element idiom relies on.
 
+Hierarchy (``radix_partition_multi``, K past one bucket sweep): the key
+space is decomposed digit-by-digit over ``fanouts = (B1, …, BL)`` levels
+with per-level ranges ``R_L = bucket_size`` and ``R_{l-1} = R_l · B_l``.
+The top level is the standard two-pass kernel at fan-out ``B1``; every
+inner level re-runs histogram + bucket-scatter *per parent bucket region*:
+the parent layout is ``pad_align``-aligned and ``tile_n == pad_align``, so
+each tile lies inside exactly ONE parent region, the one-hot sweep is
+digit-local (``[Tn, B_l]``, never ``[Tn, num_leaves]``), and the tile's
+counts/cursor updates land in the parent's row block of the composite
+per-level cursor (the cursor carry that makes the batched sweep identical
+to a per-region recursion).  Stability per level makes the final layout
+bitwise equal to a single-level partition at ``bucket_size`` — which is the
+test oracle.
+
 Preconditions (ops.py enforces): the padded output fits the VMEM budget;
-keys are int32 in ``[0, num_buckets·bucket_size]`` with the sentinel
-``>= num_buckets·bucket_size`` dropped into the trash slot.
+keys are int32 in ``[0, key_space]`` with invalid/pad slots carrying values
+``>= num_buckets·range`` that drop into the trash slot.
 """
 
 from __future__ import annotations
@@ -89,6 +105,83 @@ def _scatter_kernel(starts_ref, keys_ref, vals_ref, out_keys_ref,
     tile_counts = jnp.sum(((b[:, None] == iota_b) &
                            valid[:, None]).astype(jnp.int32), axis=0)
     cursor_ref[...] = cursor + tile_counts
+
+
+def _hist_level_kernel(keys_ref, out_ref, *, range_child: int, fanout: int,
+                       num_buckets: int):
+    """Inner-level histogram: region-local one-hot, composite accumulate.
+
+    Tiles of the parent-partitioned input lie entirely inside ONE parent
+    bucket region (regions are ``pad_align``-aligned and tile_n ==
+    pad_align), so the one-hot sweep is only ``[Tn, fanout]`` wide and the
+    tile's digit counts accumulate into the parent's row block of the
+    composite ``[num_parents·fanout]`` histogram."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # [Tn]
+    b = keys // range_child  # composite bucket id at this level
+    valid = b < num_buckets  # pads/trash carry >= num_buckets·range_child
+    digit = b % fanout
+    # every valid key in the tile shares one parent region
+    p = jnp.max(jnp.where(valid, b // fanout, 0))
+    iota = lax.broadcasted_iota(jnp.int32, (keys.shape[0], fanout), 1)
+    hit = (digit[:, None] == iota) & valid[:, None]
+    out_ref[pl.ds(p * fanout, fanout)] += jnp.sum(hit.astype(jnp.int32),
+                                                  axis=0)
+
+
+def _scatter_level_kernel(starts_ref, keys_ref, vals_ref, out_keys_ref,
+                          out_vals_ref, cursor_ref, *, range_child: int,
+                          fanout: int, num_buckets: int, out_slots: int,
+                          sentinel: int):
+    """Inner-level bucket scatter: composite cursor, digit-local update.
+
+    Same per-pair dynamic VMEM stores as ``_scatter_kernel``; the cursor is
+    the full composite ``[num_parents·fanout]`` array (per-level cursor
+    carry), but each tile only advances its parent's ``fanout`` rows — the
+    batched equivalent of re-running the scatter per parent region."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cursor_ref[...] = starts_ref[...]
+        out_keys_ref[...] = jnp.full_like(out_keys_ref, sentinel)
+        out_vals_ref[...] = jnp.zeros_like(out_vals_ref)
+
+    keys = keys_ref[...]  # [Tn]
+    vals = vals_ref[...]  # [Tn, D]
+    tn = keys.shape[0]
+    b = keys // range_child
+    valid = b < num_buckets
+    bc = jnp.minimum(b, num_buckets - 1)
+
+    # stable within-tile rank over composite ids (same as the top level)
+    iota_n = lax.broadcasted_iota(jnp.int32, (tn, tn), 0)
+    same = (bc[None, :] == bc[:, None]) & (iota_n.T <= iota_n)
+    rank = jnp.sum(same & valid[None, :], axis=1) - 1
+
+    cursor = cursor_ref[...]
+    dst = jnp.where(valid, cursor[bc] + rank, out_slots - 1)  # trash slot
+
+    def write(j, _):
+        d = dst[j]
+        out_keys_ref[pl.ds(d, 1)] = keys[j][None]
+        out_vals_ref[pl.ds(d, 1), :] = vals[j][None, :]
+        return 0
+
+    lax.fori_loop(0, tn, write, 0)
+
+    p = jnp.max(jnp.where(valid, b // fanout, 0))
+    digit = b % fanout
+    iota_f = lax.broadcasted_iota(jnp.int32, (tn, fanout), 1)
+    counts = jnp.sum(((digit[:, None] == iota_f) &
+                      valid[:, None]).astype(jnp.int32), axis=0)
+    cur = cursor_ref[pl.ds(p * fanout, fanout)]
+    cursor_ref[pl.ds(p * fanout, fanout)] = cur + counts
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -167,3 +260,110 @@ def radix_partition(
     # dropped slot to the one sentinel the consumers check for
     pkeys = jnp.minimum(pkeys, key_space)
     return pkeys, pvals, starts
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "key_space", "bucket_size", "fanouts", "pad_align", "tile_n",
+    "interpret"))
+def radix_partition_multi(
+    keys: jax.Array,
+    values: jax.Array,
+    key_space: int,
+    *,
+    bucket_size: int,
+    fanouts: tuple[int, ...],
+    pad_align: int = 256,
+    tile_n: int = 256,
+    interpret: bool = True,
+):
+    """Hierarchical partition into padded LEAF bucket regions.
+
+    ``fanouts = (B1, …, BL)`` decomposes the key space digit-by-digit:
+    level ``l`` partitions by ``key // R_l`` with ``R_L = bucket_size`` and
+    ``R_{l-1} = R_l · B_l`` (so ``bucket_size · ΠB >= key_space``).  Level 1
+    is the standard two-pass kernel; inner levels run the region-local
+    kernels with the composite per-level cursor carry.  The final layout is
+    bitwise identical to ``radix_partition(bucket_size=bucket_size)`` —
+    leaf ``b`` at ``starts[b]``, regions ``pad_align`` multiples, sentinel
+    pads, trailing trash region — without any level's one-hot sweep or
+    per-level padding exceeding its fan-out.
+    """
+    if len(fanouts) <= 1:
+        return radix_partition(keys, values, key_space,
+                               bucket_size=bucket_size, pad_align=pad_align,
+                               tile_n=tile_n, interpret=interpret)
+    if tile_n != pad_align:
+        raise ValueError(
+            "radix_partition_multi needs tile_n == pad_align so inner-level "
+            "tiles never straddle a parent bucket region")
+    n = keys.shape[0]
+    d = values.shape[1]
+    # per-level ranges R_1 > … > R_L = bucket_size; the invalid/pad value is
+    # the cover bucket_size·ΠB at EVERY level (w_l · R_l is level-invariant)
+    ranges = [bucket_size]
+    for B in reversed(fanouts[1:]):
+        ranges.insert(0, ranges[0] * B)
+    cover = ranges[0] * fanouts[0]
+    if cover < key_space:
+        raise ValueError(f"fanouts {fanouts} x bucket_size {bucket_size} "
+                         f"cover {cover} < key_space {key_space}")
+
+    pad_n = (-n) % tile_n
+    pkeys = jnp.pad(keys, (0, pad_n), constant_values=cover)
+    pvals = jnp.pad(values.astype(jnp.float32), ((0, pad_n), (0, 0)))
+
+    nb_parent = 1  # real bucket count of the previous level
+    starts = None
+    for lvl, B in enumerate(fanouts):
+        rng = ranges[lvl]
+        nb = -(-key_space // rng)  # real buckets at this level
+        # cursor/histogram rows: parent-row blocks of B rows each.  Level 1
+        # has ONE parent (the whole chunk), so the level kernels reduce
+        # exactly to the classic top-level sweep (digit == bucket id,
+        # parent == 0) — no tile-alignment precondition needed there.
+        width = nb if lvl == 0 else nb_parent * B
+        fanout = nb if lvl == 0 else B
+        n_tiles = pkeys.shape[0] // tile_n
+        hist = pl.pallas_call(
+            functools.partial(_hist_level_kernel, range_child=rng,
+                              fanout=fanout, num_buckets=nb),
+            grid=(n_tiles,),
+            in_specs=[pl.BlockSpec((tile_n,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((width,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((width,), jnp.int32),
+            interpret=interpret,
+        )(pkeys)
+
+        padded = -(-hist // pad_align) * pad_align
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+        out_slots = n + nb * pad_align + pad_align  # + trash region
+        out_slots += (-out_slots) % pad_align
+
+        scatter_fn = functools.partial(
+            _scatter_level_kernel, range_child=rng, fanout=fanout,
+            num_buckets=nb, out_slots=out_slots, sentinel=cover)
+        pkeys, pvals = pl.pallas_call(
+            scatter_fn,
+            grid=(n_tiles,),
+            in_specs=[
+                pl.BlockSpec((width,), lambda i: (0,)),
+                pl.BlockSpec((tile_n,), lambda i: (i,)),
+                pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((out_slots,), lambda i: (0,)),
+                pl.BlockSpec((out_slots, d), lambda i: (0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((out_slots,), jnp.int32),
+                jax.ShapeDtypeStruct((out_slots, d), jnp.float32),
+            ],
+            scratch_shapes=[pltpu.VMEM((width,), jnp.int32)],
+            interpret=interpret,
+        )(starts, pkeys, pvals)
+        nb_parent = nb
+
+    # normalize once, at the leaf layout (same contract as single level)
+    pkeys = jnp.minimum(pkeys, key_space)
+    return pkeys, pvals, starts[: -(-key_space // bucket_size)]

@@ -200,6 +200,7 @@ def mapreduce_flow_bytes(
     chunk_pairs: int | None = None,
     key_block: int | None = None,
     max_values_per_key: int | None = None,
+    sort_levels: int = 1,
 ) -> float:
     """First-order HBM-bytes model of the three collector flows (Figs 8/9).
 
@@ -222,7 +223,10 @@ def mapreduce_flow_bytes(
       partitioned copy VMEM-resident, never an extra HBM round-trip), and
       the carried tables are re-touched once per chunk — same O(N + K)
       bytes class as the stream flow, but O(N·log N + K) compute instead
-      of the one-hot fold's O(N·K).
+      of the one-hot fold's O(N·K).  ``sort_levels > 1`` charges the
+      multi-pass hierarchy's extra per-level key/permutation traffic
+      (one int32 stream re-read + re-write per extra level — the digit
+      sorts / inner partition passes past one bucket sweep).
     """
     if chunk_pairs is None:  # keep the model in sync with the engine
         from repro.core.engine import (DEFAULT_CHUNK_PAIRS,
@@ -257,8 +261,10 @@ def mapreduce_flow_bytes(
         # tables are re-touched (read + write) per chunk, minus the first
         # read (identity init).  Equal to the single-chunk combine-flow
         # bytes — the sort flow's win is the compute term
-        # (see core/cost_model.py).
-        return 2.0 * N * pair + (2.0 * n_chunks - 1.0) * table
+        # (see core/cost_model.py).  Extra hierarchy levels each re-touch
+        # the int32 key/permutation stream once.
+        return (2.0 * N * pair + (2.0 * n_chunks - 1.0) * table
+                + (max(sort_levels, 1) - 1) * 2.0 * N * 4.0)
     raise ValueError(f"unknown flow {flow!r}")
 
 

@@ -195,6 +195,7 @@ def test_probe_mode_smoke():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.auto_flow  # skipped under the CI flow-matrix override
 def test_explain_reports_tiling():
     mr = MapReduce(_sum_app(1 << 15))
     text = mr.explain()

@@ -37,8 +37,13 @@ def test_wordcount(tokens, flow):
     np.testing.assert_array_equal(np.asarray(res.counts), want)
     got = np.asarray(res.values)
     np.testing.assert_array_equal(got[want > 0], want[want > 0])
-    # the optimizer's recommended flow is the streaming fusion
-    assert mr.plan.flow == ("stream" if flow == "auto" else flow)
+    # the optimizer's recommended flow is the streaming fusion (the CI
+    # flow-matrix override redirects the auto default — honor it here,
+    # normalized exactly like conftest's FLOW_OVERRIDE)
+    import os
+    auto_flow = (os.environ.get("REPRO_TEST_FLOW", "").strip().lower()
+                 or "stream")
+    assert mr.plan.flow == (auto_flow if flow == "auto" else flow)
 
 
 @pytest.mark.parametrize("impl", ["scatter", "onehot", "segment"])

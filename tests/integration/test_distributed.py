@@ -111,6 +111,54 @@ def test_distributed_sort_flow():
     assert "DIST_SORT_OK" in out
 
 
+def test_distributed_sort_flow_hierarchical_kernels():
+    """Multi-level sort flow on a 4-device mesh with the kernel pipeline:
+    the shard key ranges are the hierarchy's top-level digits (the
+    all-to-all wire format is unchanged), and each shard re-derives the
+    remaining level decomposition for its own K/S range — shrunk budgets
+    force two levels per shard."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduceApp, plan_execution
+        from repro.core import engine as eng
+        from repro.kernels import ops
+
+        ops.LEAF_BUCKET_CAP = 64   # per-shard K/S = 1024 -> 16 leaves
+        ops.MAX_RADIX_FANOUT = 4   # -> 2 levels of fan-out 4
+        VOCAB = 4096
+        plan_local = ops.plan_radix_levels(VOCAB // 4, d=2)
+        assert plan_local.levels == 2, plan_local
+
+        class WC(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.float32)
+            max_values_per_key = 256
+            emit_capacity = 8
+            def map(self, item, emit):
+                emit(item, jnp.ones_like(item, jnp.float32))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = jax.make_mesh((4,), ("data",))
+        rng = np.random.default_rng(1)
+        toks = jax.device_put(
+            jnp.asarray(rng.integers(0, VOCAB, (64, 8)).astype(np.int32)),
+            NamedSharding(mesh, P("data")))
+        want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
+        app = WC()
+        with mesh:
+            plan_s = plan_execution(app, flow="sort")
+            k, v, c = eng.run_distributed(app, plan_s, toks, mesh=mesh,
+                                          use_kernels=True)
+        got = np.zeros(VOCAB, np.int64)
+        for kk, vv, cc in zip(np.asarray(k), np.asarray(v), np.asarray(c)):
+            if kk < VOCAB and cc > 0: got[kk] = vv
+        assert np.array_equal(got, want)
+        print("DIST_SORT_MULTI_OK")
+    """)
+    assert "DIST_SORT_MULTI_OK" in out
+
+
 def test_distributed_stream_per_shard_autotune():
     """run_distributed re-derives the streaming tiling from the per-shard
     item count (ROADMAP open item) instead of reusing a global tiling."""

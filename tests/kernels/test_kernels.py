@@ -238,6 +238,110 @@ def test_radix_partition_vmem_guard():
                             key_space=1 << 20, bucket_size=256)
 
 
+# ---------------------------------------------------------------------------
+# Multi-pass hierarchical radix partition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,k,bs,fanouts,pa", [
+    (200, 256, 16, (4, 4), 16),
+    (300, 100, 8, (4, 4), 16),        # K % (bs·ΠB) != 0, cover > K
+    (500, 1000, 16, (4, 4, 4), 32),   # three levels
+    (64, 64, 4, (4, 4), 8),
+    (333, 2000, 64, (8, 4), 16),      # non-uniform fan-outs
+])
+def test_radix_partition_multi_matches_single_level_oracle(n, k, bs,
+                                                           fanouts, pa):
+    """The hierarchical multi-pass layout is bitwise identical to the
+    single-level partition at the leaf bucket (stability per level composes
+    to the stable leaf grouping) — the argsort oracle covers both."""
+    keys = RNG.integers(0, k + 1, size=n).astype(np.int32)  # incl. sentinel
+    vals = _vals((n, 3), np.float32)
+    got_k, got_v, got_s = ops.radix_partition(
+        jnp.asarray(keys), jnp.asarray(vals), k, bucket_size=bs,
+        fanouts=fanouts, pad_align=pa, tile_n=pa)
+    want_k, want_v, want_s = ref.radix_partition(
+        jnp.asarray(keys), jnp.asarray(vals), k, bucket_size=bs, pad_align=pa)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+    real = np.asarray(want_k) < k
+    np.testing.assert_allclose(np.asarray(got_v)[real],
+                               np.asarray(want_v)[real], rtol=1e-6)
+
+
+def test_radix_partition_multi_bucket_invariants():
+    """Leaf regions of the hierarchy: every real key inside its leaf range,
+    aligned region starts, nothing lost, trash slots sentinel-normalized."""
+    n, k, bs, pa = 400, 512, 16, 16
+    keys = RNG.integers(0, k + 1, size=n).astype(np.int32)
+    vals = _vals((n, 1), np.float32)
+    pk, _, starts = ops.radix_partition(
+        jnp.asarray(keys), jnp.asarray(vals), k, bucket_size=bs,
+        fanouts=(8, 4), pad_align=pa, tile_n=pa)
+    pk, starts = np.asarray(pk), np.asarray(starts)
+    assert starts.shape[0] == k // bs
+    assert (starts % pa == 0).all()
+    assert (pk <= k).all()  # every dropped slot carries THE sentinel
+    for b in range(k // bs):
+        lo = starts[b]
+        hi = starts[b + 1] if b + 1 < len(starts) else len(pk)
+        real = pk[lo:hi][pk[lo:hi] < k]
+        assert ((real >= b * bs) & (real < (b + 1) * bs)).all(), b
+    np.testing.assert_array_equal(np.sort(pk[pk < k]),
+                                  np.sort(keys[keys < k]))
+
+
+@pytest.mark.parametrize("op", ["add", "max", "min"])
+def test_sort_segment_fold_multi_level_matches_ref(op):
+    """The full hierarchical pipeline (multi-pass partition feeding
+    segment_reduce leaf blocks) == the argsort/segment oracle, merged into
+    a carried accumulator."""
+    n, d, k = 333, 2, 3000
+    keys = RNG.integers(0, k + 1, size=n).astype(np.int32)
+    vals = jnp.asarray(_vals((n, d), np.float32))
+    acc = jnp.asarray(_vals((k, d), np.float32))
+    plan = ops.plan_radix_levels(k, d=d, max_fanout=4, leaf_cap=256)
+    assert plan.levels >= 2  # the hierarchy is actually engaged
+    got = ops.sort_segment_fold(jnp.asarray(keys), vals, acc, op,
+                                bucket_size=plan.bucket_size,
+                                fanouts=plan.fanouts)
+    want = ref.sort_segment_fold(jnp.asarray(keys), vals, acc, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_plan_radix_levels_small_keyspaces_stay_single_level():
+    """The decomposition preserves the PR 3 behaviour below one sweep:
+    single bucket for tiny K, one level while leaves fit the fan-out."""
+    assert ops.plan_radix_levels(512).fanouts == ()
+    p = ops.plan_radix_levels(32768, d=2)
+    assert p.levels == 1 and p.bucket_size == 2048
+    assert p.bucket_size == ops.auto_bucket_size(32768, d=2)
+
+
+def test_plan_radix_levels_multi_level_and_budget():
+    p = ops.plan_radix_levels(1 << 20, d=2)
+    assert p.feasible and p.levels == 2
+    assert all(b <= ops.MAX_RADIX_FANOUT for b in p.fanouts)
+    cover = p.bucket_size
+    for b in p.fanouts:
+        cover *= b
+    assert cover >= 1 << 20
+    assert p.bucket_size <= ops.LEAF_BUCKET_CAP
+    # past the level budget: infeasible is REPORTED, never silently clamped
+    bad = ops.plan_radix_levels(1 << 20, d=2, max_levels=1)
+    assert not bad.feasible and "max_levels=1" in bad.reason
+    assert "INFEASIBLE" in bad.describe()
+
+
+def test_radix_partition_multi_requires_aligned_tiles():
+    with pytest.raises(ValueError, match="cover|tile_n"):
+        from repro.kernels import radix_partition as rp
+        rp.radix_partition_multi(
+            jnp.zeros(64, jnp.int32), jnp.zeros((64, 1), jnp.float32),
+            256, bucket_size=16, fanouts=(4, 4), pad_align=16, tile_n=32)
+
+
 def test_fold_kernel_autoblocks_past_vmem_budget():
     """A key space whose [Tn, K] one-hot would blow VMEM is auto-partitioned
     into key blocks instead of raising; an explicitly oversized block still
