@@ -1,0 +1,108 @@
+"""Recovery-cost benchmark for the fault-tolerant driver (run_resilient).
+
+Measures, per flow, the wall-clock of
+
+  * the no-failure resilient run (driver overhead over the plain
+    per-shard execution),
+  * recovery from one killed host by deterministic re-execution
+    (the backup rank recomputes only the lost shards),
+  * recovery by restoring the checkpointed partial aggregate,
+  * the naive alternative: restarting the whole job from scratch,
+
+and reports the recovered fraction — the point of monoid partial-aggregate
+recovery is that losing 1 of H hosts costs ~1/H of the map phase, not a
+full restart.  Standalone: not part of the run.py presets (single-process
+timings of a simulated cluster are architecture numbers, not a perf
+trajectory to gate on).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_resilience.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+# self-locating like run.py: `python benchmarks/bench_resilience.py` puts
+# benchmarks/ (not the repo root) on sys.path
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_scale, row
+from repro.core import MapReduceApp, plan_execution
+from repro.core import engine as eng
+from repro.distributed import fault as flt
+
+
+class WC(MapReduceApp):
+    key_space = 4096
+    value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    max_values_per_key = 4096
+    emit_capacity = 8
+
+    def map(self, item, emit):
+        emit(item, jnp.ones_like(item))
+
+    def reduce(self, key, values, count):
+        return jnp.sum(values)
+
+
+def _time_once(fn) -> float:
+    """One timed call after one warmup (the driver is a host-side loop
+    re-jitting per call; medians of re-runs measure the host loop, which
+    is what the recovery fraction is about)."""
+    fn()
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn()[1])
+    return time.perf_counter() - t0
+
+
+def main():
+    scale = bench_scale()
+    n_items = max(64, int(2048 * scale))
+    hosts = 8
+    n_items -= n_items % hosts
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(
+        rng.integers(0, WC.key_space, (n_items, 8)).astype(np.int32))
+    app = WC()
+    print("# bench_resilience: recovery cost vs restart "
+          f"(n_items={n_items}, hosts={hosts})")
+
+    for flow in ("stream", "sort", "reduce"):
+        def run(inject=None, ckpt_dir=None, flow=flow):
+            plan = plan_execution(app, flow=flow)
+            return eng.run_resilient(app, plan, toks, num_hosts=hosts,
+                                     num_shards=hosts, inject=inject,
+                                     ckpt_dir=ckpt_dir)
+
+        t_clean = _time_once(lambda: run())
+        t_kill = _time_once(
+            lambda: run(inject=flt.FaultInjection(dead_hosts=(3,))))
+        with tempfile.TemporaryDirectory() as d:
+            run(ckpt_dir=d)  # seed the shard checkpoints
+            t_restore = _time_once(
+                lambda: run(inject=flt.FaultInjection(dead_hosts=(3,)),
+                            ckpt_dir=d))
+        t_restart = t_clean + t_kill  # lose the run, start over, then pay
+        # the failed attempt too — the floor a restart policy pays
+
+        print(row(f"resilient_{flow}_clean", t_clean * 1e6))
+        print(row(f"resilient_{flow}_kill1of{hosts}", t_kill * 1e6,
+                  f"recompute_overhead={t_kill / t_clean:.2f}x_clean"))
+        print(row(f"resilient_{flow}_restore1of{hosts}", t_restore * 1e6,
+                  f"restore_overhead={t_restore / t_clean:.2f}x_clean"))
+        print(row(f"resilient_{flow}_restart_floor", t_restart * 1e6,
+                  f"recovery_saves={t_restart / max(t_kill, 1e-9):.2f}x"))
+
+
+if __name__ == "__main__":
+    main()

@@ -71,6 +71,21 @@ def _gc(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
 
 
+def has_step(ckpt_dir: str, step: int) -> bool:
+    """Whether a COMPLETE checkpoint for ``step`` exists (the atomic
+    ``os.replace`` means a present ``step_<N>`` directory is never a torn
+    write).  Used by the resilient MapReduce driver to decide between
+    restoring a shard's partial aggregate and re-executing the shard."""
+    return os.path.isdir(os.path.join(ckpt_dir, f"step_{step}"))
+
+
+def shard_partial_dir(ckpt_dir: str, shard: int) -> str:
+    """Per-shard partial-aggregate checkpoint directory convention of
+    ``engine.run_resilient``: each shard snapshots its monoid partial under
+    its own subdirectory so recovery restores exactly the lost shards."""
+    return os.path.join(ckpt_dir, f"shard_{shard}")
+
+
 def latest_step(ckpt_dir: str) -> int | None:
     p = os.path.join(ckpt_dir, "LATEST")
     if not os.path.exists(p):

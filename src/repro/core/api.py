@@ -87,6 +87,8 @@ class MapReduceResult:
     values: Any  # [K, ...]
     counts: jax.Array  # [K]; 0 == key never emitted
     plan: "ExecutionPlan | None" = None
+    #: fault.RecoveryLog when the result came from run_resilient.
+    recovery: Any = None
 
     def to_dict(self) -> dict:
         """Host-side {key: value} for present keys (tests / small results)."""
@@ -229,6 +231,32 @@ class MapReduce:
     def run(self, items) -> MapReduceResult:
         keys, values, counts = self._run(items)
         return MapReduceResult(keys, values, counts, plan=self.plan)
+
+    def run_distributed(self, items, *, mesh, **kwargs) -> MapReduceResult:
+        """``engine.run_distributed`` with this instance's plan/lowering
+        knobs — shard_map over the mesh's data axis.  Keyword arguments
+        pass through (``scatter_output``, ``shuffle_capacity``,
+        ``strict_shuffle``, ...)."""
+        kwargs.setdefault("combine_impl", self.combine_impl)
+        kwargs.setdefault("use_kernels", self.use_kernels)
+        keys, values, counts = eng.run_distributed(
+            self.app, self.plan, items, mesh=mesh, **kwargs)
+        return MapReduceResult(keys, values, counts, plan=self.plan)
+
+    def run_resilient(self, items, *, mesh=None, **kwargs) -> MapReduceResult:
+        """Fault-tolerant distributed run (``engine.run_resilient``):
+        deterministic shard re-execution, checkpointed partial-aggregate
+        recovery (``ckpt_dir=...``), straggler speculation and elastic
+        remesh — the result is bitwise the fault-free
+        :meth:`run_distributed` answer.  The recovery ledger lands on
+        ``result.recovery`` and, summarized, on ``plan.recovery`` (shown
+        by :meth:`explain`)."""
+        kwargs.setdefault("combine_impl", self.combine_impl)
+        kwargs.setdefault("use_kernels", self.use_kernels)
+        keys, values, counts, log = eng.run_resilient(
+            self.app, self.plan, items, mesh=mesh, **kwargs)
+        return MapReduceResult(keys, values, counts, plan=self.plan,
+                               recovery=log)
 
     def explain(self) -> str:
         """The optimizer's decision record: flow, derived combiner, the

@@ -480,25 +480,35 @@ def merge_tables_collective(spec: C.CombinerSpec, tables, counts,
     return merged, total_counts
 
 
+def _combine_local_tables(app, spec, stream: col.PairStream, *,
+                          combine_impl, use_kernels):
+    """Legacy combine flow's local fold to un-finalized ``(tables, counts)``
+    — shared between the distributed shard fn (collective merge follows)
+    and the resilient driver (host-side ``spec.merge`` follows)."""
+    if spec.strategy == C.STRATEGY_SIZE:
+        tables = ()
+        counts = jnp.zeros((app.key_space,), jnp.int32).at[stream.keys].add(
+            stream.valid.astype(jnp.int32), mode="drop")
+    elif spec.strategy == C.STRATEGY_FIRST:
+        tables, counts = col.combine_first(spec, stream)
+    elif spec.scatter_lowerable and combine_impl in ("auto", "scatter"):
+        tables, counts = col.combine_scatter(spec, stream)
+    elif spec.mxu_lowerable and combine_impl == "onehot":
+        tables, counts = col.combine_onehot(
+            spec, stream, onehot_fn=_onehot_kernel(use_kernels))
+    else:
+        tables, counts = col.combine_segment(spec, stream)
+    return tables, counts
+
+
 def _combine_shard_fn(app, spec, *, combine_impl, use_kernels, axis_name,
                       scatter):
     def fn(local_items):
         stream = map_phase(app, local_items)
-        grouped_tab = col.combine_flow  # noqa: F841 (doc anchor)
         # local fold to tables (un-finalized), then collective merge
-        if spec.strategy == C.STRATEGY_SIZE:
-            tables = ()
-            counts = jnp.zeros((app.key_space,), jnp.int32).at[stream.keys].add(
-                stream.valid.astype(jnp.int32), mode="drop")
-        elif spec.strategy == C.STRATEGY_FIRST:
-            tables, counts = col.combine_first(spec, stream)
-        elif spec.scatter_lowerable and combine_impl in ("auto", "scatter"):
-            tables, counts = col.combine_scatter(spec, stream)
-        elif spec.mxu_lowerable and combine_impl == "onehot":
-            tables, counts = col.combine_onehot(
-                spec, stream, onehot_fn=_onehot_kernel(use_kernels))
-        else:
-            tables, counts = col.combine_segment(spec, stream)
+        tables, counts = _combine_local_tables(
+            app, spec, stream, combine_impl=combine_impl,
+            use_kernels=use_kernels)
         return _merge_shard_tables(app, spec, tables, counts,
                                    axis_name=axis_name, scatter=scatter)
 
@@ -535,23 +545,32 @@ def _merge_shard_tables(app, spec, tables, counts, *, axis_name, scatter):
         g_vals = jax.tree.map(lambda v: lax.all_gather(v, axis_name),
                               local.values)
         g_cnt = lax.all_gather(counts, axis_name)  # [S, K]
-
-        def per_key(k, vals_k, cnt_k):
-            # shards with zero count contribute pad values
-            order = jnp.argsort(cnt_k == 0)  # valid shards first
-            vals_s = jax.tree.map(
-                lambda v: jnp.where(
-                    (cnt_k[order] > 0).reshape((-1,) + (1,) * (v.ndim - 1)),
-                    v[order], jnp.asarray(app.pad_value, v.dtype)),
-                vals_k)
-            nvalid = jnp.sum(cnt_k > 0).astype(jnp.int32)
-            return app.reduce(k, vals_s, nvalid)
-
-        vals_t = jax.tree.map(lambda v: jnp.moveaxis(v, 0, 1), g_vals)
-        keys = jnp.arange(app.key_space, dtype=jnp.int32)
-        merged = jax.vmap(per_key)(keys, vals_t, g_cnt.T)
-        return keys, merged, jnp.sum(g_cnt, axis=0)
+        return _reapply_merge(app, g_vals, g_cnt)
     raise ValueError("combiner has no cross-shard merge strategy")
+
+
+def _reapply_merge(app, g_vals, g_cnt):
+    """Re-apply the user reduce across stacked per-shard finalized values
+    ``[S, K, ...]`` / counts ``[S, K]`` — the Hadoop reapply contract.
+    Shared between the all-gather merge and the resilient driver's
+    host-side merge (same shard order, same zero-count masking, so the
+    recovered merge is bitwise the collective one)."""
+
+    def per_key(k, vals_k, cnt_k):
+        # shards with zero count contribute pad values
+        order = jnp.argsort(cnt_k == 0)  # valid shards first
+        vals_s = jax.tree.map(
+            lambda v: jnp.where(
+                (cnt_k[order] > 0).reshape((-1,) + (1,) * (v.ndim - 1)),
+                v[order], jnp.asarray(app.pad_value, v.dtype)),
+            vals_k)
+        nvalid = jnp.sum(cnt_k > 0).astype(jnp.int32)
+        return app.reduce(k, vals_s, nvalid)
+
+    vals_t = jax.tree.map(lambda v: jnp.moveaxis(v, 0, 1), g_vals)
+    keys = jnp.arange(app.key_space, dtype=jnp.int32)
+    merged = jax.vmap(per_key)(keys, vals_t, g_cnt.T)
+    return keys, merged, jnp.sum(g_cnt, axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -559,20 +578,37 @@ def _merge_shard_tables(app, spec, tables, counts, *, axis_name, scatter):
 # ---------------------------------------------------------------------------
 
 
-def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
-                   shuffle_capacity) -> tuple[col.PairStream, jax.Array]:
-    """Key-partitioned all-to-all of raw pairs (the reduce-flow shuffle).
+def shuffle_bucket_capacity(n_pairs: int, num_shards: int) -> int:
+    """Default per-destination send capacity of the all-to-all shuffle:
+    2x the uniform share, the Phoenix fixed-buffer posture.  A skewed key
+    distribution can exceed it — the shuffle COUNTS what falls past the
+    capacity and the engine surfaces it (``LoweringFallbackWarning``, plan
+    diagnostics, or a hard error under ``strict_shuffle``) instead of the
+    old behaviour of silently dropping the pairs."""
+    return -(-2 * n_pairs // num_shards)
+
+
+def _bucketize_pairs(app, stream: col.PairStream, *, num_shards,
+                     shuffle_capacity):
+    """Pack a shard's pair stream into per-destination send buckets.
 
     Range partitioning: key k -> shard ``k // ceil(K/S)`` — the shard key
     ranges are the top-level radix buckets, which is why the sort flow can
-    reuse this machinery verbatim.  Returns the received local stream
-    (keys rebased into ``[0, K_local]``) and this shard's key offset.
+    reuse this machinery verbatim.  This is the wire format of the
+    all-to-all (``_shuffle_pairs``) AND the checkpointable per-shard
+    partial of the resilient driver (``run_resilient``): the send buckets
+    are a pure function of the shard's items, so a lost shard's
+    contribution to every key range can be deterministically recomputed.
+
+    Returns ``(send_keys [S, B], send_vals [S, B, ...], overflow)`` where
+    ``overflow`` counts the valid pairs that did NOT fit their
+    destination bucket (silently dropped by the pre-PR-5 shuffle).
     """
     K = app.key_space
     S = num_shards
     K_local = -(-K // S)  # ceil
     n = stream.keys.shape[0]
-    B = shuffle_capacity or -(-2 * n // S)
+    B = shuffle_capacity or shuffle_bucket_capacity(n, S)
 
     tgt = jnp.where(stream.valid, stream.keys // K_local, S)
     oh = (tgt[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
@@ -580,6 +616,7 @@ def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
         jnp.cumsum(oh, axis=0), jnp.minimum(tgt, S - 1)[:, None],
         axis=1)[:, 0] - 1
     ok = stream.valid & (rank < B)
+    overflow = jnp.sum(stream.valid & (rank >= B)).astype(jnp.int32)
     slot = jnp.where(ok, jnp.minimum(tgt, S - 1) * B + rank, S * B)
 
     send_keys = jnp.full((S * B,), K, jnp.int32).at[slot].set(
@@ -588,16 +625,19 @@ def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
         lambda v: jnp.zeros((S * B,) + v.shape[1:], v.dtype).at[slot].set(
             v, mode="drop").reshape((S, B) + v.shape[1:]),
         stream.values)
+    return send_keys, send_vals, overflow
 
-    recv_keys = lax.all_to_all(send_keys, axis_name, split_axis=0,
-                               concat_axis=0, tiled=True)
-    recv_vals = jax.tree.map(
-        lambda v: lax.all_to_all(v, axis_name, split_axis=0,
-                                 concat_axis=0, tiled=True),
-        send_vals)
 
-    me = lax.axis_index(axis_name)
-    lo = me * K_local
+def _localize_recv(app, recv_keys, recv_vals, *, num_shards, shard_index
+                   ) -> tuple[col.PairStream, jax.Array]:
+    """Rebase a received ``[S, B]`` bucket stack into the shard's local key
+    range ``[0, K_local]`` (sentinel = K_local).  Shared between the
+    all-to-all receive side and the resilient driver's host-side assembly
+    (which concatenates the same buckets in the same source order the
+    tiled all-to-all would)."""
+    K = app.key_space
+    K_local = -(-K // num_shards)
+    lo = shard_index * K_local
     lkeys = jnp.where(recv_keys < K, recv_keys - lo, K_local)
     lkeys = jnp.where((lkeys >= 0) & (lkeys <= K_local), lkeys, K_local)
     lstream = col.PairStream(
@@ -607,22 +647,55 @@ def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
     return lstream, lo
 
 
+def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
+                   shuffle_capacity
+                   ) -> tuple[col.PairStream, jax.Array, jax.Array]:
+    """Key-partitioned all-to-all of raw pairs (the reduce-flow shuffle).
+
+    Returns the received local stream (keys rebased into ``[0, K_local]``),
+    this shard's key offset, and the shard's overflow count (valid pairs
+    past the per-destination capacity — see :func:`_bucketize_pairs`).
+    """
+    send_keys, send_vals, overflow = _bucketize_pairs(
+        app, stream, num_shards=num_shards,
+        shuffle_capacity=shuffle_capacity)
+
+    recv_keys = lax.all_to_all(send_keys, axis_name, split_axis=0,
+                               concat_axis=0, tiled=True)
+    recv_vals = jax.tree.map(
+        lambda v: lax.all_to_all(v, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True),
+        send_vals)
+
+    me = lax.axis_index(axis_name)
+    lstream, lo = _localize_recv(app, recv_keys, recv_vals,
+                                 num_shards=num_shards, shard_index=me)
+    return lstream, lo, overflow
+
+
+def _reduce_range(app, lstream: col.PairStream, lo):
+    """Reduce-flow tail for one key range: group the localized stream and
+    re-apply the user reduce with globally-rebased keys.  Shared between
+    the all-to-all shard fn and the resilient driver's per-range replay."""
+
+    def reduce_global(k, vals, cnt):
+        return app.reduce(k + lo, vals, cnt)
+
+    grouped = col.reduce_flow(
+        reduce_global, lstream,
+        max_values_per_key=app.max_values_per_key,
+        pad_value=app.pad_value)
+    # output stays key-sharded: [K_local] per shard -> [S*K_local] global
+    return grouped.keys + lo, grouped.values, grouped.counts
+
+
 def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity):
     def fn(local_items):
         stream = map_phase(app, local_items)
-        lstream, lo = _shuffle_pairs(app, stream, axis_name=axis_name,
-                                     num_shards=num_shards,
-                                     shuffle_capacity=shuffle_capacity)
-
-        def reduce_global(k, vals, cnt):
-            return app.reduce(k + lo, vals, cnt)
-
-        grouped = col.reduce_flow(
-            reduce_global, lstream,
-            max_values_per_key=app.max_values_per_key,
-            pad_value=app.pad_value)
-        # output stays key-sharded: [K_local] per shard -> [S*K_local] global
-        return grouped.keys + lo, grouped.values, grouped.counts
+        lstream, lo, overflow = _shuffle_pairs(
+            app, stream, axis_name=axis_name, num_shards=num_shards,
+            shuffle_capacity=shuffle_capacity)
+        return _reduce_range(app, lstream, lo) + (overflow[None],)
 
     return fn
 
@@ -644,49 +717,143 @@ def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
 
     def fn(local_items):
         stream = map_phase(app, local_items)
-        lstream, lo = _shuffle_pairs(app, stream, axis_name=axis_name,
-                                     num_shards=num_shards,
-                                     shuffle_capacity=shuffle_capacity)
-        K_local = lstream.key_space
-        uk, bs, lf = _check_sort_kernel_plan(
-            spec, K_local, app.value_aval, use_kernels, bucket_size,
-            level_fanouts, on_fallback)
-        sc = col.SortCombiner(
-            spec, K_local, app.value_aval,
-            sort_fold_fn=_sort_fold_kernel(uk, bs, lf))
-        state = sc.init_state()
-        n = lstream.keys.shape[0]
-        if n <= chunk_pairs:
-            state = sc.fold_chunk(state, lstream)
-        else:
-            n_chunks = -(-n // chunk_pairs)
-            pad = n_chunks * chunk_pairs - n
-            keys_p = jnp.pad(lstream.keys, (0, pad),
-                             constant_values=K_local).reshape(
-                n_chunks, chunk_pairs)
-            vals_p = jax.tree.map(
-                lambda v: jnp.pad(
-                    v, [(0, pad)] + [(0, 0)] * (v.ndim - 1)).reshape(
-                    (n_chunks, chunk_pairs) + v.shape[1:]),
-                lstream.values)
-
-            def body(state, xs):
-                ck, cv = xs
-                return sc.fold_chunk(
-                    state, col.PairStream(ck, cv, K_local)), None
-
-            state, _ = lax.scan(body, state, (keys_p, vals_p))
-        tables, counts = sc.tables_counts(state)
-        keys = jnp.arange(K_local, dtype=jnp.int32) + lo
-        vals = jax.vmap(spec.finalize)(keys, tables, counts)
-        return keys, vals, counts
+        lstream, lo, overflow = _shuffle_pairs(
+            app, stream, axis_name=axis_name, num_shards=num_shards,
+            shuffle_capacity=shuffle_capacity)
+        out = _sort_range_fold(app, spec, lstream, lo,
+                               use_kernels=use_kernels,
+                               chunk_pairs=chunk_pairs,
+                               bucket_size=bucket_size,
+                               level_fanouts=level_fanouts,
+                               on_fallback=on_fallback)
+        return out + (overflow[None],)
 
     return fn
+
+
+def _sort_range_fold(app, spec, lstream: col.PairStream, lo, *,
+                     use_kernels, chunk_pairs, bucket_size=None,
+                     level_fanouts=None, on_fallback=None):
+    """Sort-flow tail for one key range: fold the localized presorted-by-
+    range segment with the local sort collector in ``chunk_pairs``-sized
+    pieces and finalize the range.  Shared between the all-to-all shard fn
+    and the resilient driver's per-range replay (identical chunking, so a
+    recovered range is bitwise the no-failure range)."""
+    K_local = lstream.key_space
+    uk, bs, lf = _check_sort_kernel_plan(
+        spec, K_local, app.value_aval, use_kernels, bucket_size,
+        level_fanouts, on_fallback)
+    sc = col.SortCombiner(
+        spec, K_local, app.value_aval,
+        sort_fold_fn=_sort_fold_kernel(uk, bs, lf))
+    state = sc.init_state()
+    n = lstream.keys.shape[0]
+    if n <= chunk_pairs:
+        state = sc.fold_chunk(state, lstream)
+    else:
+        n_chunks = -(-n // chunk_pairs)
+        pad = n_chunks * chunk_pairs - n
+        keys_p = jnp.pad(lstream.keys, (0, pad),
+                         constant_values=K_local).reshape(
+            n_chunks, chunk_pairs)
+        vals_p = jax.tree.map(
+            lambda v: jnp.pad(
+                v, [(0, pad)] + [(0, 0)] * (v.ndim - 1)).reshape(
+                (n_chunks, chunk_pairs) + v.shape[1:]),
+            lstream.values)
+
+        def body(state, xs):
+            ck, cv = xs
+            return sc.fold_chunk(
+                state, col.PairStream(ck, cv, K_local)), None
+
+        state, _ = lax.scan(body, state, (keys_p, vals_p))
+    tables, counts = sc.tables_counts(state)
+    keys = jnp.arange(K_local, dtype=jnp.int32) + lo
+    vals = jax.vmap(spec.finalize)(keys, tables, counts)
+    return keys, vals, counts
 
 
 # ---------------------------------------------------------------------------
 # Top-level distributed entry point
 # ---------------------------------------------------------------------------
+
+
+def _distributed_tiling(app, plan, items, num_shards, *, use_kernels,
+                        chunk_pairs, key_block):
+    """Per-shard streaming tiling for a distributed run: each shard sees
+    ``ceil(n_items / S)`` items, so the autotune hint is the SHARD's pair
+    count, not the global one.  Shared by ``run_distributed`` and
+    ``run_resilient`` so the resilient per-shard partials are folded with
+    exactly the tiling the no-failure shards use (bitwise parity)."""
+    if plan.flow == "stream" and (chunk_pairs is None or key_block is None):
+        from repro.core import autotune as at
+
+        n_items = jax.tree.leaves(items)[0].shape[0]
+        n_shard_pairs = (max(-(-n_items // num_shards), 1)
+                         * max(app.emit_capacity, 1))
+        tiling = at.autotune_stream(
+            app, plan.spec, use_kernels=use_kernels,
+            n_pairs_hint=n_shard_pairs)
+        if chunk_pairs is None:
+            chunk_pairs = tiling.chunk_pairs
+        if key_block is None and tiling.blocked:
+            key_block = tiling.key_block
+    if plan.flow == "sort" and chunk_pairs is None:
+        chunk_pairs = DEFAULT_SORT_CHUNK_PAIRS
+    if chunk_pairs is None:
+        chunk_pairs = DEFAULT_CHUNK_PAIRS
+    return chunk_pairs, key_block
+
+
+def _surface_overflow(plan, overflow, *, strict: bool,
+                      shuffle_capacity) -> None:
+    """Report shuffle overflow (pairs past the per-destination capacity).
+
+    ``overflow`` is the per-source-shard count array.  Concrete values are
+    checked on the host: a nonzero count fires a
+    :class:`LoweringFallbackWarning` through the plan sink (once, with the
+    counts in ``plan.diagnostics``) or raises under ``strict``.  When the
+    caller wrapped ``run_distributed`` in an outer ``jax.jit`` the counts
+    are tracers and the check is SKIPPED: a host callback here would plant
+    an all-gather + custom-call into the compiled graph, corrupting the
+    collective roofline story the dry-run benchmarks measure (strict mode
+    raises at trace time instead of failing silently).  The plain
+    ``run_distributed`` call — which jits internally — always checks."""
+    import numpy as np
+
+    def report(ovf_host) -> None:
+        ovf_host = np.asarray(ovf_host)
+        total = int(ovf_host.sum())
+        if total == 0:
+            return
+        msg = (f"distributed shuffle overflow: {total} pairs exceeded the "
+               f"per-destination capacity "
+               f"(shuffle_capacity={shuffle_capacity or 'auto(2x uniform)'}; "
+               f"per-shard counts {ovf_host.reshape(-1).tolist()}) and were "
+               f"dropped — the key distribution is skewed past the bucket "
+               f"envelope; raise shuffle_capacity (or rebalance the key "
+               f"ranges)")
+        if strict:
+            raise ValueError(msg)
+        # warn UNconditionally, not through the once-per-plan fallback
+        # latch: overflow means the OUTPUT is wrong, not that a lowering
+        # downgraded, and must not be swallowed because some earlier
+        # lowering fallback already spent the plan's one warning
+        import warnings
+
+        warnings.warn(msg, col.LoweringFallbackWarning, stacklevel=3)
+        if plan is not None and msg not in plan.diagnostics:
+            plan.diagnostics += (msg,)
+
+    if isinstance(overflow, jax.core.Tracer):
+        if strict:
+            raise ValueError(
+                "strict_shuffle=True cannot be checked under an outer "
+                "jax.jit (the overflow count is a tracer); call "
+                "run_distributed un-jitted or check plan.diagnostics")
+        return
+    report(overflow)
 
 
 def run_distributed(
@@ -704,6 +871,7 @@ def run_distributed(
     key_block: int | None = None,
     bucket_size: int | None = None,
     level_fanouts: tuple[int, ...] | None = None,
+    strict_shuffle: bool = False,
 ):
     """shard_map the chosen flow over ``data_axis`` of ``mesh``.
 
@@ -717,29 +885,22 @@ def run_distributed(
     so reusing a tiling autotuned for the global workload would oversize
     the chunk (and undersize the key block) by the shard factor.  Pass an
     int to pin the per-shard chunk explicitly.
+
+    The reduce/sort flows' all-to-all shuffle counts pairs past its
+    per-destination capacity (key-skew overflow): a nonzero count fires a
+    :class:`LoweringFallbackWarning` and lands in ``plan.diagnostics``, or
+    raises a ``ValueError`` under ``strict_shuffle=True`` — it is never
+    silently dropped anymore.
     """
     from jax.experimental.shard_map import shard_map
 
     S = mesh.shape[data_axis]
-    if plan.flow == "stream" and (chunk_pairs is None or key_block is None):
-        # per-shard autotune (not the local tiling): hint with the shard's
-        # pair count so the chunk knee and the key block match what each
-        # shard actually folds.
-        from repro.core import autotune as at
-
-        n_items = jax.tree.leaves(items)[0].shape[0]
-        n_shard_pairs = max(-(-n_items // S), 1) * max(app.emit_capacity, 1)
-        tiling = at.autotune_stream(
-            app, plan.spec, use_kernels=use_kernels,
-            n_pairs_hint=n_shard_pairs)
-        if chunk_pairs is None:
-            chunk_pairs = tiling.chunk_pairs
-        if key_block is None and tiling.blocked:
-            key_block = tiling.key_block
-    if plan.flow == "sort" and chunk_pairs is None:
-        chunk_pairs = DEFAULT_SORT_CHUNK_PAIRS
-    if chunk_pairs is None:
-        chunk_pairs = DEFAULT_CHUNK_PAIRS
+    # per-shard autotune (not the local tiling): hint with the shard's
+    # pair count so the chunk knee and the key block match what each
+    # shard actually folds.
+    chunk_pairs, key_block = _distributed_tiling(
+        app, plan, items, S, use_kernels=use_kernels,
+        chunk_pairs=chunk_pairs, key_block=key_block)
 
     if plan.flow in ("combine", "stream"):
         if plan.flow == "stream":
@@ -762,12 +923,372 @@ def run_distributed(
                             bucket_size=bucket_size,
                             level_fanouts=level_fanouts,
                             on_fallback=_plan_fallback_cb(plan))
-        out_spec = (P(data_axis), P(data_axis), P(data_axis))
+        out_spec = (P(data_axis), P(data_axis), P(data_axis), P(data_axis))
     else:
         fn = _reduce_shard_fn(app, axis_name=data_axis, num_shards=S,
                               shuffle_capacity=shuffle_capacity)
-        out_spec = (P(data_axis), P(data_axis), P(data_axis))
+        out_spec = (P(data_axis), P(data_axis), P(data_axis), P(data_axis))
 
     sm = shard_map(fn, mesh=mesh, in_specs=(P(data_axis),),
                    out_specs=out_spec, check_rep=False)
-    return jax.jit(sm)(items)
+    out = jax.jit(sm)(items)
+    if plan.flow in ("reduce", "sort"):
+        keys, values, counts, overflow = out
+        _surface_overflow(plan, overflow, strict=strict_shuffle,
+                          shuffle_capacity=shuffle_capacity)
+        return keys, values, counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant elastic driver: deterministic shard re-execution +
+# partial-aggregate recovery (run_resilient)
+# ---------------------------------------------------------------------------
+
+
+def merge_partial_tables(app, spec, tables_seq, counts_seq):
+    """Merge per-shard partial holder tables in shard order, host side.
+
+    The mirror of :func:`merge_tables_collective` without collectives: the
+    derived combiner is a *monoid*, so partials re-merged after a failure
+    (some recomputed, some restored from checkpoints) give bitwise the
+    answer of the uninterrupted run — MapReduce's speculative re-execution
+    recast at the combiner layer.  Per-leaf monoid reductions are taken
+    over the stacked shard axis exactly like the collective lowering; the
+    generic ``spec.merge`` and Hadoop-reapply paths replicate the
+    collective versions' shard order.
+    """
+    counts_stack = jnp.stack(counts_seq)  # [S, K]
+    total_counts = jnp.sum(counts_stack, axis=0).astype(counts_seq[0].dtype)
+
+    if spec.merge is not None:
+        leaves_seq = [jax.tree.leaves(t) for t in tables_seq]
+        treedef = jax.tree.structure(tables_seq[0])
+        if (spec.monoids is not None
+                and len(spec.monoids) == len(leaves_seq[0])):
+            merged = []
+            for i, mono in enumerate(spec.monoids):
+                stack = jnp.stack([ls[i] for ls in leaves_seq])
+                try:
+                    red = mono.dense_reduce(stack, axis=0)
+                except KeyError:  # no dense lowering: shard-0 table (the
+                    red = stack[0]  # collective all-gather fallback's g[0])
+                merged.append(red.astype(leaves_seq[0][i].dtype))
+            tables = jax.tree.unflatten(treedef, merged)
+        else:
+            tables = tables_seq[0]
+            na = counts_seq[0]
+            for tab, nb in zip(tables_seq[1:], counts_seq[1:]):
+                tables = jax.vmap(spec.merge)(tables, tab, na, nb)
+                na = na + nb
+        out = col.finalize_tables(spec, tables, total_counts,
+                                  total_counts.shape[0])
+        return out.keys, out.values, out.counts
+
+    if spec.reapply_ok:
+        g_vals = jax.tree.map(
+            lambda *vs: jnp.stack(vs),
+            *[col.finalize_tables(spec, t, c, app.key_space).values
+              for t, c in zip(tables_seq, counts_seq)])
+        return _reapply_merge(app, g_vals, counts_stack)
+    raise ValueError("combiner has no cross-shard merge strategy")
+
+
+def run_resilient(
+    app,
+    plan,
+    items,
+    *,
+    mesh=None,
+    num_hosts: int | None = None,
+    num_shards: int | None = None,
+    data_axis: str = "data",
+    step: int = 0,
+    ckpt_dir: str | None = None,
+    inject=None,
+    timeout_s: float = 60.0,
+    straggler_lag: int = 1,
+    combine_impl: str = "auto",
+    use_kernels: bool = False,
+    shuffle_capacity: int | None = None,
+    chunk_pairs: int | None = None,
+    key_block: int | None = None,
+    bucket_size: int | None = None,
+    level_fanouts: tuple[int, ...] | None = None,
+    strict_shuffle: bool = False,
+):
+    """Fault-tolerant distributed MapReduce driver.
+
+    Runs ``plan.flow`` over ``items`` partitioned into ``num_shards``
+    deterministic shards (``fault.shard_for``'s stateless assignment over
+    ``num_hosts`` ranks) and survives the failure modes a production
+    deployment actually has:
+
+    * **Shard loss** — every shard's partial aggregate (holder tables for
+      the stream/combine flows; per-destination all-to-all send buckets
+      for the reduce/sort flows) is a pure function of the shard's items,
+      so a lost shard is *recomputed* on the deterministic backup rank
+      (``fault.backup_assignment``) with a bitwise-identical result.
+    * **Partial-aggregate recovery** — with ``ckpt_dir`` set, each shard
+      snapshot lands in ``ckpt.shard_partial_dir(ckpt_dir, shard)``
+      (atomic, ``checkpoint/ckpt.py``); recovery prefers restoring the
+      checkpointed partial over re-execution, and the monoid merge makes
+      restored and recomputed partials interchangeable.
+    * **Stragglers** — hosts alive but lagging (``HeartbeatMonitor``) get
+      their shards speculatively re-executed on the backup rank;
+      determinism makes the race between original and backup a non-event.
+    * **Elastic host-count change** — ``inject.resize_to`` (or a real
+      cluster resize feeding the same path) remeshes over the surviving
+      devices with ``elastic.best_mesh`` and re-runs ONLY the shards whose
+      partials were lost with the removed hosts; the number of shards —
+      and with it the all-to-all key ranges the sort/reduce flows
+      partition by — stays fixed, so the re-partition boundary is the
+      existing bucket layout and the merge is unchanged.
+
+    Failure detection runs through a real :class:`fault.HeartbeatMonitor`
+    over a synthetic clock; ``inject`` (a :class:`fault.FaultInjection`)
+    scripts which hosts die, lag, or leave.  The recovery ledger is
+    returned as a :class:`fault.RecoveryLog` and summarized onto
+    ``plan.recovery`` (see ``MapReduce.explain()``).
+
+    Returns ``(keys, values, counts, log)`` where the first three are
+    bitwise what the fault-free ``run_distributed`` produces on a
+    ``num_shards``-wide mesh: stream/combine results span the full key
+    space; reduce/sort results are the key-range-concatenated
+    ``ceil(K/S)*S`` layout.
+    """
+    import numpy as np
+
+    from repro.checkpoint import ckpt
+    from repro.distributed import fault as flt
+
+    inject = inject if inject is not None else flt.FaultInjection()
+    if mesh is not None:
+        mesh_hosts = mesh.shape[data_axis]
+    else:
+        mesh_hosts = None
+    H = num_hosts if num_hosts is not None else (mesh_hosts or 1)
+    S = num_shards if num_shards is not None else (mesh_hosts or H)
+    if H <= 0 or S <= 0:
+        raise ValueError(f"need positive host/shard counts, got {H}/{S}")
+    n_items = jax.tree.leaves(items)[0].shape[0]
+    if n_items % S:
+        raise ValueError(
+            f"n_items={n_items} must divide into num_shards={S} (the same "
+            f"contract shard_map's data-axis partition enforces)")
+    per = n_items // S
+    spec = plan.spec
+    flow = plan.flow
+    cb = _plan_fallback_cb(plan)
+    chunk_pairs, key_block = _distributed_tiling(
+        app, plan, items, S, use_kernels=use_kernels,
+        chunk_pairs=chunk_pairs, key_block=key_block)
+    if flow in ("stream", "sort", "combine") and spec is None:
+        raise ValueError(f"{flow} flow needs a derived combiner spec")
+
+    def shard_slice(s: int):
+        return jax.tree.map(lambda a: a[s * per:(s + 1) * per], items)
+
+    # -- the per-shard partial: a pure deterministic function of the shard --
+    if flow == "stream":
+        def _partial(local_items):
+            tables, counts = stream_local_tables(
+                app, spec, local_items, chunk_pairs=chunk_pairs,
+                use_kernels=use_kernels, key_block=key_block)
+            return {"tables": tables, "counts": counts}
+    elif flow == "combine":
+        def _partial(local_items):
+            tables, counts = _combine_local_tables(
+                app, spec, map_phase(app, local_items),
+                combine_impl=combine_impl, use_kernels=use_kernels)
+            return {"tables": tables, "counts": counts}
+    else:  # reduce | sort: the all-to-all wire format is the partial
+        def _partial(local_items):
+            send_keys, send_vals, overflow = _bucketize_pairs(
+                app, map_phase(app, local_items), num_shards=S,
+                shuffle_capacity=shuffle_capacity)
+            return {"send_keys": send_keys, "send_vals": send_vals,
+                    "overflow": overflow}
+
+    partial_fn = jax.jit(_partial)
+    partial_example = jax.eval_shape(_partial, shard_slice(0))
+
+    def save_partial(s: int, p) -> None:
+        if ckpt_dir is not None:
+            ckpt.save(ckpt.shard_partial_dir(ckpt_dir, s), step, p)
+
+    def try_restore(s: int):
+        if ckpt_dir is None:
+            return None
+        d = ckpt.shard_partial_dir(ckpt_dir, s)
+        if not ckpt.has_step(d, step):
+            return None
+        tree, _ = ckpt.restore(d, partial_example, step=step)
+        return tree
+
+    # -- phase A: primary execution under the stateless assignment ----------
+    log = flt.RecoveryLog(num_hosts=H, num_shards=S, step=step)
+    clock = flt.StepClock()
+    mon = flt.HeartbeatMonitor(H, timeout_s=timeout_s, clock=clock)
+    dead_script = set(inject.dead_hosts)
+    strag_script = set(inject.straggler_hosts)
+    owner = {s: h for h in range(H)
+             for s in flt.shard_for(step, h, H, S)}
+    partials: dict[int, Any] = {}
+    computed_by: dict[int, int] = {}
+    progress = {h: 0 for h in range(H)}
+    for h in range(H):
+        for j, s in enumerate(flt.shard_for(step, h, H, S)):
+            clock.advance(1.0)
+            if h in dead_script and j >= inject.die_after_shards:
+                break  # host crashes: stops computing AND heartbeating
+            if h in strag_script:
+                mon.beat(h, step=0)  # alive, but no progress this round
+                continue
+            p = partial_fn(shard_slice(s))
+            if h not in dead_script or inject.checkpoint_survives:
+                save_partial(s, p)
+            if h not in dead_script:
+                # a dying host's in-memory partial dies with it; only the
+                # checkpoint (if any) outlives the crash
+                partials[s] = p
+            computed_by[s] = h
+            log.computed.append((s, h))
+            progress[h] = j + 1
+            mon.beat(h, step=progress[h])
+
+    # -- failure detection: healthy hosts keep heartbeating while the
+    # coordinator waits out the timeout; crashed hosts stay silent.  A
+    # host that finished its WHOLE assignment beats the round-complete
+    # step S — under an uneven S/H split the floor-count hosts legitimately
+    # complete fewer shards than the ceil-count ones, and must not read as
+    # stragglers for it --------------------------------------------------
+    clock.advance(mon.timeout_s + mon.grace_s + 1.0)
+    for h in range(H):
+        if h not in dead_script:
+            owned = len(flt.shard_for(step, h, H, S))
+            mon.beat(h, step=(S if progress[h] >= owned else progress[h]))
+    detected_dead = mon.dead_hosts()
+    detected_strag = mon.stragglers(lag=straggler_lag)
+    log.dead_hosts = list(detected_dead)
+    log.straggler_hosts = list(detected_strag)
+    alive = mon.alive_hosts()
+    backup_pool = [a for a in alive if a not in set(detected_strag)] or alive
+
+    def recover(s: int, failed_host: int, ledger: list) -> None:
+        backup, _ = flt.backup_assignment(step, failed_host, H, S,
+                                          alive=backup_pool)
+        restored = try_restore(s)
+        if restored is not None:
+            partials[s] = restored
+            computed_by[s] = backup  # the restoring rank holds it now
+            log.restored.append(s)
+            return
+        p = partial_fn(shard_slice(s))  # deterministic re-execution
+        partials[s] = p
+        computed_by[s] = backup
+        save_partial(s, p)
+        ledger.append((s, backup))
+
+    for h in detected_dead:
+        for s in flt.shard_for(step, h, H, S):
+            if s not in partials:
+                recover(s, h, log.recomputed)
+    for h in detected_strag:
+        for s in flt.shard_for(step, h, H, S):
+            if s not in partials:
+                recover(s, h, log.speculated)
+
+    # -- elastic host-count change: remesh, recompute only what moved -------
+    final_mesh = mesh
+    if inject.resize_to is not None and inject.resize_to != H:
+        new_H = inject.resize_to
+        if new_H <= 0:
+            raise ValueError(f"resize_to must be positive, got {new_H}")
+        if mesh is not None:
+            from repro.distributed import elastic
+
+            devs = list(mesh.devices.reshape(-1))
+            devs = (devs[:new_H] if new_H <= len(devs)
+                    else list(jax.devices())[:new_H])
+            final_mesh = elastic.best_mesh(devs, axis_names=(data_axis,))
+        new_owner = {s: h for h in range(new_H)
+                     for s in flt.shard_for(step, h, new_H, S)}
+        log.moved = sorted(s for s in range(S)
+                           if new_owner[s] != owner[s])
+        removed = set(range(new_H, H))
+        for s in list(partials):
+            if computed_by.get(s) in removed:
+                del partials[s]  # left with the departing host's memory
+        for s in range(S):
+            if s in partials:
+                continue
+            restored = try_restore(s)
+            if restored is not None:
+                partials[s] = restored
+                computed_by[s] = new_owner[s]
+                log.restored.append(s)
+            else:
+                partials[s] = partial_fn(shard_slice(s))
+                computed_by[s] = new_owner[s]
+                save_partial(s, partials[s])
+                log.recomputed.append((s, new_owner[s]))
+        log.resized = (H, new_H)
+        H = new_H
+        owner = new_owner
+
+    # -- completeness sweep: any shard still missing (undetected loss) is
+    # re-executed by its owner — no shard is ever silently absent ----------
+    for s in range(S):
+        if s not in partials:
+            partials[s] = partial_fn(shard_slice(s))
+            computed_by[s] = owner[s]
+            save_partial(s, partials[s])
+            log.recomputed.append((s, owner[s]))
+
+    # -- phase B: monoid re-merge (tables) or key-range replay (shuffle) ----
+    if flow in ("stream", "combine"):
+        keys, values, counts = merge_partial_tables(
+            app, spec,
+            [partials[s]["tables"] for s in range(S)],
+            [partials[s]["counts"] for s in range(S)])
+    else:
+        overflow = jnp.stack([partials[s]["overflow"] for s in range(S)])
+        log.shuffle_overflow = tuple(
+            int(x) for x in np.asarray(overflow).reshape(-1))
+        _surface_overflow(plan, overflow, strict=strict_shuffle,
+                          shuffle_capacity=shuffle_capacity)
+
+        def _range_out(r, recv_keys, recv_vals):
+            lstream, lo = _localize_recv(app, recv_keys, recv_vals,
+                                         num_shards=S, shard_index=r)
+            if flow == "reduce":
+                return _reduce_range(app, lstream, lo)
+            return _sort_range_fold(
+                app, spec, lstream, lo, use_kernels=use_kernels,
+                chunk_pairs=chunk_pairs, bucket_size=bucket_size,
+                level_fanouts=level_fanouts, on_fallback=cb)
+
+        range_fn = jax.jit(_range_out)
+        outs = []
+        for r in range(S):
+            # the host-side transpose of the tiled all-to-all: destination
+            # r receives every source's r-th bucket, in source order
+            recv_keys = jnp.stack(
+                [partials[s]["send_keys"][r] for s in range(S)])
+            recv_vals = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves),
+                *[jax.tree.map(lambda v, r=r: v[r],
+                               partials[s]["send_vals"])
+                  for s in range(S)])
+            outs.append(range_fn(jnp.asarray(r, jnp.int32),
+                                 recv_keys, recv_vals))
+        keys = jnp.concatenate([o[0] for o in outs])
+        values = jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves),
+            *[o[1] for o in outs])
+        counts = jnp.concatenate([o[2] for o in outs])
+
+    log.final_mesh = final_mesh
+    plan.recovery += tuple(log.summary())
+    return keys, values, counts, log

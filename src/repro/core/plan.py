@@ -43,6 +43,12 @@ class ExecutionPlan:
     #: human-readable optimizer/lowering decisions worth surfacing — e.g.
     #: the one-hot -> scatter fallback that used to happen silently.
     diagnostics: tuple[str, ...] = ()
+    #: fault-recovery events from ``engine.run_resilient`` — which shards
+    #: were restored from checkpointed partials, recomputed on backup
+    #: ranks, or speculatively re-executed, and any elastic remesh.  The
+    #: monoid-merge recovery argument makes these pure bookkeeping: the
+    #: answer is bitwise the no-failure one.
+    recovery: tuple[str, ...] = ()
 
     @property
     def optimized(self) -> bool:
@@ -73,6 +79,8 @@ class ExecutionPlan:
                 lines.append(f"  - {note}")
         for diag in self.diagnostics:
             lines.append(f"diagnostic: {diag}")
+        for event in self.recovery:
+            lines.append(f"recovery: {event}")
         return "\n".join(lines)
 
 

@@ -22,21 +22,29 @@ from repro.distributed import sharding as shd
 
 def best_mesh(devices=None, *, model_parallel: int | None = None,
               axis_names=("data", "model")):
-    """Largest (data × model) mesh over the live devices."""
+    """Largest (data × model) mesh over the live devices.
+
+    With a single axis name (e.g. ``("data",)``), builds the flat
+    data-parallel mesh over every live device — the shape
+    ``engine.run_resilient`` remeshes to after an elastic host-count
+    change.
+    """
+    import numpy as np
+
+    from jax.sharding import Mesh
+
     devices = devices if devices is not None else jax.devices()
     n = len(devices)
+    if len(axis_names) == 1:
+        return Mesh(np.asarray(devices), axis_names)
     if model_parallel is None:
         # keep model axis as large a power of two as fits
         model_parallel = 1
         while model_parallel * 2 <= min(n, 16) and n % (model_parallel * 2) == 0:
             model_parallel *= 2
     data = n // model_parallel
-    import numpy as np
-
     arr = np.asarray(devices[: data * model_parallel]).reshape(
         data, model_parallel)
-    from jax.sharding import Mesh
-
     return Mesh(arr, axis_names)
 
 

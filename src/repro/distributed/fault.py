@@ -4,7 +4,11 @@ At 1000+ nodes the design assumptions are:
 
 * **State recovery** is checkpoint/restart (checkpoint/ckpt.py): any failure
   collapses to "restart the job from LATEST on the surviving mesh"
-  (elastic.py reshards).  No in-band parameter reconstruction.
+  (elastic.py reshards).  For MapReduce partials the recovery unit is finer:
+  derived combiners are *monoids*, so any shard's holder table can be
+  recomputed or re-merged after a failure with bitwise-identical results —
+  ``core/engine.run_resilient`` checkpoints per-shard partial aggregates and
+  restores or re-executes only the lost shards.
 * **Failure detection** is heartbeat-based: every host appends
   ``(host_id, step, wall_time)``; the coordinator declares a host dead after
   ``timeout_s`` silence.  In this single-process container the monitor is
@@ -20,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Any, Callable
 
 
 @dataclasses.dataclass
@@ -28,26 +32,44 @@ class HostState:
     host_id: int
     last_step: int = -1
     last_beat: float = 0.0
+    ever_beat: bool = False
 
 
 class HeartbeatMonitor:
-    """Declares hosts dead after ``timeout_s`` without a heartbeat."""
+    """Declares hosts dead after ``timeout_s`` without a heartbeat.
+
+    ``last_beat`` is initialized from the injected ``clock`` at
+    construction — NOT 0.0, which against ``time.monotonic()`` (seconds
+    since an arbitrary epoch, typically boot) declared every host dead
+    before its first beat.  Hosts that have never beaten get an extra
+    ``grace_s`` startup allowance (default: one more timeout) on top of
+    the timeout before they are declared dead, so a slow-to-join host is
+    not buried while it is still binding its devices.
+    """
 
     def __init__(self, num_hosts: int, *, timeout_s: float = 60.0,
+                 grace_s: float | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.timeout_s = timeout_s
+        self.grace_s = timeout_s if grace_s is None else grace_s
         self.clock = clock
-        self.hosts = {i: HostState(i) for i in range(num_hosts)}
+        now = self.clock()
+        self.hosts = {i: HostState(i, last_beat=now) for i in range(num_hosts)}
 
     def beat(self, host_id: int, step: int):
         h = self.hosts[host_id]
         h.last_step = step
         h.last_beat = self.clock()
+        h.ever_beat = True
 
     def dead_hosts(self) -> list[int]:
         now = self.clock()
-        return [i for i, h in self.hosts.items()
-                if now - h.last_beat > self.timeout_s]
+        out = []
+        for i, h in self.hosts.items():
+            limit = self.timeout_s + (0.0 if h.ever_beat else self.grace_s)
+            if now - h.last_beat > limit:
+                out.append(i)
+        return out
 
     def alive_hosts(self) -> list[int]:
         dead = set(self.dead_hosts())
@@ -69,19 +91,43 @@ def shard_for(step: int, host_index: int, num_hosts: int,
     Rotates assignments across steps so a persistently slow host does not
     pin the same shard (straggler decorrelation), and any host can compute
     any other host's assignment for speculative backup execution.
+
+    The assignment is round-robin over rotated host ranks, so it stays a
+    partition (every shard owned exactly once) for ANY ``num_shards`` /
+    ``num_hosts`` pair — an elastic remesh from 8 to 7 hosts must not crash
+    the recovery path it exists to serve.  Per-host load is balanced to
+    within one shard (``floor`` vs ``ceil`` of ``num_shards/num_hosts``).
     """
-    per = num_shards // num_hosts
-    assert num_shards % num_hosts == 0
+    if num_hosts <= 0:
+        raise ValueError(f"num_hosts must be positive, got {num_hosts}")
+    if not 0 <= host_index < num_hosts:
+        raise ValueError(
+            f"host_index {host_index} out of range [0, {num_hosts})")
+    if num_shards < 0:
+        raise ValueError(f"num_shards must be >= 0, got {num_shards}")
     base = (host_index + step) % num_hosts
-    return [(base * per + i) % num_shards for i in range(per)]
+    return [s for s in range(num_shards) if s % num_hosts == base]
 
 
 def backup_assignment(step: int, dead_host: int, num_hosts: int,
-                      num_shards: int) -> tuple[int, list[int]]:
+                      num_shards: int, *, alive: list[int] | None = None
+                      ) -> tuple[int, list[int]]:
     """Which surviving host re-executes a dead host's shards: the next
-    alive rank (deterministic, no coordination)."""
-    backup = (dead_host + 1) % num_hosts
-    return backup, shard_for(step, dead_host, num_hosts, num_shards)
+    alive rank (deterministic, no coordination — every survivor computes
+    the same answer locally).  ``alive`` restricts the candidates when the
+    caller knows which ranks still beat; without it, the next rank."""
+    if num_hosts <= 1:
+        raise ValueError("no surviving host available for backup execution")
+    if not 0 <= dead_host < num_hosts:
+        raise ValueError(
+            f"dead_host {dead_host} out of range [0, {num_hosts})")
+    candidates = [(dead_host + k) % num_hosts for k in range(1, num_hosts)]
+    if alive is not None:
+        alive_set = set(alive)
+        filtered = [c for c in candidates if c in alive_set]
+        if filtered:
+            candidates = filtered
+    return candidates[0], shard_for(step, dead_host, num_hosts, num_shards)
 
 
 @dataclasses.dataclass
@@ -94,3 +140,111 @@ class RestartPolicy:
     def on_failure(self) -> bool:
         self.restarts += 1
         return self.restarts <= self.max_restarts
+
+
+# ---------------------------------------------------------------------------
+# Deterministic fault injection + recovery bookkeeping for run_resilient
+# ---------------------------------------------------------------------------
+
+
+class StepClock:
+    """Synthetic monotonic clock for deterministic failure drills."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float = 1.0) -> float:
+        self.t += dt
+        return self.t
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultInjection:
+    """Deterministic failure script consumed by ``engine.run_resilient``.
+
+    The driver simulates the cluster events a production deployment
+    actually has, in a single process, so recovery is testable bit-for-bit:
+
+    * ``dead_hosts`` crash after completing ``die_after_shards`` of their
+      assigned shards — their in-memory partials are lost; checkpoints
+      they wrote before dying survive unless ``checkpoint_survives`` is
+      False (e.g. host-local disk died with the host).
+    * ``straggler_hosts`` stay alive (keep heartbeating) but make no
+      progress this round — their shards are speculatively re-executed on
+      the deterministic backup rank.
+    * ``resize_to`` shrinks or grows the host count after the map phase
+      (elastic event): the driver remeshes, recomputes the stateless
+      assignment, and re-runs only the shards whose partials were lost
+      with the removed hosts.
+    """
+
+    dead_hosts: tuple[int, ...] = ()
+    die_after_shards: int = 0
+    checkpoint_survives: bool = True
+    straggler_hosts: tuple[int, ...] = ()
+    resize_to: int | None = None
+
+
+@dataclasses.dataclass
+class RecoveryLog:
+    """What ``run_resilient`` did to produce its answer — who computed,
+    restored, re-executed or speculated which shard, and what the shuffle
+    overflow counters saw.  Summarized onto ``plan.recovery``."""
+
+    num_hosts: int
+    num_shards: int
+    step: int
+    #: (shard, host) pairs completed in the primary map phase.
+    computed: list = dataclasses.field(default_factory=list)
+    #: shards restored from checkpointed partial aggregates.
+    restored: list = dataclasses.field(default_factory=list)
+    #: (shard, backup_host) recomputed after a detected host death.
+    recomputed: list = dataclasses.field(default_factory=list)
+    #: (shard, backup_host) speculatively re-executed for stragglers.
+    speculated: list = dataclasses.field(default_factory=list)
+    dead_hosts: list = dataclasses.field(default_factory=list)
+    straggler_hosts: list = dataclasses.field(default_factory=list)
+    #: (old_hosts, new_hosts) when an elastic resize happened, else None.
+    resized: tuple | None = None
+    #: shards whose owner changed across the resize.
+    moved: list = dataclasses.field(default_factory=list)
+    #: per-source-shard count of shuffle pairs past the all-to-all capacity
+    #: (reduce/sort flows only; () for the table-merge flows).
+    shuffle_overflow: tuple = ()
+    #: the mesh run_resilient ended on (None when driven mesh-less).
+    final_mesh: Any = None
+
+    def summary(self) -> tuple[str, ...]:
+        """Human-readable recovery events for ``plan.recovery``."""
+        lines = [
+            f"resilient run: {self.num_shards} shards over "
+            f"{self.num_hosts} hosts at step {self.step}; "
+            f"{len(self.computed)} computed in the primary phase"]
+        if self.dead_hosts:
+            lines.append(
+                f"detected dead hosts {sorted(self.dead_hosts)}; "
+                f"restored {sorted(self.restored)} from checkpointed "
+                f"partials, recomputed "
+                f"{sorted(s for s, _ in self.recomputed)} on backup ranks "
+                f"{sorted(set(h for _, h in self.recomputed))}")
+        if self.straggler_hosts:
+            lines.append(
+                f"stragglers {sorted(self.straggler_hosts)}: speculatively "
+                f"re-executed {sorted(s for s, _ in self.speculated)} on "
+                f"backup ranks "
+                f"{sorted(set(h for _, h in self.speculated))}")
+        if self.resized is not None:
+            lines.append(
+                f"elastic resize {self.resized[0]} -> {self.resized[1]} "
+                f"hosts: {len(self.moved)} shard assignments moved, "
+                f"re-ran only the shards whose partials were lost")
+        total_ovf = int(sum(self.shuffle_overflow)) if len(
+            self.shuffle_overflow) else 0
+        if total_ovf:
+            lines.append(
+                f"shuffle overflow: {total_ovf} pairs past capacity "
+                f"(per-shard {tuple(int(x) for x in self.shuffle_overflow)})")
+        return tuple(lines)

@@ -56,6 +56,29 @@ def _apply_matrix_overrides() -> None:
 _apply_matrix_overrides()
 
 
+@pytest.fixture
+def matrix_flows():
+    """Flow list for tests that iterate execution flows EXPLICITLY (the
+    fault-injection recovery drills): under the REPRO_TEST_FLOW matrix
+    override, restrict to the overridden flow so each matrix leg
+    exercises its own flow instead of re-running all of them."""
+
+    def pick(flows=("stream", "sort", "combine", "reduce")):
+        if FLOW_OVERRIDE is not None and FLOW_OVERRIDE in flows:
+            return (FLOW_OVERRIDE,)
+        return tuple(flows)
+
+    return pick
+
+
+@pytest.fixture
+def matrix_use_kernels():
+    """True on the flow-matrix kernels leg (REPRO_TEST_KERNELS): tests
+    that build engine runs directly (not through the patched MapReduce
+    API) use this to put the Pallas lowerings under the same override."""
+    return KERNELS_OVERRIDE
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "auto_flow: asserts how flow='auto' resolves (skipped "

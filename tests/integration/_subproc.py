@@ -1,0 +1,26 @@
+"""Shared subprocess runner for multi-device integration tests.
+
+The main pytest process must keep seeing ONE device, so anything needing a
+fake multi-device topology runs in a subprocess with
+``--xla_force_host_platform_device_count`` (used by test_distributed.py
+and the test_fault.py recovery drills).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "src"))
+
+
+def run_with_devices(code: str, n: int = 4, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout

@@ -1,26 +1,7 @@
 """Multi-device behaviour, via subprocesses with fake CPU devices (the main
 test process must keep seeing ONE device)."""
 
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
-                                   "src"))
-
-
-def run_with_devices(code: str, n: int = 4, timeout: int = 420):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+from _subproc import run_with_devices
 
 
 def test_distributed_engine_flows():
@@ -199,6 +180,98 @@ def test_distributed_stream_per_shard_autotune():
         print("SHARD_TUNE_OK")
     """)
     assert "SHARD_TUNE_OK" in out
+
+
+def test_shuffle_overflow_skew_regression():
+    """Seed regression: ``_shuffle_pairs`` silently dropped pairs past the
+    per-destination capacity ``B`` — a skewed key distribution (every pair
+    on one key) returned WRONG distributed reduce/sort results with no
+    signal.  The shuffle now counts the overflow, fires a
+    LoweringFallbackWarning with the per-shard counts in
+    ``plan.diagnostics``, and raises under ``strict_shuffle=True``; the
+    resilient driver's ledger records the same counters."""
+    out = run_with_devices("""
+        import warnings, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduceApp, plan_execution
+        from repro.core import LoweringFallbackWarning
+        from repro.core import engine as eng
+
+        VOCAB = 32
+        class Skew(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 1024
+            emit_capacity = 8
+            def map(self, item, emit):
+                emit(jnp.zeros_like(item), jnp.ones_like(item))  # all key 0
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = jax.make_mesh((4,), ("data",))
+        toks = jax.device_put(jnp.zeros((64, 8), jnp.int32),
+                              NamedSharding(mesh, P("data")))
+        app = Skew()
+        for flow in ("reduce", "sort"):
+            with mesh:
+                plan = plan_execution(app, flow=flow)
+                with warnings.catch_warnings(record=True) as w:
+                    warnings.simplefilter("always")
+                    eng.run_distributed(app, plan, toks, mesh=mesh)
+                msgs = [str(x.message) for x in w
+                        if issubclass(x.category, LoweringFallbackWarning)]
+                # seed behavior: no warning, silently wrong counts
+                assert any("overflow" in m for m in msgs), (flow, msgs)
+                assert any("overflow" in d for d in plan.diagnostics)
+
+                plan2 = plan_execution(app, flow=flow)
+                try:
+                    eng.run_distributed(app, plan2, toks, mesh=mesh,
+                                        strict_shuffle=True)
+                    raise SystemExit(f"strict did not raise for {flow}")
+                except ValueError as e:
+                    assert "overflow" in str(e)
+
+                # a capacity that fits the skew keeps the answer exact and
+                # quiet (the overflow counter reads zero)
+                plan3 = plan_execution(app, flow=flow)
+                with warnings.catch_warnings(record=True) as w3:
+                    warnings.simplefilter("always")
+                    k, v, c = eng.run_distributed(
+                        app, plan3, toks, mesh=mesh,
+                        shuffle_capacity=64 * 8,
+                        strict_shuffle=True)
+                assert not [x for x in w3
+                            if issubclass(x.category,
+                                          LoweringFallbackWarning)]
+                got = {int(kk): int(vv) for kk, vv, cc in
+                       zip(np.asarray(k), np.asarray(v), np.asarray(c))
+                       if kk < VOCAB and cc > 0}
+                assert got == {0: 64 * 8}, got
+
+                # overflow must stay loud even when an earlier lowering
+                # fallback already spent the plan's once-per-plan warning
+                # latch — it signals WRONG OUTPUT, not a lowering downgrade
+                plan3b = plan_execution(app, flow=flow)
+                plan3b._fallback_warned = True
+                with warnings.catch_warnings(record=True) as w3b:
+                    warnings.simplefilter("always")
+                    eng.run_distributed(app, plan3b, toks, mesh=mesh)
+                assert any("overflow" in str(x.message) for x in w3b
+                           if issubclass(x.category,
+                                         LoweringFallbackWarning)), flow
+
+            # the resilient driver surfaces the same counters
+            plan4 = plan_execution(app, flow=flow)
+            with warnings.catch_warnings(record=True) as w4:
+                warnings.simplefilter("always")
+                _, _, _, log = eng.run_resilient(
+                    app, plan4, toks, mesh=mesh)
+            assert sum(log.shuffle_overflow) > 0
+            assert any("overflow" in str(x.message) for x in w4
+                       if issubclass(x.category, LoweringFallbackWarning))
+            print("SKEW_OK", flow)
+    """)
+    assert out.count("SKEW_OK") == 2
 
 
 def test_elastic_reshard_8_to_4():

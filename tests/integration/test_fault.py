@@ -1,18 +1,35 @@
 """Fault tolerance: heartbeats, stragglers, deterministic shard assignment,
-and the stateless data pipeline they rely on."""
+the stateless data pipeline they rely on, and the resilient MapReduce
+driver (``engine.run_resilient``) built on top of them — kill-a-shard
+recovery, checkpointed partial-aggregate restore, straggler speculation and
+elastic remesh, all bitwise-identical to the no-failure run."""
 
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
+from _subproc import run_with_devices
 
+from repro.core import MapReduceApp, plan_execution
+from repro.core import engine as eng
 from repro.data import pipeline
 from repro.distributed import fault
 
 
 class FakeClock:
-    def __init__(self):
-        self.t = 0.0
+    def __init__(self, t: float = 0.0):
+        self.t = t
 
     def __call__(self):
         return self.t
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
 
 
 def test_heartbeat_death_detection():
@@ -28,6 +45,34 @@ def test_heartbeat_death_detection():
     assert sorted(mon.alive_hosts()) == [0, 1, 2]
 
 
+def test_heartbeat_no_false_deaths_at_construction():
+    """Seed regression: ``HostState.last_beat=0.0`` against a monotonic
+    clock declared every host dead before any beat.  ``last_beat`` must
+    initialize from the injected clock, with a startup grace period for
+    hosts that have never beaten."""
+    clk = FakeClock(t=1000.0)  # monotonic clocks do not start at zero
+    mon = fault.HeartbeatMonitor(4, timeout_s=10, clock=clk)
+    assert mon.dead_hosts() == []  # seed behavior: all 4 dead here
+    assert sorted(mon.alive_hosts()) == [0, 1, 2, 3]
+
+    # within timeout + grace, a silent-from-birth host is still booting
+    clk.t = 1015.0
+    assert mon.dead_hosts() == []
+    # a host that HAS beaten gets only the plain timeout afterwards
+    mon.beat(0, step=1)
+    clk.t = 1026.0  # host 0 silent 11s > timeout; others in grace til 1020+
+    assert 0 in mon.dead_hosts()
+    # past timeout+grace with no beat ever: genuinely dead
+    assert set(mon.dead_hosts()) == {0, 1, 2, 3}
+
+
+def test_heartbeat_real_clock_not_all_dead():
+    """The literal seed bug: constructing against time.monotonic() made
+    ``dead_hosts()`` return every host immediately."""
+    mon = fault.HeartbeatMonitor(4, timeout_s=60)
+    assert mon.dead_hosts() == []
+
+
 def test_straggler_detection():
     clk = FakeClock()
     mon = fault.HeartbeatMonitor(3, timeout_s=100, clock=clk)
@@ -36,6 +81,11 @@ def test_straggler_detection():
     mon.beat(2, 7)  # 3 steps behind
     assert mon.stragglers(lag=2) == [2]
     assert mon.stragglers(lag=4) == []
+
+
+# ---------------------------------------------------------------------------
+# Deterministic shard assignment (now uneven-safe)
+# ---------------------------------------------------------------------------
 
 
 def test_shard_assignment_partition():
@@ -51,6 +101,41 @@ def test_shard_assignment_partition():
     assert a0 != a1  # rotation
 
 
+def test_shard_assignment_uneven():
+    """Seed regression: ``assert num_shards % num_hosts == 0`` crashed the
+    elastic 8->7 remesh that the recovery path exists to serve.  Uneven
+    counts must stay a partition with per-host load within one shard."""
+    for H, S in [(7, 8), (3, 8), (5, 16), (8, 3), (4, 1)]:
+        for step in range(3):
+            seen = []
+            loads = []
+            for h in range(H):
+                owned = fault.shard_for(step, h, H, S)
+                seen += owned
+                loads.append(len(owned))
+            assert sorted(seen) == list(range(S)), (H, S, step)
+            assert max(loads) - min(loads) <= 1, (H, S, step, loads)
+    # backup assignment survives the uneven case too (the seed assert
+    # lived on the recovery path)
+    backup, shards = fault.backup_assignment(0, 6, 7, 8)
+    assert backup == 0 and shards == fault.shard_for(0, 6, 7, 8)
+
+
+def test_shard_assignment_invalid_inputs():
+    with pytest.raises(ValueError):
+        fault.shard_for(0, 0, 0, 8)
+    with pytest.raises(ValueError):
+        fault.shard_for(0, 4, 4, 8)
+    with pytest.raises(ValueError):
+        fault.shard_for(0, -1, 4, 8)
+    with pytest.raises(ValueError):
+        fault.shard_for(0, 0, 4, -1)
+    with pytest.raises(ValueError):
+        fault.backup_assignment(0, 0, 1, 4)
+    with pytest.raises(ValueError):
+        fault.backup_assignment(0, 5, 4, 8)
+
+
 def test_backup_assignment_is_deterministic():
     b1 = fault.backup_assignment(3, dead_host=1, num_hosts=4, num_shards=16)
     b2 = fault.backup_assignment(3, dead_host=1, num_hosts=4, num_shards=16)
@@ -58,6 +143,44 @@ def test_backup_assignment_is_deterministic():
     backup, shards = b1
     assert backup == 2
     assert shards == fault.shard_for(3, 1, 4, 16)
+    # the alive filter skips dead candidates deterministically
+    backup_alive, _ = fault.backup_assignment(3, 1, 4, 16, alive=[0, 3])
+    assert backup_alive == 3
+
+
+def test_shard_assignment_properties_hypothesis():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install -r "
+               "requirements-dev.txt)")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(step=st.integers(0, 50), num_hosts=st.integers(1, 12),
+           num_shards=st.integers(0, 64))
+    def check(step, num_hosts, num_shards):
+        per_host = [fault.shard_for(step, h, num_hosts, num_shards)
+                    for h in range(num_hosts)]
+        # partition: every shard owned exactly once
+        flat = sorted(s for owned in per_host for s in owned)
+        assert flat == list(range(num_shards))
+        # balance: within one shard of the uniform share
+        loads = [len(o) for o in per_host]
+        assert max(loads) - min(loads) <= 1
+        # rotation is a pure shift: step+num_hosts reproduces step
+        assert per_host == [
+            fault.shard_for(step + num_hosts, h, num_hosts, num_shards)
+            for h in range(num_hosts)]
+        # and any host can recompute any other host's assignment
+        if num_hosts > 1:
+            dead = step % num_hosts
+            backup, shards = fault.backup_assignment(
+                step, dead, num_hosts, num_shards)
+            assert backup != dead
+            assert shards == per_host[dead]
+
+    check()
 
 
 def test_data_pipeline_statelessness():
@@ -76,3 +199,357 @@ def test_restart_policy():
     p = fault.RestartPolicy(max_restarts=2)
     assert p.on_failure() and p.on_failure()
     assert not p.on_failure()
+
+
+# ---------------------------------------------------------------------------
+# run_resilient: in-process recovery drills (single device, no mesh —
+# the driver's shard partials and merges never need collectives)
+# ---------------------------------------------------------------------------
+
+
+VOCAB = 48
+
+
+class WC(MapReduceApp):
+    key_space = VOCAB
+    value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    max_values_per_key = 256
+    emit_capacity = 8
+
+    def map(self, item, emit):
+        emit(item, jnp.ones_like(item))
+
+    def reduce(self, key, values, count):
+        return jnp.sum(values)
+
+
+def _tokens(n_items=64):
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, VOCAB, (n_items, 8)).astype(np.int32))
+
+
+def _dense(keys, values, counts):
+    got = np.zeros(VOCAB, np.int64)
+    for k, v, c in zip(np.asarray(keys), np.asarray(values),
+                       np.asarray(counts)):
+        if k < VOCAB and c > 0:
+            got[k] = v
+    return got
+
+
+def _bitwise_equal(a, b):
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(a[:3], b[:3]))
+
+
+def test_resilient_no_failure_all_flows(matrix_flows, matrix_use_kernels):
+    toks = _tokens()
+    want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
+    for flow in matrix_flows():
+        plan = plan_execution(WC(), flow=flow)
+        out = eng.run_resilient(WC(), plan, toks, num_hosts=4, num_shards=4,
+                                use_kernels=matrix_use_kernels)
+        assert np.array_equal(_dense(*out[:3]), want), flow
+        log = out[3]
+        assert len(log.computed) == 4 and not log.recomputed
+
+
+def test_resilient_kill_host_recovery_bitwise(matrix_flows,
+                                              matrix_use_kernels):
+    """Kill a host (in-memory partials lost, no checkpoints): its shards
+    are recomputed on the deterministic backup rank and the answer is
+    bitwise the no-failure one."""
+    toks = _tokens()
+    for flow in matrix_flows():
+        base_plan = plan_execution(WC(), flow=flow)
+        base = eng.run_resilient(WC(), base_plan, toks, num_hosts=4,
+                                 num_shards=8,
+                                 use_kernels=matrix_use_kernels)
+        plan = plan_execution(WC(), flow=flow)
+        out = eng.run_resilient(
+            WC(), plan, toks, num_hosts=4, num_shards=8,
+            use_kernels=matrix_use_kernels,
+            inject=fault.FaultInjection(dead_hosts=(2,)))
+        assert _bitwise_equal(base, out), flow
+        log = out[3]
+        assert log.dead_hosts == [2]
+        # host 2 owned shards {s : s % 4 == 2} = {2, 6}; backup rank is 3
+        assert log.recomputed == [(2, 3), (6, 3)], log.recomputed
+        assert any("recomputed" in e for e in plan.recovery)
+
+
+def test_resilient_checkpoint_restore(matrix_flows, matrix_use_kernels):
+    """Partial-aggregate recovery: a host that checkpointed some shards
+    before dying contributes them by RESTORE, not re-execution; the rest
+    recompute.  Monoid merge makes the mix bitwise-exact."""
+    toks = _tokens()
+    for flow in matrix_flows():
+        base_plan = plan_execution(WC(), flow=flow)
+        base = eng.run_resilient(WC(), base_plan, toks, num_hosts=4,
+                                 num_shards=8,
+                                 use_kernels=matrix_use_kernels)
+        with tempfile.TemporaryDirectory() as d:
+            plan = plan_execution(WC(), flow=flow)
+            out = eng.run_resilient(
+                WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+                use_kernels=matrix_use_kernels,
+                inject=fault.FaultInjection(dead_hosts=(1,),
+                                            die_after_shards=1))
+            assert _bitwise_equal(base, out), flow
+            log = out[3]
+            # host 1 owned {1, 5}: completed+checkpointed 1, lost 5
+            assert log.restored == [1], log.restored
+            assert log.recomputed == [(5, 2)], log.recomputed
+
+            # dead disk: the same crash with checkpoint_survives=False
+            # falls back to recompute for every lost shard
+            plan2 = plan_execution(WC(), flow=flow)
+            out2 = eng.run_resilient(
+                WC(), plan2, toks, num_hosts=4, num_shards=8,
+                ckpt_dir=os.path.join(d, "gone"),
+                use_kernels=matrix_use_kernels,
+                inject=fault.FaultInjection(dead_hosts=(1,),
+                                            die_after_shards=1,
+                                            checkpoint_survives=False))
+            assert _bitwise_equal(base, out2), flow
+            assert not out2[3].restored
+            assert [s for s, _ in out2[3].recomputed] == [1, 5]
+
+
+def test_resilient_straggler_speculation(matrix_flows, matrix_use_kernels):
+    """A lagging host's shards are speculatively re-executed on the
+    deterministic backup rank (next alive, non-straggler rank)."""
+    toks = _tokens()
+    for flow in matrix_flows():
+        base_plan = plan_execution(WC(), flow=flow)
+        base = eng.run_resilient(WC(), base_plan, toks, num_hosts=4,
+                                 num_shards=4,
+                                 use_kernels=matrix_use_kernels)
+        plan = plan_execution(WC(), flow=flow)
+        out = eng.run_resilient(
+            WC(), plan, toks, num_hosts=4, num_shards=4,
+            use_kernels=matrix_use_kernels,
+            inject=fault.FaultInjection(straggler_hosts=(1,)))
+        assert _bitwise_equal(base, out), flow
+        log = out[3]
+        assert log.straggler_hosts == [1]
+        assert log.speculated == [(1, 2)], log.speculated  # next alive rank
+        assert any("speculatively" in e for e in plan.recovery)
+
+
+def test_resilient_elastic_shrink_uneven(matrix_flows, matrix_use_kernels):
+    """Elastic 4 -> 3 hosts with the shard count FIXED at 4 (the all-to-all
+    key ranges are the re-partition boundary): the uneven 4-shards-over-
+    3-hosts assignment — which crashed the seed's shard_for — re-runs only
+    the shards whose partials left with the removed host."""
+    toks = _tokens()
+    for flow in matrix_flows():
+        base_plan = plan_execution(WC(), flow=flow)
+        base = eng.run_resilient(WC(), base_plan, toks, num_hosts=4,
+                                 num_shards=4,
+                                 use_kernels=matrix_use_kernels)
+        plan = plan_execution(WC(), flow=flow)
+        out = eng.run_resilient(
+            WC(), plan, toks, num_hosts=4, num_shards=4,
+            use_kernels=matrix_use_kernels,
+            inject=fault.FaultInjection(resize_to=3))
+        assert _bitwise_equal(base, out), flow
+        log = out[3]
+        assert log.resized == (4, 3)
+        # only host 3's shard (shard 3) was lost and re-run
+        assert [s for s, _ in log.recomputed] == [3], log.recomputed
+        assert any("elastic resize" in e for e in plan.recovery)
+
+
+def test_resilient_uneven_split_no_false_stragglers():
+    """An uneven shard/host split (6 shards over 4 hosts) legitimately
+    gives some hosts one fewer shard — finishing a smaller assignment must
+    not read as straggling (or shrink the backup pool) on a fault-free
+    run."""
+    toks = _tokens(60)  # 60 items over 6 shards
+    want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
+    plan = plan_execution(WC(), flow="stream")
+    out = eng.run_resilient(WC(), plan, toks, num_hosts=4, num_shards=6)
+    assert np.array_equal(_dense(*out[:3]), want)
+    log = out[3]
+    assert log.straggler_hosts == [] and not log.speculated, (
+        log.straggler_hosts, log.speculated)
+    assert not log.recomputed and len(log.computed) == 6
+
+
+def test_resilient_validates_inputs():
+    toks = _tokens(60)  # 60 items do not divide into 8 shards
+    plan = plan_execution(WC(), flow="stream")
+    with pytest.raises(ValueError, match="divide"):
+        eng.run_resilient(WC(), plan, toks, num_hosts=8, num_shards=8)
+    with pytest.raises(ValueError, match="positive"):
+        eng.run_resilient(WC(), plan, _tokens(), num_hosts=0)
+
+
+# ---------------------------------------------------------------------------
+# run_resilient vs run_distributed: bitwise parity on a fake 8-device mesh
+# (subprocess so the main process keeps seeing one device)
+# ---------------------------------------------------------------------------
+
+
+def test_resilient_bitwise_vs_distributed_mesh():
+    """The acceptance bar: with a killed shard, a straggler, or a restored
+    checkpoint, ``run_resilient`` reproduces the fault-free
+    ``run_distributed`` output bit for bit, for stream, sort and reduce.
+    Honors the flow-matrix overrides (REPRO_TEST_FLOW restricts the flow
+    list; REPRO_TEST_KERNELS flips the lowering)."""
+    out = run_with_devices("""
+        import os, tempfile, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduceApp, plan_execution
+        from repro.core import engine as eng
+        from repro.distributed import fault as flt
+
+        UK = os.environ.get("REPRO_TEST_KERNELS", "").lower() not in (
+            "", "0", "false", "no")
+        OVR = os.environ.get("REPRO_TEST_FLOW", "").strip().lower()
+        FLOWS = (OVR,) if OVR in ("stream", "sort", "reduce") else (
+            "stream", "sort", "reduce")
+
+        VOCAB = 48
+        class WC(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 256
+            emit_capacity = 8
+            def map(self, item, emit): emit(item, jnp.ones_like(item))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        toks = jax.device_put(
+            jnp.asarray(rng.integers(0, VOCAB, (64, 8)).astype(np.int32)),
+            NamedSharding(mesh, P("data")))
+        app = WC()
+
+        def bits(arrs):
+            return [np.asarray(a).tobytes() for a in arrs]
+
+        for flow in FLOWS:
+            with mesh:
+                plan0 = plan_execution(app, flow=flow)
+                ref = bits(eng.run_distributed(app, plan0, toks, mesh=mesh,
+                                               use_kernels=UK))
+
+            # kill-a-shard: host 3 dies, backup rank 4 recomputes
+            plan1 = plan_execution(app, flow=flow)
+            k, v, c, log = eng.run_resilient(
+                app, plan1, toks, mesh=mesh, use_kernels=UK,
+                inject=flt.FaultInjection(dead_hosts=(3,)))
+            assert bits((k, v, c)) == ref, ("kill", flow)
+            assert log.recomputed == [(3, 4)], (flow, log.recomputed)
+
+            # straggler: host 2 lags, rank 3 speculatively re-executes
+            plan2 = plan_execution(app, flow=flow)
+            k, v, c, log = eng.run_resilient(
+                app, plan2, toks, mesh=mesh, use_kernels=UK,
+                inject=flt.FaultInjection(straggler_hosts=(2,)))
+            assert bits((k, v, c)) == ref, ("straggler", flow)
+            assert log.speculated == [(2, 3)], (flow, log.speculated)
+
+            # partial-aggregate restore: run once to checkpoint all 8
+            # partials, then kill host 3 — its shard must come back by
+            # RESTORE (not re-execution) and stay bitwise-exact
+            with tempfile.TemporaryDirectory() as d:
+                plan3 = plan_execution(app, flow=flow)
+                eng.run_resilient(app, plan3, toks, mesh=mesh,
+                                  use_kernels=UK, ckpt_dir=d)
+                plan4 = plan_execution(app, flow=flow)
+                k, v, c, log = eng.run_resilient(
+                    app, plan4, toks, mesh=mesh, use_kernels=UK,
+                    ckpt_dir=d,
+                    inject=flt.FaultInjection(dead_hosts=(3,)))
+                assert bits((k, v, c)) == ref, ("restore", flow)
+                assert log.restored == [3] and not log.recomputed, (
+                    flow, log.restored, log.recomputed)
+            print("RESILIENT_BITWISE_OK", flow)
+    """, n=8)
+    assert out.count("RESILIENT_BITWISE_OK") >= 1
+
+
+def test_resilient_elastic_remesh_8_to_4_mesh():
+    """Elastic 8 -> 4 remesh: ``best_mesh`` rebuilds the data mesh over the
+    surviving devices, the shard count (== all-to-all key ranges) stays 8,
+    and only the shards whose partials left with the removed hosts re-run
+    — the answer still bitwise-matches the fault-free 8-wide run.  The
+    MapReduce API surface (run_resilient + explain) is exercised too."""
+    out = run_with_devices("""
+        import os, tempfile, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduce, MapReduceApp, plan_execution
+        from repro.core import engine as eng
+        from repro.distributed import fault as flt
+
+        UK = os.environ.get("REPRO_TEST_KERNELS", "").lower() not in (
+            "", "0", "false", "no")
+        OVR = os.environ.get("REPRO_TEST_FLOW", "").strip().lower()
+        FLOWS = (OVR,) if OVR in ("stream", "sort", "reduce") else (
+            "stream", "sort", "reduce")
+
+        VOCAB = 48
+        class WC(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 256
+            emit_capacity = 8
+            def map(self, item, emit): emit(item, jnp.ones_like(item))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        toks = jax.device_put(
+            jnp.asarray(rng.integers(0, VOCAB, (64, 8)).astype(np.int32)),
+            NamedSharding(mesh, P("data")))
+        app = WC()
+
+        def bits(arrs):
+            return [np.asarray(a).tobytes() for a in arrs]
+
+        for flow in FLOWS:
+            with mesh:
+                plan0 = plan_execution(app, flow=flow)
+                ref = bits(eng.run_distributed(app, plan0, toks, mesh=mesh,
+                                               use_kernels=UK))
+            # some partials checkpointed before the resize -> restored on
+            # the shrunken cluster instead of re-executed
+            with tempfile.TemporaryDirectory() as d:
+                plan1 = plan_execution(app, flow=flow)
+                eng.run_resilient(app, plan1, toks, mesh=mesh,
+                                  use_kernels=UK, ckpt_dir=d)
+                plan2 = plan_execution(app, flow=flow)
+                k, v, c, log = eng.run_resilient(
+                    app, plan2, toks, mesh=mesh, use_kernels=UK,
+                    ckpt_dir=d, inject=flt.FaultInjection(resize_to=4))
+                assert bits((k, v, c)) == ref, ("resize+ckpt", flow)
+                assert log.resized == (8, 4)
+                assert log.restored == [4, 5, 6, 7], log.restored
+            # without checkpoints the moved shards re-run on their new
+            # owners (shard s -> host s % 4)
+            plan3 = plan_execution(app, flow=flow)
+            k, v, c, log = eng.run_resilient(
+                app, plan3, toks, mesh=mesh, use_kernels=UK,
+                inject=flt.FaultInjection(resize_to=4))
+            assert bits((k, v, c)) == ref, ("resize", flow)
+            assert log.resized == (8, 4)
+            assert log.moved == [4, 5, 6, 7], log.moved
+            assert log.recomputed == [(4, 0), (5, 1), (6, 2), (7, 3)]
+            assert log.final_mesh.shape["data"] == 4
+            print("ELASTIC_RESILIENT_OK", flow)
+
+        # the thin API surface: MapReduce(...).run_resilient + explain
+        mr = MapReduce(app, flow="stream")
+        res = mr.run_resilient(toks, mesh=mesh,
+                               inject=flt.FaultInjection(dead_hosts=(1,)))
+        want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
+        assert np.array_equal(np.asarray(res.values), want)
+        assert res.recovery.recomputed == [(1, 2)]
+        assert "recovery:" in mr.explain()
+        print("API_RESILIENT_OK")
+    """, n=8)
+    assert out.count("ELASTIC_RESILIENT_OK") >= 1
+    assert "API_RESILIENT_OK" in out
