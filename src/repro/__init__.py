@@ -1,0 +1,39 @@
+"""MR4X: co-designed MapReduce optimization flows on JAX/Pallas.
+
+The headline surface re-exported here is the staged execution API
+(``MapReduce`` → ``lower``/``optimize``/``compile``), multi-job
+``Pipeline`` fusion, and the execution-option/flow vocabulary; the full
+core surface lives in :mod:`repro.core`.
+"""
+
+from repro.core import (
+    FLOWS,
+    Compiled,
+    Emitter,
+    ExecutionOptions,
+    ExecutionPlan,
+    Lowered,
+    LoweringFallbackWarning,
+    MapReduce,
+    MapReduceApp,
+    MapReduceResult,
+    Optimized,
+    Pipeline,
+    make_app,
+)
+
+__all__ = [
+    "MapReduce",
+    "MapReduceApp",
+    "MapReduceResult",
+    "make_app",
+    "Emitter",
+    "ExecutionOptions",
+    "Lowered",
+    "Optimized",
+    "Compiled",
+    "Pipeline",
+    "FLOWS",
+    "ExecutionPlan",
+    "LoweringFallbackWarning",
+]

@@ -1,13 +1,17 @@
 """MR4X core: the paper's contribution as a composable JAX module."""
 
-from repro.core.api import (  # noqa: F401
+from repro.core.api import (
+    Compiled,
     Emitter,
+    ExecutionOptions,
+    Lowered,
     MapReduce,
     MapReduceApp,
     MapReduceResult,
+    Optimized,
     make_app,
 )
-from repro.core.combiner import (  # noqa: F401
+from repro.core.combiner import (
     CombinerSpec,
     Monoid,
     count_spec,
@@ -19,17 +23,67 @@ from repro.core.combiner import (  # noqa: F401
     product_spec,
     sum_spec,
 )
-from repro.core.autotune import (  # noqa: F401
+from repro.core.autotune import (
     StreamTiling,
     autotune_sort,
     autotune_stream,
 )
-from repro.core.collector import LoweringFallbackWarning  # noqa: F401
-from repro.core.cost_model import (  # noqa: F401
+from repro.core.collector import LoweringFallbackWarning
+from repro.core.cost_model import (
     CostReport,
     FlowCost,
     choose_flow,
     estimate_flow_cost,
 )
-from repro.core.optimizer import Derivation, derive_combiner  # noqa: F401
-from repro.core.plan import ExecutionPlan, plan_execution  # noqa: F401
+from repro.core.optimizer import Derivation, derive_combiner
+from repro.core.pipeline import Pipeline, StageSemantics, extract_semantics
+from repro.core.plan import FLOWS, ExecutionPlan, plan_execution
+from repro.core.plan_cache import CacheStats, stats_snapshot
+
+#: the public execution surface — ``from repro.core import *`` pulls exactly
+#: this; anything else in the submodules is implementation detail.
+__all__ = [
+    # apps + staged execution
+    "MapReduce",
+    "MapReduceApp",
+    "MapReduceResult",
+    "make_app",
+    "Emitter",
+    "ExecutionOptions",
+    "Lowered",
+    "Optimized",
+    "Compiled",
+    # multi-job DAGs
+    "Pipeline",
+    "StageSemantics",
+    "extract_semantics",
+    # planning + flows
+    "FLOWS",
+    "ExecutionPlan",
+    "plan_execution",
+    "CostReport",
+    "FlowCost",
+    "choose_flow",
+    "estimate_flow_cost",
+    "Derivation",
+    "derive_combiner",
+    # combiner algebra
+    "CombinerSpec",
+    "Monoid",
+    "monoid_spec",
+    "sum_spec",
+    "count_spec",
+    "mean_spec",
+    "min_spec",
+    "max_spec",
+    "product_spec",
+    "logsumexp_spec",
+    # tiling + caching
+    "StreamTiling",
+    "autotune_stream",
+    "autotune_sort",
+    "CacheStats",
+    "stats_snapshot",
+    # warnings
+    "LoweringFallbackWarning",
+]

@@ -18,11 +18,26 @@ Word count, for comparison with the paper's Fig 2::
             return jnp.sum(values)
 
     result = MapReduce(WordCount()).run(token_windows)
+
+Staged compilation (the JaCe/JAX-AOT stage architecture)::
+
+    mr = MapReduce(WordCount())           # plan stage (cached by content)
+    lowered = mr.lower(items)             # bind an item spec
+    optimized = lowered.optimize()        # bind execution options
+    compiled = optimized.compile()        # AOT compile (cached by content)
+    result = compiled(items)              # dispatch only — zero re-traces
+
+``run()``/``run_distributed()``/``run_resilient()`` are thin wrappers over
+this path; every stage answers :meth:`explain`.  Execution-time knobs
+travel in one :class:`ExecutionOptions` record accepted by all three run
+methods — the old scattered kwargs still work but emit a
+``DeprecationWarning`` and forward.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings as _warnings
 from functools import partial
 from typing import Any, Callable
 
@@ -33,6 +48,7 @@ from repro.core import autotune as at
 from repro.core import collector as col
 from repro.core import engine as eng
 from repro.core import combiner as C
+from repro.core import plan_cache as pc
 from repro.core.optimizer import Derivation, derive_combiner
 from repro.core.plan import ExecutionPlan, plan_execution
 
@@ -79,6 +95,84 @@ def make_app(map_fn: Callable, reduce_fn: Callable, **attrs) -> MapReduceApp:
 
 #: re-exported: the emitter type handed to user map functions.
 Emitter = eng.Emitter
+
+
+# ---------------------------------------------------------------------------
+# ExecutionOptions: the one execution-time kwarg surface
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionOptions:
+    """Execution-time knobs for ``run``/``run_distributed``/``run_resilient``.
+
+    One record replaces the three methods' formerly scattered kwargs;
+    fields irrelevant to a given method are simply ignored by it.  The
+    ``None`` defaults on the lowering overrides mean "inherit the
+    MapReduce constructor's choice".
+
+    Distribution: ``mesh`` + ``data_axis`` select the shard_map data axis;
+    ``scatter_output`` key-shards stream/combine results;
+    ``shuffle_capacity``/``strict_shuffle`` govern the all-to-all
+    overflow envelope.  Resilience (``run_resilient``): ``num_hosts`` /
+    ``num_shards`` / ``ckpt_dir`` / ``step`` / ``inject`` / ``timeout_s``
+    / ``straggler_lag``.  Serving: ``items_bucket="pow2"`` pads the batch
+    axis to the next power of two so nearby batch sizes share one compiled
+    executable (pad rows are masked out; local runs only);
+    ``cache=False`` bypasses the content-keyed plan/executable cache.
+    """
+
+    # distribution
+    mesh: Any = None
+    data_axis: str = "data"
+    scatter_output: bool = False
+    shuffle_capacity: int | None = None
+    strict_shuffle: bool = False
+    # resilience
+    num_hosts: int | None = None
+    num_shards: int | None = None
+    ckpt_dir: str | None = None
+    step: int = 0
+    inject: Any = None
+    timeout_s: float = 60.0
+    straggler_lag: int = 1
+    # lowering overrides (None -> the MapReduce constructor's choice)
+    combine_impl: str | None = None
+    use_kernels: bool | None = None
+    chunk_pairs: int | None = None
+    key_block: int | None = None
+    bucket_size: int | None = None
+    level_fanouts: tuple[int, ...] | None = None
+    # serving
+    items_bucket: str = "exact"
+    cache: bool = True
+
+
+_OPTION_FIELDS = {f.name for f in dataclasses.fields(ExecutionOptions)}
+
+
+def _resolve_options(options: ExecutionOptions | None, legacy: dict,
+                     *, method: str, mesh=None) -> ExecutionOptions:
+    """Fold deprecated scattered kwargs into an ExecutionOptions.
+
+    ``mesh`` stays a first-class (non-deprecated) argument on the
+    distributed entry points; everything else in ``legacy`` fires one
+    DeprecationWarning and forwards onto the record."""
+    opts = options if options is not None else ExecutionOptions()
+    if legacy:
+        unknown = sorted(set(legacy) - _OPTION_FIELDS)
+        if unknown:
+            raise TypeError(f"{method}() got unexpected keyword arguments "
+                            f"{unknown}")
+        _warnings.warn(
+            f"{method}({', '.join(sorted(legacy))}=...) scattered keyword "
+            f"arguments are deprecated; pass "
+            f"options=ExecutionOptions(...) instead",
+            DeprecationWarning, stacklevel=3)
+        opts = dataclasses.replace(opts, **legacy)
+    if mesh is not None:
+        opts = dataclasses.replace(opts, mesh=mesh)
+    return opts
 
 
 @dataclasses.dataclass
@@ -139,6 +233,13 @@ class MapReduce:
     the measured micro-probe refinement on top of the model (persisted
     across runs when ``JAX_PALLAS_TUNE_CACHE`` points at a cache file).
     The decision is recorded on the plan — see :meth:`explain`.
+
+    Construction is the **plan stage** of the staged pipeline and is
+    content-cached (``core/plan_cache.py``): a second MapReduce over an
+    app with identical reduce jaxpr, shapes and knobs reuses the first's
+    derivation, flow choice and tiling without re-running the optimizer
+    (``cache=False`` opts out).  ``lower()`` → ``optimize()`` →
+    ``compile()`` continue the stages; ``run*`` wrap them.
     """
 
     def __init__(
@@ -154,6 +255,7 @@ class MapReduce:
         stream_key_block: int | str | None = "auto",
         autotune_probe: bool = False,
         donate: bool = False,
+        cache: bool = True,
     ):
         if app.key_space <= 0:
             raise ValueError("app.key_space must be positive")
@@ -161,6 +263,43 @@ class MapReduce:
         self.flow = flow
         self.combine_impl = combine_impl
         self.use_kernels = use_kernels
+        self.cache = cache
+        self._plan_key = pc.plan_key(
+            app, flow=flow, trust_semantics=trust_semantics,
+            n_pairs_hint=n_pairs_hint, use_kernels=use_kernels,
+            combine_impl=combine_impl, chunk_pairs=stream_chunk_pairs,
+            key_block=stream_key_block, autotune_probe=autotune_probe)
+
+        entry = pc.plan_get(self._plan_key) if cache else None
+        if entry is not None:
+            # full in-memory hit: reuse the derivation (live combiner
+            # closures), flow choice and tiling — zero optimizer traces,
+            # zero autotune calls.  Fresh plan INSTANCE per MapReduce so
+            # run-time diagnostics never pollute the cached template.
+            self.plan = dataclasses.replace(
+                entry.plan, recovery=(), stage="planned",
+                cache_key=self._plan_key, cache_event="hit")
+            self.tiling = entry.tiling
+            self.stream_chunk_pairs = entry.stream_chunk_pairs
+            self._key_block = entry.key_block
+            self._bucket_size = entry.bucket_size
+            self._level_fanouts = entry.level_fanouts
+            return
+
+        cache_event = "miss" if cache else ""
+        fentry = pc.file_get(self._plan_key) if cache else None
+        if (fentry is not None and not isinstance(stream_chunk_pairs, int)
+                and fentry["flow"] in ("stream", "sort")):
+            # cross-process advisory hit: pin the persisted tiling decision
+            # so the (potentially measured) autotune probes are skipped;
+            # derivation and compilation still run — closures and
+            # executables don't serialize.
+            stream_chunk_pairs = int(fentry["chunk_pairs"])
+            if fentry.get("key_block") is not None \
+                    and not isinstance(stream_key_block, int):
+                stream_key_block = int(fentry["key_block"])
+            cache_event = "file-hit"
+
         self.plan = plan_execution(app, flow=flow,
                                    trust_semantics=trust_semantics,
                                    n_pairs_hint=n_pairs_hint)
@@ -220,30 +359,79 @@ class MapReduce:
                     f"(LoweringFallbackWarning at trace time) — the "
                     f"chunked stream flow has no such limit",)
         self.stream_chunk_pairs = stream_chunk_pairs
-        self._run = jax.jit(partial(eng.run_local, app, self.plan,
-                                    combine_impl=combine_impl,
-                                    use_kernels=use_kernels,
-                                    chunk_pairs=stream_chunk_pairs,
-                                    key_block=key_block,
-                                    bucket_size=bucket_size,
-                                    level_fanouts=level_fanouts))
+        self._key_block = key_block
+        self._bucket_size = bucket_size
+        self._level_fanouts = level_fanouts
+        self.plan.stage = "planned"
+        self.plan.cache_key = self._plan_key
+        self.plan.cache_event = cache_event
+        if cache:
+            # snapshot NOW: the template must not see diagnostics a later
+            # run of this instance appends
+            pc.plan_put(self._plan_key, pc.PlanEntry(
+                plan=dataclasses.replace(self.plan),
+                tiling=self.tiling,
+                stream_chunk_pairs=stream_chunk_pairs,
+                key_block=key_block, bucket_size=bucket_size,
+                level_fanouts=level_fanouts))
+            pc.file_put(self._plan_key,
+                        pc.file_entry_from(self.plan, self.tiling))
 
-    def run(self, items) -> MapReduceResult:
-        keys, values, counts = self._run(items)
-        return MapReduceResult(keys, values, counts, plan=self.plan)
+    # -- lowering knob resolution ------------------------------------------
 
-    def run_distributed(self, items, *, mesh, **kwargs) -> MapReduceResult:
-        """``engine.run_distributed`` with this instance's plan/lowering
-        knobs — shard_map over the mesh's data axis.  Keyword arguments
-        pass through (``scatter_output``, ``shuffle_capacity``,
-        ``strict_shuffle``, ...)."""
-        kwargs.setdefault("combine_impl", self.combine_impl)
-        kwargs.setdefault("use_kernels", self.use_kernels)
-        keys, values, counts = eng.run_distributed(
-            self.app, self.plan, items, mesh=mesh, **kwargs)
-        return MapReduceResult(keys, values, counts, plan=self.plan)
+    def _knobs(self, opts: ExecutionOptions) -> dict:
+        """Engine kwargs for this plan under ``opts`` overrides."""
+        return dict(
+            combine_impl=(self.combine_impl if opts.combine_impl is None
+                          else opts.combine_impl),
+            use_kernels=(self.use_kernels if opts.use_kernels is None
+                         else opts.use_kernels),
+            chunk_pairs=(self.stream_chunk_pairs if opts.chunk_pairs is None
+                         else opts.chunk_pairs),
+            key_block=(self._key_block if opts.key_block is None
+                       else opts.key_block),
+            bucket_size=(self._bucket_size if opts.bucket_size is None
+                         else opts.bucket_size),
+            level_fanouts=(self._level_fanouts if opts.level_fanouts is None
+                           else opts.level_fanouts),
+        )
 
-    def run_resilient(self, items, *, mesh=None, **kwargs) -> MapReduceResult:
+    # -- staged execution surface ------------------------------------------
+
+    def lower(self, items, *, options: ExecutionOptions | None = None,
+              mode: str | None = None) -> "Lowered":
+        """Stage 1: bind this plan to an item spec (concrete arrays or a
+        ShapeDtypeStruct pytree).  ``mode`` defaults to "local", or
+        "distributed" when ``options.mesh`` is set."""
+        return Lowered(self, pc.items_spec_of(items),
+                       options if options is not None else ExecutionOptions(),
+                       mode=mode)
+
+    def run(self, items, *, options: ExecutionOptions | None = None,
+            **legacy) -> MapReduceResult:
+        opts = _resolve_options(options, legacy, method="run")
+        return self.lower(items, options=opts, mode="local"
+                          ).optimize().compile()(items)
+
+    def run_distributed(self, items, *, mesh=None,
+                        options: ExecutionOptions | None = None,
+                        **legacy) -> MapReduceResult:
+        """Distributed run — shard_map over the mesh's data axis.
+
+        ``options`` (or the deprecated scattered kwargs) carry
+        ``scatter_output``, ``shuffle_capacity``, ``strict_shuffle``, ...;
+        the mesh may come as the ``mesh=`` argument or on the options."""
+        opts = _resolve_options(options, legacy, method="run_distributed",
+                                mesh=mesh)
+        if opts.mesh is None:
+            raise TypeError("run_distributed requires a mesh (pass mesh=... "
+                            "or options=ExecutionOptions(mesh=...))")
+        return self.lower(items, options=opts, mode="distributed"
+                          ).optimize().compile()(items)
+
+    def run_resilient(self, items, *, mesh=None,
+                      options: ExecutionOptions | None = None,
+                      **legacy) -> MapReduceResult:
         """Fault-tolerant distributed run (``engine.run_resilient``):
         deterministic shard re-execution, checkpointed partial-aggregate
         recovery (``ckpt_dir=...``), straggler speculation and elastic
@@ -251,18 +439,257 @@ class MapReduce:
         :meth:`run_distributed` answer.  The recovery ledger lands on
         ``result.recovery`` and, summarized, on ``plan.recovery`` (shown
         by :meth:`explain`)."""
-        kwargs.setdefault("combine_impl", self.combine_impl)
-        kwargs.setdefault("use_kernels", self.use_kernels)
-        keys, values, counts, log = eng.run_resilient(
-            self.app, self.plan, items, mesh=mesh, **kwargs)
-        return MapReduceResult(keys, values, counts, plan=self.plan,
-                               recovery=log)
+        opts = _resolve_options(options, legacy, method="run_resilient",
+                                mesh=mesh)
+        return self.lower(items, options=opts, mode="resilient"
+                          ).optimize().compile()(items)
 
     def explain(self) -> str:
         """The optimizer's decision record: flow, derived combiner, the
         autotuned tiling and any lowering diagnostics."""
         return self.plan.explain()
 
-    # Lowering hooks for benchmarks / dry-run analysis.
-    def lower(self, items):
-        return self._run.lower(items)
+
+# ---------------------------------------------------------------------------
+# The explicit stages: Lowered -> Optimized -> Compiled
+# ---------------------------------------------------------------------------
+
+
+def _infer_mode(opts: ExecutionOptions, mode: str | None) -> str:
+    if mode is not None:
+        if mode not in ("local", "distributed", "resilient"):
+            raise ValueError(f"unknown execution mode {mode!r}")
+        return mode
+    return "local" if opts.mesh is None else "distributed"
+
+
+class Lowered:
+    """Stage 1 of the staged path: plan × item spec.
+
+    ``optimize(...)`` binds/overrides execution options; ``compile()`` is
+    the shortcut ``optimize().compile()`` (kept so the long-standing
+    ``mr.lower(items).compile()`` introspection idiom works unchanged)."""
+
+    def __init__(self, mr: MapReduce, items_spec, options: ExecutionOptions,
+                 *, mode: str | None = None):
+        self.mr = mr
+        self.items_spec = items_spec
+        self.options = options
+        self.mode = _infer_mode(options, mode)
+
+    def optimize(self, options: ExecutionOptions | None = None,
+                 **hints) -> "Optimized":
+        """Stage 2: fix the execution options.  ``hints`` are individual
+        ExecutionOptions field overrides (e.g. ``items_bucket="pow2"``)."""
+        opts = options if options is not None else self.options
+        if hints:
+            unknown = sorted(set(hints) - _OPTION_FIELDS)
+            if unknown:
+                raise TypeError(f"optimize() got unknown hints {unknown}")
+            opts = dataclasses.replace(opts, **hints)
+        return Optimized(self.mr, self.items_spec, opts, mode=self.mode)
+
+    def compile(self) -> "Compiled":
+        return self.optimize().compile()
+
+    def explain(self) -> str:
+        plan = dataclasses.replace(self.mr.plan, stage="lowered")
+        return (plan.explain()
+                + f"\nitems: {pc._spec_sig(self.items_spec)}")
+
+
+class Optimized:
+    """Stage 2: plan × item spec × execution options (mode resolved)."""
+
+    def __init__(self, mr: MapReduce, items_spec, options: ExecutionOptions,
+                 *, mode: str):
+        self.mr = mr
+        self.items_spec = items_spec
+        self.options = options
+        self.mode = mode
+        n = jax.tree.leaves(items_spec)[0].shape[0]
+        self.n_items = int(n)
+        if options.items_bucket != "exact" and mode != "local":
+            # pow2 batch bucketing needs the local flows' n_valid masking;
+            # the shard_map'd paths keep jit's exact-shape contract.
+            self.n_bucket = self.n_items
+        else:
+            self.n_bucket = pc.bucket_items(self.n_items,
+                                            options.items_bucket)
+        self.cache_key = self._cache_key()
+
+    def _cache_key(self) -> str | None:
+        if self.mode == "resilient":
+            return None  # host driver: rebuilt per call, nothing compiled
+        opts = self.options
+        knobs = self.mr._knobs(opts)
+        spec = self.items_spec
+        if self.n_bucket != self.n_items:
+            # pow2 bucketing: the executable is traced at the padded shape,
+            # so every N in the bucket must map to the same key
+            spec = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(
+                    (self.n_bucket,) + tuple(a.shape[1:]), a.dtype), spec)
+        return pc.compiled_key(
+            self.mr.app, spec, plan_key=self.mr._plan_key,
+            flow=self.mr.plan.flow, n_bucket=self.n_bucket, mesh=opts.mesh,
+            data_axis=opts.data_axis, mode=self.mode,
+            extra=(opts.scatter_output, opts.shuffle_capacity,
+                   knobs["combine_impl"], knobs["use_kernels"],
+                   knobs["chunk_pairs"], knobs["key_block"],
+                   knobs["bucket_size"], knobs["level_fanouts"]))
+
+    def compile(self) -> "Compiled":
+        """Stage 3: produce the executable.  Content-cached — a warm hit
+        returns the stored executable with zero traces, zero autotune
+        calls and zero XLA compiles."""
+        use_cache = self.options.cache and self.cache_key is not None
+        if use_cache:
+            ent = pc.compiled_get(self.cache_key)
+            if ent is not None:
+                return Compiled(self, ent, cache_event="hit")
+        ent = self._build()
+        if use_cache:
+            pc.compiled_put(self.cache_key, ent)
+        return Compiled(self, ent,
+                        cache_event="miss" if use_cache else "")
+
+    def _build(self) -> pc.CompiledEntry:
+        mr, opts = self.mr, self.options
+        knobs = mr._knobs(opts)
+        plan = mr.plan
+        if self.mode == "local":
+            pc.STATS.compiles += 1
+            if self.n_bucket == self.n_items:
+                fn = jax.jit(partial(eng.run_local, mr.app, plan, **knobs))
+                executable = fn.lower(self.items_spec).compile()
+            else:
+                padded = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(
+                        (self.n_bucket,) + tuple(a.shape[1:]), a.dtype),
+                    self.items_spec)
+                fn = jax.jit(lambda items, n_valid: eng.run_local(
+                    mr.app, plan, items, n_valid=n_valid, **knobs))
+                executable = fn.lower(
+                    padded, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+            return pc.CompiledEntry(executable=executable, plan=plan,
+                                    tiling=mr.tiling, n_bucket=self.n_bucket,
+                                    mode="local")
+        if self.mode == "distributed":
+            pc.STATS.compiles += 1
+            S = opts.mesh.shape[opts.data_axis]
+            chunk_pairs, key_block = eng._distributed_tiling(
+                mr.app, plan, self.items_spec, S,
+                use_kernels=knobs["use_kernels"],
+                chunk_pairs=opts.chunk_pairs, key_block=opts.key_block)
+            jitted, post = eng.build_distributed_fn(
+                mr.app, plan, mesh=opts.mesh, data_axis=opts.data_axis,
+                combine_impl=knobs["combine_impl"],
+                use_kernels=knobs["use_kernels"],
+                scatter_output=opts.scatter_output,
+                shuffle_capacity=opts.shuffle_capacity,
+                chunk_pairs=chunk_pairs, key_block=key_block,
+                bucket_size=knobs["bucket_size"],
+                level_fanouts=knobs["level_fanouts"])
+            # the persistent jitted shard_map IS the executable: repeat
+            # calls hit jit's trace cache instead of rebuilding the
+            # shard_map per call like the old run_distributed did
+            return pc.CompiledEntry(executable=jitted, plan=plan,
+                                    tiling=mr.tiling, n_bucket=self.n_bucket,
+                                    mode="distributed", aux=post)
+
+        def drive(items):  # resilient host driver — not XLA-compilable
+            return eng.run_resilient(
+                mr.app, plan, items, mesh=opts.mesh,
+                num_hosts=opts.num_hosts, num_shards=opts.num_shards,
+                data_axis=opts.data_axis, step=opts.step,
+                ckpt_dir=opts.ckpt_dir, inject=opts.inject,
+                timeout_s=opts.timeout_s, straggler_lag=opts.straggler_lag,
+                combine_impl=knobs["combine_impl"],
+                use_kernels=knobs["use_kernels"],
+                shuffle_capacity=opts.shuffle_capacity,
+                chunk_pairs=opts.chunk_pairs, key_block=opts.key_block,
+                bucket_size=opts.bucket_size,
+                level_fanouts=opts.level_fanouts,
+                strict_shuffle=opts.strict_shuffle)
+
+        return pc.CompiledEntry(executable=drive, plan=plan,
+                                tiling=mr.tiling, n_bucket=self.n_bucket,
+                                mode="resilient")
+
+    def explain(self) -> str:
+        plan = dataclasses.replace(self.mr.plan, stage="optimized")
+        lines = [plan.explain(),
+                 f"mode: {self.mode}",
+                 f"items: {pc._spec_sig(self.items_spec)} "
+                 f"(N={self.n_items} bucket={self.n_bucket} "
+                 f"policy={self.options.items_bucket})"]
+        if self.cache_key is not None:
+            lines.append(f"compiled-cache key: {self.cache_key}")
+        return "\n".join(lines)
+
+
+class Compiled:
+    """Stage 3: the executable.  ``compiled(items)`` dispatches (AOT for
+    local runs; a persistent jitted shard_map for distributed); the XLA
+    introspection surface (``as_text``/``memory_analysis``/
+    ``cost_analysis``) passes through on local executables."""
+
+    def __init__(self, opt: Optimized, entry: pc.CompiledEntry,
+                 *, cache_event: str):
+        self.options = opt.options
+        self.mode = entry.mode
+        self.items_spec = opt.items_spec
+        self.n_items = opt.n_items
+        self.n_bucket = entry.n_bucket
+        self.cache_key = opt.cache_key
+        self.cache_event = cache_event
+        self._entry = entry
+        # the plan the executable was traced with: run-time diagnostics
+        # (shuffle overflow, lowering fallbacks) land here
+        self.plan = entry.plan
+        self.plan.stage = "compiled"
+
+    def __call__(self, items) -> MapReduceResult:
+        if self.mode == "local":
+            items = jax.tree.map(jnp.asarray, items)
+            if self.n_bucket != self.n_items:
+                pad = self.n_bucket - self.n_items
+                items = jax.tree.map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]),
+                    items)
+                keys, values, counts = self._entry.executable(
+                    items, jnp.int32(self.n_items))
+            else:
+                keys, values, counts = self._entry.executable(items)
+            return MapReduceResult(keys, values, counts, plan=self.plan)
+        if self.mode == "distributed":
+            out = self._entry.executable(items)
+            keys, values, counts = self._entry.aux(
+                out, strict_shuffle=self.options.strict_shuffle)
+            return MapReduceResult(keys, values, counts, plan=self.plan)
+        keys, values, counts, log = self._entry.executable(items)
+        return MapReduceResult(keys, values, counts, plan=self.plan,
+                               recovery=log)
+
+    # -- XLA introspection pass-through (local AOT executables) -------------
+
+    def as_text(self) -> str:
+        return self._entry.executable.as_text()
+
+    def memory_analysis(self):
+        return self._entry.executable.memory_analysis()
+
+    def cost_analysis(self):
+        return self._entry.executable.cost_analysis()
+
+    def explain(self) -> str:
+        lines = [self.plan.explain(), f"mode: {self.mode}"]
+        if self.cache_key is not None:
+            lines.append(f"compiled-cache: {self.cache_event or 'off'} "
+                         f"key={self.cache_key}")
+        if self.n_bucket != self.n_items:
+            lines.append(f"items: padded N={self.n_items} -> "
+                         f"bucket={self.n_bucket} (pad rows masked)")
+        return "\n".join(lines)

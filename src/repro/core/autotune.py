@@ -227,6 +227,9 @@ def autotune_stream(
     blocking.  ``probe=True`` enables the measured micro-probe refinement
     (on ``probe_items`` when given, else a synthetic workload).
     """
+    from repro.core import plan_cache as pc
+
+    pc.STATS.autotunes += 1
     notes: list[str] = []
     value_bytes = int(jnp.dtype(app.value_aval.dtype).itemsize *
                       max(1, int(np.prod(app.value_aval.shape))))
@@ -367,6 +370,9 @@ def autotune_sort(
     :class:`LoweringFallbackWarning` when the kernel path is actually
     requested.
     """
+    from repro.core import plan_cache as pc
+
+    pc.STATS.autotunes += 1
     notes: list[str] = []
     value_bytes = int(jnp.dtype(app.value_aval.dtype).itemsize *
                       max(1, int(np.prod(app.value_aval.shape))))
@@ -455,7 +461,9 @@ def _probe_chunk(app, spec, chunk: int, *, use_kernels: bool,
     import time
 
     from repro.core import engine as eng
+    from repro.core import plan_cache as pc
 
+    pc.STATS.probes += 1
     cap = max(app.emit_capacity, 1)
     if items is None:
         n_items = max(probe_pairs // cap, 4)

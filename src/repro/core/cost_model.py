@@ -261,3 +261,23 @@ def choose_flow(
     return CostReport(chosen=costs[0].flow, n_pairs=n_pairs,
                       key_space=key_space, backend=backend,
                       costs=tuple(costs))
+
+
+def pipeline_overhead_s(n_stages: int, *, handoff_bytes: float = 0.0,
+                        fused: bool = True,
+                        backend: str | None = None) -> float:
+    """Model the per-call overhead a pipeline's *structure* adds.
+
+    A fused pipeline is one executable: one dispatch, intermediates live in
+    registers/VMEM.  The unfused form pays one dispatch per stage plus the
+    materialized intermediate tables crossing HBM (``handoff_bytes``, from
+    ``roofline.pipeline_handoff_bytes`` summed over the DAG edges) — the
+    co-design point ``Pipeline.compile`` removes.
+    """
+    backend = backend or default_backend()
+    dispatches = 1 if fused else max(1, int(n_stages))
+    secs = dispatches * CPU_COEFF["dispatch"]
+    if not fused and handoff_bytes:
+        bw = roofline.HBM_BW if backend == "tpu" else 2.0e10
+        secs += float(handoff_bytes) / bw
+    return secs

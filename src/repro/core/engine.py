@@ -254,18 +254,30 @@ def _stream_combiner(app, spec, *, use_kernels=False,
                               mode=fold_mode, on_fallback=on_fallback)
 
 
-def _fold_items_chunked(app, combiner, items, chunk_items: int):
+def _fold_items_chunked(app, combiner, items, chunk_items: int,
+                        n_valid=None):
     """Scan the item axis in chunks, folding each chunk into the carried
     collector state (shared scaffolding of the stream and sort flows).
 
     Pad items run through the map like real ones; their emissions are
     masked to the sentinel key before the fold and so never land.
+    ``n_valid`` (scalar, optional) additionally masks the tail of the item
+    axis itself — the N-bucketed serving path (``Compiled``) pads inputs
+    up to a shared bucket shape and passes the true count here, so one
+    executable serves every batch size in the bucket.
     """
     n_items = jax.tree.leaves(items)[0].shape[0]
     n_chunks = -(-n_items // chunk_items)
     state = combiner.init_state()
     if n_chunks <= 1:
-        return combiner.fold_chunk(state, map_phase(app, items))
+        stream = map_phase(app, items)
+        if n_valid is not None:
+            mask = jnp.repeat(jnp.arange(n_items) < n_valid,
+                              app.emit_capacity)
+            stream = col.PairStream(
+                jnp.where(mask, stream.keys, app.key_space),
+                stream.values, app.key_space)
+        return combiner.fold_chunk(state, stream)
 
     padded = n_chunks * chunk_items
     pad = padded - n_items
@@ -273,7 +285,9 @@ def _fold_items_chunked(app, combiner, items, chunk_items: int):
         lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)), items)
     chunked = jax.tree.map(
         lambda a: a.reshape((n_chunks, chunk_items) + a.shape[1:]), items_p)
-    item_mask = (jnp.arange(padded) < n_items).reshape(n_chunks, chunk_items)
+    valid_items = n_items if n_valid is None else n_valid
+    item_mask = (jnp.arange(padded) < valid_items).reshape(
+        n_chunks, chunk_items)
 
     def body(state, xs):
         citems, cmask = xs
@@ -292,7 +306,8 @@ def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PA
                         use_kernels: bool = False,
                         key_block: int | None = None,
                         fold_mode: str | None = None,
-                        on_fallback: Callable | None = None):
+                        on_fallback: Callable | None = None,
+                        n_valid=None):
     """Fused map+combine over ``items``: chunked scan, holder-table carry.
 
     Splits the item axis into chunks of ~``chunk_pairs`` emitted pairs, runs
@@ -320,17 +335,19 @@ def stream_local_tables(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PA
                           chunk_pairs=chunk_items * cap,
                           key_block=key_block, fold_mode=fold_mode,
                           on_fallback=on_fallback)
-    state = _fold_items_chunked(app, sc, items, chunk_items)
+    state = _fold_items_chunked(app, sc, items, chunk_items, n_valid=n_valid)
     return sc.tables_counts(state)
 
 
 def run_local_stream(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
                      use_kernels: bool = False, key_block: int | None = None,
                      fold_mode: str | None = None,
-                     on_fallback: Callable | None = None):
+                     on_fallback: Callable | None = None,
+                     n_valid=None):
     tables, counts = stream_local_tables(
         app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels,
-        key_block=key_block, fold_mode=fold_mode, on_fallback=on_fallback)
+        key_block=key_block, fold_mode=fold_mode, on_fallback=on_fallback,
+        n_valid=n_valid)
     grouped = col.finalize_tables(spec, tables, counts, app.key_space)
     return grouped.keys, grouped.values, grouped.counts
 
@@ -349,7 +366,8 @@ def sort_local_tables(app, spec, items, *,
                       level_fanouts: tuple[int, ...] | None = None,
                       sort_mode: str | None = None,
                       sort_impl: str = "auto",
-                      on_fallback: Callable | None = None):
+                      on_fallback: Callable | None = None,
+                      n_valid=None):
     """Sort flow over ``items``: chunked scan, per-chunk radix/sort fold.
 
     Same chunk scaffolding as the stream flow; each chunk is partitioned by
@@ -368,7 +386,7 @@ def sort_local_tables(app, spec, items, *,
         sort_fold_fn=_sort_fold_kernel(use_kernels, bucket_size,
                                        level_fanouts),
         mode=sort_mode, sort_impl=sort_impl)
-    state = _fold_items_chunked(app, sc, items, chunk_items)
+    state = _fold_items_chunked(app, sc, items, chunk_items, n_valid=n_valid)
     return sc.tables_counts(state)
 
 
@@ -379,11 +397,13 @@ def run_local_sort(app, spec, items, *,
                    level_fanouts: tuple[int, ...] | None = None,
                    sort_mode: str | None = None,
                    sort_impl: str = "auto",
-                   on_fallback: Callable | None = None):
+                   on_fallback: Callable | None = None,
+                   n_valid=None):
     tables, counts = sort_local_tables(
         app, spec, items, chunk_pairs=chunk_pairs, use_kernels=use_kernels,
         bucket_size=bucket_size, level_fanouts=level_fanouts,
-        sort_mode=sort_mode, sort_impl=sort_impl, on_fallback=on_fallback)
+        sort_mode=sort_mode, sort_impl=sort_impl, on_fallback=on_fallback,
+        n_valid=n_valid)
     grouped = col.finalize_tables(spec, tables, counts, app.key_space)
     return grouped.keys, grouped.values, grouped.counts
 
@@ -392,7 +412,8 @@ def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
               chunk_pairs: int | None = None,
               key_block: int | None = None,
               bucket_size: int | None = None,
-              level_fanouts: tuple[int, ...] | None = None):
+              level_fanouts: tuple[int, ...] | None = None,
+              n_valid=None):
     if plan.flow == "stream":
         return run_local_stream(app, plan.spec, items,
                                 chunk_pairs=(DEFAULT_CHUNK_PAIRS
@@ -400,7 +421,8 @@ def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
                                              else chunk_pairs),
                                 use_kernels=use_kernels,
                                 key_block=key_block,
-                                on_fallback=_plan_fallback_cb(plan))
+                                on_fallback=_plan_fallback_cb(plan),
+                                n_valid=n_valid)
     if plan.flow == "sort":
         return run_local_sort(app, plan.spec, items,
                               chunk_pairs=(DEFAULT_SORT_CHUNK_PAIRS
@@ -409,8 +431,14 @@ def run_local(app, plan, items, *, combine_impl="auto", use_kernels=False,
                               use_kernels=use_kernels,
                               bucket_size=bucket_size,
                               level_fanouts=level_fanouts,
-                              on_fallback=_plan_fallback_cb(plan))
+                              on_fallback=_plan_fallback_cb(plan),
+                              n_valid=n_valid)
     stream = map_phase(app, items)
+    if n_valid is not None:
+        n_items = jax.tree.leaves(items)[0].shape[0]
+        mask = jnp.repeat(jnp.arange(n_items) < n_valid, app.emit_capacity)
+        stream = col.PairStream(jnp.where(mask, stream.keys, app.key_space),
+                                stream.values, app.key_space)
     if plan.flow == "combine":
         grouped = col.combine_flow(
             plan.spec, stream, impl=combine_impl,
@@ -892,8 +920,6 @@ def run_distributed(
     raises a ``ValueError`` under ``strict_shuffle=True`` — it is never
     silently dropped anymore.
     """
-    from jax.experimental.shard_map import shard_map
-
     S = mesh.shape[data_axis]
     # per-shard autotune (not the local tiling): hint with the shard's
     # pair count so the chunk knee and the key block match what each
@@ -901,7 +927,43 @@ def run_distributed(
     chunk_pairs, key_block = _distributed_tiling(
         app, plan, items, S, use_kernels=use_kernels,
         chunk_pairs=chunk_pairs, key_block=key_block)
+    jitted, post = build_distributed_fn(
+        app, plan, mesh=mesh, data_axis=data_axis,
+        combine_impl=combine_impl, use_kernels=use_kernels,
+        scatter_output=scatter_output, shuffle_capacity=shuffle_capacity,
+        chunk_pairs=chunk_pairs, key_block=key_block,
+        bucket_size=bucket_size, level_fanouts=level_fanouts)
+    return post(jitted(items), strict_shuffle=strict_shuffle)
 
+
+def build_distributed_fn(
+    app,
+    plan,
+    *,
+    mesh,
+    data_axis: str = "data",
+    combine_impl: str = "auto",
+    use_kernels: bool = False,
+    scatter_output: bool = False,
+    shuffle_capacity: int | None = None,
+    chunk_pairs: int | None = None,
+    key_block: int | None = None,
+    bucket_size: int | None = None,
+    level_fanouts: tuple[int, ...] | None = None,
+):
+    """Build the persistent distributed executable for one (plan, mesh).
+
+    Returns ``(jitted, postprocess)``: ``jitted(items)`` is a jitted
+    shard_map of the chosen flow (jit's own cache makes repeat calls with
+    same-shaped items dispatch without re-tracing — the staged ``Compiled``
+    holds this object across calls), and ``postprocess(out,
+    strict_shuffle=...)`` surfaces shuffle overflow and strips the overflow
+    channel, returning ``(keys, values, counts)``.  ``chunk_pairs`` /
+    ``key_block`` must already be resolved to the PER-SHARD tiling (see
+    :func:`_distributed_tiling`)."""
+    from jax.experimental.shard_map import shard_map
+
+    S = mesh.shape[data_axis]
     if plan.flow in ("combine", "stream"):
         if plan.flow == "stream":
             fn = _stream_shard_fn(app, plan.spec, use_kernels=use_kernels,
@@ -931,13 +993,17 @@ def run_distributed(
 
     sm = shard_map(fn, mesh=mesh, in_specs=(P(data_axis),),
                    out_specs=out_spec, check_rep=False)
-    out = jax.jit(sm)(items)
-    if plan.flow in ("reduce", "sort"):
-        keys, values, counts, overflow = out
-        _surface_overflow(plan, overflow, strict=strict_shuffle,
-                          shuffle_capacity=shuffle_capacity)
-        return keys, values, counts
-    return out
+    jitted = jax.jit(sm)
+
+    def postprocess(out, *, strict_shuffle: bool = False):
+        if plan.flow in ("reduce", "sort"):
+            keys, values, counts, overflow = out
+            _surface_overflow(plan, overflow, strict=strict_shuffle,
+                              shuffle_capacity=shuffle_capacity)
+            return keys, values, counts
+        return out
+
+    return jitted, postprocess
 
 
 # ---------------------------------------------------------------------------

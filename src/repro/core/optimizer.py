@@ -88,6 +88,9 @@ def derive_combiner(
     atol: float = 1e-4,
 ) -> Derivation:
     """Run the optimizer on one reduce function."""
+    from repro.core import plan_cache as pc
+
+    pc.STATS.derives += 1
     t0 = time.perf_counter()
     try:
         an = S.analyze(reduce_fn, key_aval, value_aval, max_len=max_len)

@@ -1,0 +1,475 @@
+"""Multi-job pipelines: chained MapReduce jobs with semantic DAG fusion.
+
+Chained MapReduce jobs (map→reduce→map→reduce, the wordcount→top-k shape)
+classically materialize a full intermediate table between stages: the
+producer finalizes ``[K]`` rows of (key, value, count) to HBM and the
+consumer reads them straight back.  The framework holds the semantic
+information to do better — MANIMAL's static analysis of user map/reduce
+functions, recast on jaxprs:
+
+* **fused handoff** — the producer's reduce output feeds the consumer's
+  map chunks inside ONE compiled program; the intermediate table never
+  round-trips HBM as a program boundary (the roofline term
+  ``roofline.analysis.pipeline_handoff_bytes`` is elided).
+* **dead-column elimination** — the consumer map's jaxpr is dependence-
+  sliced; when the emitted pairs never read the intermediate *value*
+  column, the fused graph feeds zeros in its place, making the producer's
+  value finalization dead code for XLA.
+* **filter pushdown** — an edge predicate (``then(job, where=...)``) and
+  the consumer's own guard run at the consumer's MAP side, masking keys to
+  the sentinel *below* the consumer's shuffle (pairs never enter the fold)
+  — and empty producer rows (count == 0) are auto-masked the same way, so
+  consumer maps are written against live rows only.
+
+The fused and unfused paths compose the *same* per-stage engine functions
+with the same tiling knobs, so their outputs are bitwise identical — the
+fusion changes where bytes move, never what is computed (asserted by
+``tests/core/test_pipeline.py``).
+
+Consumer contract: each intermediate item is the triple
+``(key, value, count)`` of one producer table row (``key`` int32 scalar,
+``value`` the producer's reduce output, ``count`` int32 scalar).  Rows
+with ``count == 0`` are masked automatically; the map body still traces
+over them, so it must be total (no host control flow on the values).
+
+Pipelines execute locally (the serving shape); distribute the individual
+jobs with ``MapReduce.run_distributed`` when sharding matters more than
+fusion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core import plan_cache as pc
+from repro.core import semantics as S
+from repro.core.api import (ExecutionOptions, MapReduce, MapReduceApp,
+                            MapReduceResult)
+from repro.roofline import analysis as roofline
+
+
+# ---------------------------------------------------------------------------
+# Per-stage semantics from the map jaxpr (MANIMAL-style dependence slice)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSemantics:
+    """What a consumer map actually does with its (key, value, count) item.
+
+    Extracted from the map function's jaxpr by forward dependence
+    analysis: ``reads_*`` say which item columns the emitted pairs depend
+    on (``reads_value=False`` ⇒ the value column is dead and the producer
+    need not finalize it); ``key_passthrough`` that the emitted key
+    channel depends on nothing but the input key (the consumer keeps the
+    producer's key space); ``select_guard`` that the key channel already
+    runs through a ``select``-style predicate — a filter the map itself
+    pushes below the shuffle."""
+
+    reads_key: bool
+    reads_value: bool
+    reads_count: bool
+    key_passthrough: bool
+    select_guard: bool
+
+    def describe(self) -> str:
+        cols = [n for n, r in (("key", self.reads_key),
+                               ("value", self.reads_value),
+                               ("count", self.reads_count)) if r]
+        out = f"reads [{', '.join(cols) or 'nothing'}]"
+        if self.key_passthrough:
+            out += ", key pass-through"
+        if self.select_guard:
+            out += ", select-guarded key channel"
+        return out
+
+
+def _deps_of(closed):
+    """Forward dependence walk over an inlined jaxpr.
+
+    Returns ``(eqns, out_deps, invars)``: the flattened equations, one
+    input-index dependence set per output leaf, and the input vars.
+    Call-like primitives are inlined (``semantics._inline``); remaining
+    structured eqns (scan, while, cond) are treated as opaque — outputs
+    depend on the union of their inputs, a sound over-approximation for
+    dead-column detection."""
+    eqns, _, invars, outvars = S._inline(closed.jaxpr, closed.consts)
+    dep: dict[Any, set] = {v: {i} for i, v in enumerate(invars)}
+
+    def of(v) -> set:
+        if S._is_lit(v):
+            return set()
+        return dep.get(v, set())
+
+    for eqn in eqns:
+        s: set = set()
+        for iv in eqn.invars:
+            s |= of(iv)
+        for ov in eqn.outvars:
+            dep[ov] = s
+    return eqns, [of(v) for v in outvars], outvars
+
+
+def _key_channel_slice(eqns, outvars) -> set:
+    """Backward slice: the equations the key output channel depends on."""
+    need = {v for v in outvars[:1] if not S._is_lit(v)}
+    marked: set = set()
+    for eqn in reversed(eqns):
+        if any(ov in need for ov in eqn.outvars):
+            marked.add(id(eqn))
+            need |= {iv for iv in eqn.invars if not S._is_lit(iv)}
+    return marked
+
+
+def extract_semantics(app, item_spec) -> StageSemantics:
+    """Dependence-slice ``app.map`` over one ``item_spec`` item."""
+
+    def one(item):
+        em = eng.Emitter(app.emit_capacity, app.key_space, app.value_aval)
+        app.map(item, em)
+        return em.pairs()
+
+    closed = jax.make_jaxpr(one)(item_spec)
+    eqns, out_deps, outvars = _deps_of(closed)
+    leaves = jax.tree.leaves(item_spec)
+    # item leaves arrive flattened in pytree order: (key, value..., count)
+    n_leaves = len(leaves)
+    key_idx, count_idx = {0}, {n_leaves - 1}
+    value_idx = set(range(1, n_leaves - 1))
+
+    # Emitter.pairs() returns (keys, values): the first output leaf is the
+    # key channel, the rest the value channels
+    keys_deps = out_deps[0] if out_deps else set()
+    vals_deps: set = set()
+    for d in out_deps[1:]:
+        vals_deps |= d
+    all_deps = keys_deps | vals_deps
+
+    # filter-predicate extraction: a data-dependent select on the key
+    # channel's backward slice means the map already masks its own
+    # emissions — a filter running below the shuffle
+    key_slice = _key_channel_slice(eqns, outvars)
+    select_guard = any(
+        id(eqn) in key_slice and eqn.primitive.name == "select_n"
+        and not S._is_lit(eqn.invars[0])
+        for eqn in eqns)
+
+    return StageSemantics(
+        reads_key=bool(all_deps & key_idx),
+        reads_value=bool(all_deps & value_idx),
+        reads_count=bool(all_deps & count_idx),
+        key_passthrough=bool(keys_deps) and keys_deps <= key_idx,
+        select_guard=select_guard,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Guarded consumer: count>0 + pushed-down edge filter at the map side
+# ---------------------------------------------------------------------------
+
+
+class _GuardedEmitter:
+    """Emitter proxy conjoining every emission with the row guard."""
+
+    def __init__(self, inner: eng.Emitter, live):
+        self._inner = inner
+        self._live = live
+        self.capacity = inner.capacity
+        self.key_space = inner.key_space
+        self.value_aval = inner.value_aval
+
+    def __call__(self, keys, values, valid=None):
+        return self.emit(keys, values, valid)
+
+    def emit(self, keys, values, valid=None):
+        live = self._live
+        if valid is not None:
+            live = jnp.asarray(valid, bool) & live
+        self._inner.emit(keys, values, valid=live)
+
+
+def _guarded_app(app: MapReduceApp, where: Callable | None) -> MapReduceApp:
+    """Consumer app whose map sees only live intermediate rows: empty
+    producer slots (count == 0) and rows failing the edge predicate emit
+    nothing — the masked keys never enter the consumer's shuffle/fold
+    (the filter-pushdown of the module docstring)."""
+    g = MapReduceApp()
+    g.key_space = app.key_space
+    g.value_aval = app.value_aval
+    g.pad_value = app.pad_value
+    g.max_values_per_key = app.max_values_per_key
+    g.emit_capacity = app.emit_capacity
+    g.manual_combiner = getattr(app, "manual_combiner", None)
+    g.reduce = app.reduce  # type: ignore[method-assign]
+
+    def gmap(item, emit):
+        key, value, count = item[0], item[1], item[2]
+        live = count > 0
+        if where is not None:
+            live = live & jnp.asarray(where(key, value, count), bool)
+        app.map(item, _GuardedEmitter(emit, live))
+
+    g.map = gmap  # type: ignore[method-assign]
+    return g
+
+
+# ---------------------------------------------------------------------------
+# The Pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Stage:
+    mr: MapReduce
+    where: Callable | None = None  # edge predicate (into this stage)
+    guarded: MapReduceApp | None = None  # wrapped app (stages > 0)
+    semantics: StageSemantics | None = None
+    dead_value: bool = False
+
+
+def _as_mr(job) -> MapReduce:
+    return job if isinstance(job, MapReduce) else MapReduce(job)
+
+
+class Pipeline:
+    """``Pipeline(job1).then(job2).run(items)`` — a linear MapReduce DAG.
+
+    Each ``then`` edge hands the producer's dense ``[K]`` output table to
+    the consumer as (key, value, count) items.  ``run`` executes the
+    FUSED program (one compiled executable, no materialized intermediate);
+    ``run_unfused`` the reference path (one executable per stage, table
+    round-trip between) — bitwise the same result.  ``where=`` declares
+    an edge filter pushed below the consumer's shuffle.  Compiled fused
+    programs are content-cached like single jobs; ``explain()`` reports
+    the per-edge fusion decisions."""
+
+    def __init__(self, first, *rest):
+        self.stages: list[_Stage] = [_Stage(mr=_as_mr(first))]
+        for job in rest:
+            self.then(job)
+
+    def then(self, job, *, where: Callable | None = None) -> "Pipeline":
+        mr = _as_mr(job)
+        st = _Stage(mr=mr, where=where, guarded=_guarded_app(mr.app, where))
+        prev = self.stages[-1].mr.app
+        spec = (jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct(tuple(prev.value_aval.shape),
+                                     prev.value_aval.dtype),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        try:
+            st.semantics = extract_semantics(mr.app, spec)
+            st.dead_value = not st.semantics.reads_value
+        except Exception:  # untraceable map: no fusion extras, still fuses
+            st.semantics = None
+            st.dead_value = False
+        self.stages.append(st)
+        return self
+
+    # -- fusion report ------------------------------------------------------
+
+    def fusion_report(self) -> tuple[str, ...]:
+        lines: list[str] = []
+        for i, st in enumerate(self.stages[1:], start=1):
+            prev = self.stages[i - 1].mr.app
+            vb = int(jnp.dtype(prev.value_aval.dtype).itemsize *
+                     max(1, _nelems(prev.value_aval.shape)))
+            elided = roofline.pipeline_handoff_bytes(
+                prev.key_space, value_bytes=vb)
+            lines.append(
+                f"edge {i - 1}->{i}: fused handoff — intermediate table "
+                f"[K={prev.key_space}] not materialized "
+                f"({elided / 1e6:.2f} MB round-trip elided)")
+            if st.semantics is not None:
+                lines.append(f"edge {i - 1}->{i}: consumer map "
+                             f"{st.semantics.describe()}")
+            if st.dead_value:
+                lines.append(
+                    f"edge {i - 1}->{i}: dead column eliminated — consumer "
+                    f"never reads the value column; producer finalize of "
+                    f"[K={prev.key_space}] values is dead code in the "
+                    f"fused graph")
+            if st.where is not None:
+                lines.append(f"edge {i - 1}->{i}: filter pushed below the "
+                             f"shuffle — edge predicate masks rows at the "
+                             f"consumer map side")
+            lines.append(f"edge {i - 1}->{i}: empty-row guard — producer "
+                         f"rows with count==0 auto-masked")
+        return tuple(lines)
+
+    def explain(self) -> str:
+        out: list[str] = []
+        for i, st in enumerate(self.stages):
+            plan = dataclasses.replace(st.mr.plan, stage="pipeline",
+                                       fusion=())
+            out.append(f"[stage {i}] " + plan.explain().replace("\n", "\n  "))
+        out.extend(self.fusion_report())
+        return "\n".join(out)
+
+    # -- execution ----------------------------------------------------------
+
+    def _stage_knobs(self, st: _Stage) -> dict:
+        return st.mr._knobs(ExecutionOptions())
+
+    def _fused_fn(self) -> Callable:
+        stages = self.stages
+
+        def fused(items):
+            k, v, c = eng.run_local(stages[0].mr.app, stages[0].mr.plan,
+                                    items, **self._stage_knobs(stages[0]))
+            for st in stages[1:]:
+                if st.dead_value:
+                    # severs the data dependence on the producer's value
+                    # finalization: XLA removes it as dead code
+                    v = jnp.zeros_like(v)
+                k, v, c = eng.run_local(st.guarded, st.mr.plan, (k, v, c),
+                                        **self._stage_knobs(st))
+            return k, v, c
+
+        return fused
+
+    def _cache_key(self, items_spec) -> str:
+        parts = ["pipeline", pc._spec_sig(items_spec)]
+        for i, st in enumerate(self.stages):
+            parts.append(st.mr._plan_key)
+            app = st.guarded if i else st.mr.app
+            if i == 0:
+                parts.append(pc.map_fingerprint(
+                    app, pc.item_spec_of(items_spec)))
+            else:
+                prev = self.stages[i - 1].mr.app
+                spec = (jax.ShapeDtypeStruct((), jnp.int32),
+                        jax.ShapeDtypeStruct(tuple(prev.value_aval.shape),
+                                             prev.value_aval.dtype),
+                        jax.ShapeDtypeStruct((), jnp.int32))
+                parts.append(pc.map_fingerprint(app, spec))
+            parts.append(f"dead={st.dead_value}")
+        return pc._digest(*parts)
+
+    def compile(self, items, *, cache: bool = True):
+        """AOT-compile the fused pipeline for the item spec of ``items``.
+        Returns a callable executable (content-cached): repeat traffic
+        with the same apps and shapes dispatches with zero re-traces."""
+        if len(self.stages) < 2:
+            raise ValueError("a Pipeline needs at least two stages")
+        items_spec = pc.items_spec_of(items)
+        key = self._cache_key(items_spec)
+        if cache:
+            ent = pc.compiled_get(key)
+            if ent is not None:
+                self._note_cache(key, "hit")
+                return ent.executable
+        pc.STATS.compiles += 1
+        executable = jax.jit(self._fused_fn()).lower(items_spec).compile()
+        if cache:
+            pc.compiled_put(key, pc.CompiledEntry(
+                executable=executable, plan=self.stages[-1].mr.plan,
+                tiling=None, n_bucket=jax.tree.leaves(items_spec)[0].shape[0],
+                mode="pipeline"))
+        self._note_cache(key, "miss" if cache else "")
+        return executable
+
+    def _note_cache(self, key: str, event: str) -> None:
+        plan = self.stages[-1].mr.plan
+        plan.cache_key = key
+        plan.cache_event = event
+        plan.stage = "pipeline"
+        plan.fusion = self.fusion_report()
+
+    def run(self, items, *, options: ExecutionOptions | None = None
+            ) -> MapReduceResult:
+        """Execute the FUSED pipeline (one compiled program)."""
+        opts = options if options is not None else ExecutionOptions()
+        if opts.mesh is not None:
+            raise NotImplementedError(
+                "Pipeline fusion is local-only; run stages individually "
+                "with MapReduce.run_distributed to shard them")
+        executable = self.compile(items, cache=opts.cache)
+        keys, values, counts = executable(jax.tree.map(jnp.asarray, items))
+        return MapReduceResult(keys, values, counts,
+                               plan=self.stages[-1].mr.plan)
+
+    def run_unfused(self, items) -> MapReduceResult:
+        """Reference path: one executable per stage, the intermediate
+        table materialized between them.  Composes the SAME per-stage
+        engine functions with the SAME tiling knobs as :meth:`run`, so
+        the result is bitwise identical — only the bytes moved differ."""
+        k, v, c = self._stage_jit(self.stages[0])(
+            jax.tree.map(jnp.asarray, items))
+        for st in self.stages[1:]:
+            k = jax.block_until_ready(k)  # force the table round-trip the
+            v = jax.block_until_ready(v)  # fused path elides
+            c = jax.block_until_ready(c)
+            k, v, c = self._stage_jit(st)((k, v, c))
+        return MapReduceResult(k, v, c, plan=self.stages[-1].mr.plan)
+
+    def _stage_jit(self, st: _Stage):
+        if getattr(st, "_jit", None) is None:
+            st._jit = jax.jit(partial_stage(st))
+        return st._jit
+
+    # -- analytics ----------------------------------------------------------
+
+    def model_bytes(self, n_items: int, *, fused: bool) -> float:
+        """Analytic HBM bytes of the whole pipeline at ``n_items`` inputs:
+        the per-stage flow bytes plus, when unfused, the per-edge
+        intermediate-table handoff (what fusion elides)."""
+        total = 0.0
+        for i, st in enumerate(self.stages):
+            app = st.mr.app
+            n_pairs = ((n_items if i == 0
+                        else self.stages[i - 1].mr.app.key_space)
+                       * app.emit_capacity)
+            vb = int(jnp.dtype(app.value_aval.dtype).itemsize *
+                     max(1, _nelems(app.value_aval.shape)))
+            tiling = st.mr.tiling
+            total += roofline.mapreduce_flow_bytes(
+                st.mr.plan.flow, n_pairs=n_pairs, key_space=app.key_space,
+                value_bytes=vb,
+                chunk_pairs=getattr(tiling, "chunk_pairs", None),
+                key_block=(tiling.key_block
+                           if tiling is not None and tiling.blocked
+                           else None) if tiling is not None else None,
+                max_values_per_key=app.max_values_per_key)
+        if not fused:
+            for i, st in enumerate(self.stages[1:], start=1):
+                prev = self.stages[i - 1].mr.app
+                vb = int(jnp.dtype(prev.value_aval.dtype).itemsize *
+                         max(1, _nelems(prev.value_aval.shape)))
+                # the producer cannot know its consumer ignores the value
+                # column: the materialized table always carries it
+                total += roofline.pipeline_handoff_bytes(
+                    prev.key_space, value_bytes=vb)
+        else:
+            for i, st in enumerate(self.stages[1:], start=1):
+                if st.dead_value:
+                    prev = self.stages[i - 1].mr.app
+                    vb = int(jnp.dtype(prev.value_aval.dtype).itemsize *
+                             max(1, _nelems(prev.value_aval.shape)))
+                    # the producer's value finalize (a [K]·vb table write)
+                    # is dead code in the fused graph
+                    total -= float(prev.key_space * vb)
+        return total
+
+
+def partial_stage(st: _Stage) -> Callable:
+    """The stage's engine function (first stage: raw app; later stages:
+    the guarded consumer) — shared by the fused and unfused paths."""
+    app = st.guarded if st.guarded is not None else st.mr.app
+    knobs = st.mr._knobs(ExecutionOptions())
+
+    def stage_fn(items):
+        return eng.run_local(app, st.mr.plan, items, **knobs)
+
+    return stage_fn
+
+
+def _nelems(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n

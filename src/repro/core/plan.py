@@ -49,6 +49,16 @@ class ExecutionPlan:
     #: monoid-merge recovery argument makes these pure bookkeeping: the
     #: answer is bitwise the no-failure one.
     recovery: tuple[str, ...] = ()
+    #: staged-compilation bookkeeping (api.Lowered/Optimized/Compiled):
+    #: the furthest stage this plan has reached, the content cache key it
+    #: was stored/looked-up under, and how the lookup went ("hit" | "miss"
+    #: | "file-hit"; "" when the cache was bypassed).
+    stage: str = ""
+    cache_key: str | None = None
+    cache_event: str = ""
+    #: pipeline-fusion decisions (core/pipeline.py): one line per DAG edge
+    #: — fused handoff, eliminated dead columns, pushed-down filters.
+    fusion: tuple[str, ...] = ()
 
     @property
     def optimized(self) -> bool:
@@ -58,9 +68,15 @@ class ExecutionPlan:
     def explain(self) -> str:
         """Multi-line report of what the optimizer decided and why —
         flow, derivation, the cost-model ranking, the autotuned tiling,
-        and any lowering diagnostics (the paper's §3.2 decision, made
-        inspectable)."""
+        any lowering diagnostics (the paper's §3.2 decision, made
+        inspectable), plus the staged-compilation stage / plan-cache
+        outcome and pipeline-fusion decisions when present."""
         lines = [f"flow: {self.flow} ({self.reason})"]
+        if self.stage:
+            lines.append(f"stage: {self.stage}")
+        if self.cache_key is not None:
+            ev = self.cache_event or "off"
+            lines.append(f"plan-cache: {ev} key={self.cache_key}")
         d = self.derivation
         if d is not None:
             v = "validated" if d.validated else "trusted"
@@ -77,6 +93,8 @@ class ExecutionPlan:
             lines.append(f"tiling: {self.tiling.describe()}")
             for note in getattr(self.tiling, "notes", ()):
                 lines.append(f"  - {note}")
+        for decision in self.fusion:
+            lines.append(f"fusion: {decision}")
         for diag in self.diagnostics:
             lines.append(f"diagnostic: {diag}")
         for event in self.recovery:

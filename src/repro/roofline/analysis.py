@@ -328,6 +328,24 @@ def stream_working_set_bytes(
     return 4.0 * (key_block * td + tn * key_block + tn * td)
 
 
+def pipeline_handoff_bytes(key_space: int, *, value_bytes: int = 4,
+                           dead_value: bool = False) -> float:
+    """HBM bytes of materializing one producer→consumer pipeline edge.
+
+    An unfused pipeline ends the producer program by writing its dense
+    ``[K]`` output table — (key int32, value, count int32) rows — and
+    starts the consumer program by reading it back: a
+    ``2 · K · row_bytes`` round-trip that exists only because the program
+    boundary forces materialization.  The fused pipeline
+    (``core/pipeline.py``) runs both stages in one program and elides the
+    term entirely; with a dead value column
+    (``StageSemantics.reads_value == False``) the unfused handoff still
+    moves the value bytes — the producer cannot know its consumer — which
+    is exactly the co-design gap this model quantifies."""
+    row = 4 + 4 + (0 if dead_value else int(value_bytes))
+    return 2.0 * float(key_space) * row
+
+
 def model_flops_estimate(cfg, shape_kind: str, seq: int, batch: int,
                          n_params: int, n_active: int) -> float:
     """6·N·D train; 2·N·D per generated token for decode/prefill."""

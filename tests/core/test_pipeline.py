@@ -1,0 +1,197 @@
+"""Multi-job DAG fusion: jaxpr semantics extraction, fused-vs-unfused
+bitwise parity, dead-column elimination, filter pushdown, and the roofline
+handoff-bytes model (fused strictly fewer)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MapReduce, Pipeline, make_app
+from repro.core import plan_cache as pc
+from repro.core.pipeline import extract_semantics
+
+VOCAB = 64
+BUCKETS = 16
+
+
+def wordcount():
+    return make_app(
+        map_fn=lambda item, emit: emit.emit(item % VOCAB,
+                                            jnp.ones((), jnp.int32)),
+        reduce_fn=lambda k, vs, n: vs.sum(),
+        key_space=VOCAB,
+        value_aval=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def histogram():
+    """Second job reading the VALUE column of the word-count table."""
+    def hist_map(item, emit):
+        count = item[1]
+        emit.emit(jnp.clip(count // 8, 0, BUCKETS - 1).astype(jnp.int32),
+                  jnp.ones((), jnp.int32))
+
+    return make_app(
+        map_fn=hist_map,
+        reduce_fn=lambda k, vs, n: vs.sum(),
+        key_space=BUCKETS,
+        value_aval=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def key_presence():
+    """Second job reading only the KEY column — the value column is dead."""
+    def pres_map(item, emit):
+        emit.emit(item[0] % 8, jnp.ones((), jnp.int32))
+
+    return make_app(
+        map_fn=pres_map,
+        reduce_fn=lambda k, vs, n: vs.sum(),
+        key_space=8,
+        value_aval=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+@pytest.fixture(scope="module")
+def items():
+    rng = np.random.default_rng(11)
+    return jnp.asarray(rng.integers(0, 5 * VOCAB, size=6000) % VOCAB,
+                       dtype=jnp.int32)
+
+
+def assert_same(a, b):
+    np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(b.keys))
+    np.testing.assert_array_equal(np.asarray(a.values), np.asarray(b.values))
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+
+
+# ---------------------------------------------------------------------------
+# Semantics extraction
+# ---------------------------------------------------------------------------
+
+
+def test_semantics_value_reader():
+    spec = (jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    sem = extract_semantics(histogram(), spec)
+    assert sem.reads_value
+    assert not sem.reads_key
+
+
+def test_semantics_key_only_reader():
+    spec = (jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    sem = extract_semantics(key_presence(), spec)
+    assert sem.reads_key
+    assert not sem.reads_value
+
+
+# ---------------------------------------------------------------------------
+# Fused execution parity
+# ---------------------------------------------------------------------------
+
+
+def test_fused_matches_unfused_value_consumer(items):
+    pipe = Pipeline(wordcount()).then(histogram())
+    assert_same(pipe.run(items), pipe.run_unfused(items))
+
+
+def test_fused_matches_unfused_dead_value(items):
+    pipe = Pipeline(wordcount()).then(key_presence())
+    assert_same(pipe.run(items), pipe.run_unfused(items))
+    assert any("dead column eliminated" in line
+               for line in pipe.fusion_report())
+
+
+def test_fused_matches_separate_jobs(items):
+    """Fusion is bitwise against genuinely independent MapReduce runs, not
+    just against the pipeline's own unfused mode."""
+    wc, hist = wordcount(), histogram()
+    stage1 = MapReduce(wc).run(items)
+    mask = np.asarray(stage1.counts) > 0
+    table = (jnp.asarray(np.asarray(stage1.keys)[mask]),
+             jnp.asarray(np.asarray(stage1.values)[mask]),
+             jnp.asarray(np.asarray(stage1.counts)[mask]))
+    want = MapReduce(hist).run(table)
+
+    got = Pipeline(wc).then(hist).run(items)
+    np.testing.assert_array_equal(np.asarray(want.values),
+                                  np.asarray(got.values))
+
+
+def test_filter_pushdown(items):
+    pipe = Pipeline(wordcount()).then(
+        histogram(), where=lambda key, value, count: value > 90)
+    assert_same(pipe.run(items), pipe.run_unfused(items))
+    assert any("filter pushed below the shuffle" in line
+               for line in pipe.fusion_report())
+
+
+def test_three_stage_chain(items):
+    pipe = Pipeline(wordcount()).then(histogram()).then(key_presence())
+    assert_same(pipe.run(items), pipe.run_unfused(items))
+
+
+# ---------------------------------------------------------------------------
+# Byte model + explain + caching
+# ---------------------------------------------------------------------------
+
+
+def test_model_bytes_fused_strictly_fewer(items):
+    n = int(items.shape[0])
+    for pipe in (Pipeline(wordcount()).then(histogram()),
+                 Pipeline(wordcount()).then(key_presence())):
+        assert pipe.model_bytes(n, fused=True) < \
+            pipe.model_bytes(n, fused=False)
+
+
+def test_dead_column_widens_the_gap(items):
+    n = int(items.shape[0])
+    live = Pipeline(wordcount()).then(histogram())
+    dead = Pipeline(wordcount()).then(key_presence())
+    gap_live = (live.model_bytes(n, fused=False)
+                - live.model_bytes(n, fused=True))
+    gap_dead = (dead.model_bytes(n, fused=False)
+                - dead.model_bytes(n, fused=True))
+    assert gap_dead > gap_live
+
+
+def test_pipeline_explain_reports_fusion(items):
+    pipe = Pipeline(wordcount()).then(histogram())
+    pipe.run(items)
+    text = pipe.explain()
+    assert "fused handoff" in text
+    assert "stage: pipeline" in text
+
+
+def test_pipeline_compile_is_cached(items):
+    pc.clear()
+    pipe = Pipeline(wordcount()).then(histogram())
+    s0 = pc.stats_snapshot()
+    pipe.run(items)
+    s1 = pc.stats_snapshot()
+    assert s1["compiles"] - s0["compiles"] == 1
+
+    fresh = Pipeline(wordcount()).then(histogram())
+    s2 = pc.stats_snapshot()
+    fresh.run(items)
+    s3 = pc.stats_snapshot()
+    assert s3["compiles"] - s2["compiles"] == 0, \
+        "identical pipeline content must reuse the fused executable"
+    assert s3["hits"] - s2["hits"] >= 1
+
+
+def test_single_stage_pipeline_rejected(items):
+    with pytest.raises(ValueError):
+        Pipeline(wordcount()).compile(items)
+
+
+def test_distributed_pipeline_not_supported(items):
+    from repro.core import ExecutionOptions
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    pipe = Pipeline(wordcount()).then(histogram())
+    with pytest.raises(NotImplementedError):
+        pipe.run(items, options=ExecutionOptions(mesh=mesh))

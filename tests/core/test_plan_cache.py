@@ -1,0 +1,224 @@
+"""Content-keyed plan cache: hit/miss keying, the zero-re-trace contract
+(asserted via the process-wide counters), the corrupt-safe file layer, and
+bitwise parity of cached executions against cold runs on every flow."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExecutionOptions, MapReduce, make_app
+from repro.core import plan_cache as pc
+
+
+def build_app(vocab=64, dtype=jnp.int32):
+    return make_app(
+        map_fn=lambda item, emit: emit.emit(item % vocab,
+                                            jnp.ones((), dtype)),
+        reduce_fn=lambda k, vs, n: vs.sum(),
+        key_space=vocab,
+        value_aval=jax.ShapeDtypeStruct((), dtype),
+    )
+
+
+@pytest.fixture(scope="module")
+def items():
+    rng = np.random.default_rng(3)
+    return jnp.asarray(rng.integers(0, 64, size=2500), dtype=jnp.int32)
+
+
+def delta(fn):
+    s0 = pc.stats_snapshot()
+    out = fn()
+    s1 = pc.stats_snapshot()
+    return out, {k: s1[k] - s0[k] for k in s1}
+
+
+# ---------------------------------------------------------------------------
+# In-memory keying
+# ---------------------------------------------------------------------------
+
+
+def test_warm_repeat_zero_retrace_zero_autotune(items):
+    pc.clear()
+    app = build_app()
+    want = np.asarray(MapReduce(app).run(items).values)
+
+    def warm():
+        return np.asarray(MapReduce(build_app()).run(items).values)
+
+    got, d = delta(warm)
+    assert d["derives"] == 0, "plan-cache hit must skip combiner derivation"
+    assert d["autotunes"] == 0, "plan-cache hit must skip the autotuner"
+    assert d["probes"] == 0
+    assert d["compiles"] == 0, "compiled-cache hit must skip XLA compile"
+    assert d["plan_hits"] == 1 and d["hits"] == 1
+    np.testing.assert_array_equal(want, got)
+
+
+def test_changed_key_space_misses(items):
+    pc.clear()
+    MapReduce(build_app(vocab=64))
+    _, d = delta(lambda: MapReduce(build_app(vocab=128)))
+    assert d["plan_misses"] == 1 and d["plan_hits"] == 0
+
+
+def test_changed_dtype_misses(items):
+    pc.clear()
+    MapReduce(build_app(dtype=jnp.int32))
+    _, d = delta(lambda: MapReduce(build_app(dtype=jnp.float32)))
+    assert d["plan_misses"] == 1 and d["plan_hits"] == 0
+
+
+def test_changed_flow_misses(items):
+    pc.clear()
+    app = build_app()
+    MapReduce(app, flow="stream")
+    _, d = delta(lambda: MapReduce(app, flow="sort"))
+    assert d["plan_misses"] == 1 and d["plan_hits"] == 0
+
+
+def test_plan_key_distinguishes_mesh_and_shape(items):
+    app = build_app()
+    spec = pc.items_spec_of(items)
+    pk = pc.plan_key(app, flow="auto", trust_semantics=False,
+                     n_pairs_hint=None, use_kernels=False,
+                     combine_impl="auto", chunk_pairs="auto",
+                     key_block="auto", autotune_probe=False)
+    base = pc.compiled_key(app, spec, plan_key=pk, flow="stream",
+                           n_bucket=2500, mesh=None, data_axis="data",
+                           mode="local", extra=())
+    other_shape = pc.compiled_key(
+        app, pc.items_spec_of(items[:-100]), plan_key=pk, flow="stream",
+        n_bucket=2400, mesh=None, data_axis="data", mode="local", extra=())
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    other_mesh = pc.compiled_key(app, spec, plan_key=pk, flow="stream",
+                                 n_bucket=2500, mesh=mesh,
+                                 data_axis="data", mode="distributed",
+                                 extra=())
+    assert len({base, other_shape, other_mesh}) == 3
+
+
+def test_closure_constants_are_part_of_the_key(items):
+    """Two maps that differ only in a captured array must not collide."""
+    def with_bias(bias):
+        arr = jnp.full((), bias, jnp.int32)
+        return make_app(
+            map_fn=lambda item, emit: emit.emit((item + arr) % 64,
+                                                jnp.ones((), jnp.int32)),
+            reduce_fn=lambda k, vs, n: vs.sum(),
+            key_space=64,
+            value_aval=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+    a, b = with_bias(0), with_bias(3)
+    spec = pc.item_spec_of(items)
+    assert pc.map_fingerprint(a, spec) != pc.map_fingerprint(b, spec)
+
+
+def test_cache_false_bypasses(items):
+    pc.clear()
+    app = build_app()
+
+    def cold():
+        mr = MapReduce(app, cache=False)
+        return mr.run(items, options=ExecutionOptions(cache=False))
+
+    _, d1 = delta(cold)
+    _, d2 = delta(cold)
+    assert d2["derives"] == d1["derives"] and d2["compiles"] == 1
+    assert d2["hits"] == 0 and d2["plan_hits"] == 0
+    assert pc.sizes() == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: cached executions vs cold runs, every flow
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("flow", ["stream", "sort", "combine", "reduce"])
+def test_cached_plan_bitwise_identical(flow, items):
+    pc.clear()
+    app = build_app()
+    cold = MapReduce(app, flow=flow).run(items)
+
+    def warm():
+        return MapReduce(build_app(), flow=flow).run(items)
+
+    hot, d = delta(warm)
+    assert d["derives"] == 0 and d["compiles"] == 0 and d["autotunes"] == 0
+    np.testing.assert_array_equal(np.asarray(cold.keys),
+                                  np.asarray(hot.keys))
+    np.testing.assert_array_equal(np.asarray(cold.values),
+                                  np.asarray(hot.values))
+    np.testing.assert_array_equal(np.asarray(cold.counts),
+                                  np.asarray(hot.counts))
+
+
+# ---------------------------------------------------------------------------
+# File-backed advisory layer
+# ---------------------------------------------------------------------------
+
+
+def test_file_layer_round_trip(tmp_path, monkeypatch, items):
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv(pc.PLAN_CACHE_ENV, str(path))
+    pc.clear()
+    mr, d0 = delta(lambda: MapReduce(build_app(), autotune_probe=True))
+    mr.run(items)
+    if mr.plan.flow == "stream":  # sort's tuner is analytic, no probes
+        assert d0["probes"] > 0, "cold construction should measure probes"
+    assert path.exists()
+    data = json.loads(path.read_text())
+    assert mr._plan_key in data
+    entry = data[mr._plan_key]
+    assert entry["flow"] in ("stream", "sort", "combine", "reduce")
+    assert isinstance(entry["chunk_pairs"], int)
+
+    # simulate a fresh process: drop the in-memory layers, keep the file
+    pc.clear()
+    fresh, d = delta(lambda: MapReduce(build_app(), autotune_probe=True))
+    assert d["file_hits"] == 1
+    assert d["probes"] == 0, \
+        "file-pinned tiling must skip the measured probes cross-process"
+    if fresh.plan.flow in ("stream", "sort"):  # nothing to pin otherwise
+        assert fresh.plan.cache_event == "file-hit"
+        assert fresh.tiling.chunk_pairs == entry["chunk_pairs"]
+
+
+def test_file_layer_corrupt_is_ignored(tmp_path, monkeypatch, items):
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv(pc.PLAN_CACHE_ENV, str(path))
+    path.write_text("{this is not json")
+    pc.clear()
+    mr = MapReduce(build_app())
+    res = mr.run(items)  # must not raise
+    assert int(np.asarray(res.counts).sum()) == items.shape[0]
+
+
+def test_file_layer_stale_entry_is_ignored(tmp_path, monkeypatch, items):
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv(pc.PLAN_CACHE_ENV, str(path))
+    pc.clear()
+    mr = MapReduce(build_app())
+    # poison this exact key with wrong-typed fields (an older schema)
+    path.write_text(json.dumps(
+        {mr._plan_key: {"flow": "stream", "chunk_pairs": "not-an-int"}}))
+    pc.clear()
+    fresh, d = delta(lambda: MapReduce(build_app()))
+    assert d["file_hits"] == 0, "wrong-typed entry must read as no-entry"
+    assert fresh.plan.cache_event == "miss"
+
+
+def test_file_layer_unknown_flow_is_ignored(tmp_path, monkeypatch, items):
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv(pc.PLAN_CACHE_ENV, str(path))
+    pc.clear()
+    mr = MapReduce(build_app())
+    path.write_text(json.dumps(
+        {mr._plan_key: {"flow": "warp-drive", "chunk_pairs": 2048}}))
+    pc.clear()
+    _, d = delta(lambda: MapReduce(build_app()))
+    assert d["file_hits"] == 0

@@ -1,0 +1,165 @@
+"""Staged execution surface: lower() -> optimize() -> compile() -> call,
+ExecutionOptions as the single options vocabulary, the legacy-kwarg
+deprecation shims, and explain() at every stage."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (
+    Compiled,
+    ExecutionOptions,
+    Lowered,
+    MapReduce,
+    Optimized,
+    make_app,
+)
+from repro.core import plan_cache as pc
+
+VOCAB = 64
+
+
+@pytest.fixture(scope="module")
+def app():
+    return make_app(
+        map_fn=lambda item, emit: emit.emit(item % VOCAB,
+                                            jnp.ones((), jnp.int32)),
+        reduce_fn=lambda k, vs, n: vs.sum(),
+        key_space=VOCAB,
+        value_aval=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+@pytest.fixture(scope="module")
+def items():
+    rng = np.random.default_rng(7)
+    return jnp.asarray(rng.integers(0, VOCAB, size=3000), dtype=jnp.int32)
+
+
+def test_staged_path_matches_run(app, items):
+    mr = MapReduce(app)
+    want = mr.run(items)
+
+    low = mr.lower(items)
+    assert isinstance(low, Lowered)
+    opt = low.optimize()
+    assert isinstance(opt, Optimized)
+    comp = opt.compile()
+    assert isinstance(comp, Compiled)
+    got = comp(items)
+
+    np.testing.assert_array_equal(np.asarray(want.values),
+                                  np.asarray(got.values))
+    np.testing.assert_array_equal(np.asarray(want.counts),
+                                  np.asarray(got.counts))
+
+
+def test_explain_at_every_stage(app, items):
+    mr = MapReduce(app)
+    assert "flow:" in mr.explain()
+    low = mr.lower(items)
+    assert "stage: lowered" in low.explain()
+    assert "items:" in low.explain()
+    comp = low.optimize().compile()
+    comp(items)
+    text = comp.explain()
+    assert "stage: compiled" in text
+    assert "mode: local" in text
+    assert "plan-cache:" in text  # cache outcome + key always reported
+
+
+def test_lowered_compile_shortcut_keeps_introspection(app, items):
+    comp = MapReduce(app).lower(items).compile()
+    assert "HloModule" in comp.as_text() or len(comp.as_text()) > 0
+    assert comp.memory_analysis() is not None
+
+
+def test_execution_options_on_run(app, items):
+    mr = MapReduce(app)
+    want = np.asarray(mr.run(items).values)
+    got = mr.run(items, options=ExecutionOptions())
+    np.testing.assert_array_equal(want, np.asarray(got.values))
+
+
+def test_pow2_items_bucket_bitwise(app, items):
+    mr = MapReduce(app)
+    want = np.asarray(mr.run(items).values)
+    got = mr.run(items, options=ExecutionOptions(items_bucket="pow2"))
+    np.testing.assert_array_equal(want, np.asarray(got.values))
+    # a second, slightly different N in the same pow2 bucket reuses the
+    # padded executable instead of compiling a new one
+    comp1 = mr.lower(items, options=ExecutionOptions(
+        items_bucket="pow2")).compile()
+    s0 = pc.stats_snapshot()
+    comp2 = mr.lower(items[:-5], options=ExecutionOptions(
+        items_bucket="pow2")).compile()
+    s1 = pc.stats_snapshot()
+    assert s1["compiles"] == s0["compiles"]
+    assert comp1.n_bucket == comp2.n_bucket
+    got2 = comp2(items[:-5])
+    want2 = np.asarray(mr.run(items[:-5]).values)
+    np.testing.assert_array_equal(want2, np.asarray(got2.values))
+
+
+def test_run_distributed_requires_mesh(app, items):
+    mr = MapReduce(app)
+    with pytest.raises(TypeError):
+        mr.run_distributed(items)
+
+
+def test_run_distributed_via_options(app, items):
+    mr = MapReduce(app)
+    want = np.asarray(mr.run(items).values)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    got = mr.run_distributed(items, options=ExecutionOptions(mesh=mesh))
+    np.testing.assert_array_equal(want, np.asarray(got.values))
+
+
+def test_run_resilient_staged(app, items):
+    mr = MapReduce(app)
+    want = np.asarray(mr.run(items).values)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    got = mr.run_resilient(items, options=ExecutionOptions(mesh=mesh))
+    np.testing.assert_array_equal(want, np.asarray(got.values))
+
+
+def test_legacy_kwargs_warn_deprecation(app, items):
+    mr = MapReduce(app)
+    with pytest.warns(DeprecationWarning, match="ExecutionOptions"):
+        res = mr.run(items, strict_shuffle=False)
+    np.testing.assert_array_equal(np.asarray(mr.run(items).values),
+                                  np.asarray(res.values))
+
+
+def test_legacy_kwargs_still_apply(app, items):
+    mr = MapReduce(app)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.warns(DeprecationWarning):
+        got = mr.run_distributed(items, mesh=mesh, scatter_output=False)
+    np.testing.assert_array_equal(np.asarray(mr.run(items).values),
+                                  np.asarray(got.values))
+
+
+def test_unknown_kwarg_raises_type_error(app, items):
+    mr = MapReduce(app)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        mr.run(items, not_an_option=1)
+
+
+def test_options_path_emits_no_deprecation(app, items):
+    mr = MapReduce(app)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        mr.run(items, options=ExecutionOptions(strict_shuffle=False))
+
+
+def test_optimize_hints_override_options(app, items):
+    low = MapReduce(app).lower(items)
+    opt = low.optimize(items_bucket="pow2")
+    assert opt.options.items_bucket == "pow2"
+    with pytest.raises(TypeError):
+        low.optimize(bogus_hint=1)
