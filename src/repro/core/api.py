@@ -524,7 +524,8 @@ class Optimized:
         opts = self.options
         knobs = self.mr._knobs(opts)
         spec = self.items_spec
-        if self.n_bucket != self.n_items:
+        padded = self.n_bucket != self.n_items
+        if padded:
             # pow2 bucketing: the executable is traced at the padded shape,
             # so every N in the bucket must map to the same key
             spec = jax.tree.map(
@@ -534,7 +535,11 @@ class Optimized:
             self.mr.app, spec, plan_key=self.mr._plan_key,
             flow=self.mr.plan.flow, n_bucket=self.n_bucket, mesh=opts.mesh,
             data_axis=opts.data_axis, mode=self.mode,
-            extra=(opts.scatter_output, opts.shuffle_capacity,
+            # `padded` distinguishes the (items, n_valid) calling convention
+            # from the exact (items,) one at the same traced shape — e.g. a
+            # pow2 batch of 5 padded to 8 vs an exact-fit batch of 8
+            extra=(f"padded={padded}", f"bucket={opts.items_bucket}",
+                   opts.scatter_output, opts.shuffle_capacity,
                    knobs["combine_impl"], knobs["use_kernels"],
                    knobs["chunk_pairs"], knobs["key_block"],
                    knobs["bucket_size"], knobs["level_fanouts"]))
@@ -645,10 +650,10 @@ class Compiled:
         self.cache_key = opt.cache_key
         self.cache_event = cache_event
         self._entry = entry
-        # the plan the executable was traced with: run-time diagnostics
-        # (shuffle overflow, lowering fallbacks) land here
-        self.plan = entry.plan
-        self.plan.stage = "compiled"
+        # a fresh copy of the plan the executable was traced with: run-time
+        # diagnostics (shuffle overflow, lowering fallbacks) land here
+        # without polluting other Compiled objects sharing the cache entry
+        self.plan = dataclasses.replace(entry.plan, stage="compiled")
 
     def __call__(self, items) -> MapReduceResult:
         if self.mode == "local":

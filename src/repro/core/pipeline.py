@@ -263,7 +263,10 @@ class Pipeline:
                 jax.ShapeDtypeStruct((), jnp.int32))
         try:
             st.semantics = extract_semantics(mr.app, spec)
-            st.dead_value = not st.semantics.reads_value
+            # the edge predicate is outside the consumer map's jaxpr, so a
+            # value-dependent where= would read the zeroed column: any
+            # where= keeps the value column live
+            st.dead_value = where is None and not st.semantics.reads_value
         except Exception:  # untraceable map: no fusion extras, still fuses
             st.semantics = None
             st.dead_value = False

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
 import os
 from typing import Any
@@ -92,6 +93,20 @@ def stats_snapshot() -> dict:
 # ---------------------------------------------------------------------------
 # Content fingerprints
 # ---------------------------------------------------------------------------
+
+
+#: fallback identity for untraceable map/reduce fns.  A monotonic counter
+#: stored on the app — unlike ``id(app)``, never reused after the app is
+#: garbage-collected, so a fallback key can never alias another app's
+#: cached plan.
+_FALLBACK_UIDS = itertools.count()
+
+
+def _fallback_uid(app) -> int:
+    memo = app.__dict__.setdefault("_plan_cache_fp", {})
+    if "uid" not in memo:
+        memo["uid"] = next(_FALLBACK_UIDS)
+    return memo["uid"]
 
 
 def _digest(*parts: str) -> str:
@@ -155,7 +170,7 @@ def reduce_fingerprint(app) -> str:
                 jax.ShapeDtypeStruct((), jnp.int32))
             sig = _jaxpr_sig(jaxpr)
         except Exception:  # untraceable reduce: fall back to identity
-            sig = f"id:{id(app)}:{type(app).__qualname__}"
+            sig = f"uid:{_fallback_uid(app)}:{type(app).__qualname__}"
         memo["reduce"] = _digest(sig, _app_attr_sig(app))
     return memo["reduce"]
 
@@ -180,7 +195,7 @@ def map_fingerprint(app, item_spec) -> str:
         try:
             sig = _jaxpr_sig(jax.make_jaxpr(one)(item_spec))
         except Exception:
-            sig = f"id:{id(app)}:{type(app).__qualname__}"
+            sig = f"uid:{_fallback_uid(app)}:{type(app).__qualname__}"
         memo[key] = _digest(sig, spec_sig)
     return memo[key]
 

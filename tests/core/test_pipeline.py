@@ -130,6 +130,18 @@ def test_filter_pushdown(items):
                for line in pipe.fusion_report())
 
 
+def test_value_filter_disables_dead_column(items):
+    """The edge predicate reads the value column even when the consumer
+    map doesn't: dead-column elimination must stay off or the fused path
+    would evaluate ``where`` on zeroed values (regression)."""
+    pipe = Pipeline(wordcount()).then(
+        key_presence(), where=lambda key, value, count: value > 90)
+    assert not pipe.stages[1].dead_value
+    assert not any("dead column eliminated" in line
+                   for line in pipe.fusion_report())
+    assert_same(pipe.run(items), pipe.run_unfused(items))
+
+
 def test_three_stage_chain(items):
     pipe = Pipeline(wordcount()).then(histogram()).then(key_presence())
     assert_same(pipe.run(items), pipe.run_unfused(items))

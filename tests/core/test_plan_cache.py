@@ -118,6 +118,29 @@ def test_closure_constants_are_part_of_the_key(items):
     assert pc.map_fingerprint(a, spec) != pc.map_fingerprint(b, spec)
 
 
+def test_untraceable_fallback_keys_unique_and_stable(items):
+    """Untraceable fns fall back to a per-app uid: stable on one app,
+    never shared between apps (regression: the old ``id(app)`` fallback
+    could alias a garbage-collected app's key)."""
+    def bad_map(item, emit):
+        if int(item) > 0:  # host branch on a tracer: untraceable
+            emit.emit(item, jnp.ones((), jnp.int32))
+
+    def bad_reduce(k, vs, n):
+        return vs.sum() if int(n) > 0 else vs.sum()
+
+    def build():
+        return make_app(map_fn=bad_map, reduce_fn=bad_reduce, key_space=64,
+                        value_aval=jax.ShapeDtypeStruct((), jnp.int32))
+
+    a, b = build(), build()
+    spec = pc.item_spec_of(pc.items_spec_of(items))
+    assert pc.reduce_fingerprint(a) == pc.reduce_fingerprint(a)
+    assert pc.reduce_fingerprint(a) != pc.reduce_fingerprint(b)
+    assert pc.map_fingerprint(a, spec) == pc.map_fingerprint(a, spec)
+    assert pc.map_fingerprint(a, spec) != pc.map_fingerprint(b, spec)
+
+
 def test_cache_false_bypasses(items):
     pc.clear()
     app = build_app()

@@ -105,6 +105,46 @@ def test_pow2_items_bucket_bitwise(app, items):
     np.testing.assert_array_equal(want2, np.asarray(got2.values))
 
 
+def test_padded_and_exact_executables_do_not_collide(app):
+    """A pow2 batch of 5 padded to 8 compiles an ``(items, n_valid)``
+    executable; exact-fit batches of 8 must not hit that entry (regression:
+    identical keys dispatched the cached executable with the wrong arity)."""
+    mr = MapReduce(app)
+    rng = np.random.default_rng(13)
+    five = jnp.asarray(rng.integers(0, VOCAB, size=5), dtype=jnp.int32)
+    eight = jnp.asarray(rng.integers(0, VOCAB, size=8), dtype=jnp.int32)
+
+    comp5 = mr.lower(five, options=ExecutionOptions(
+        items_bucket="pow2")).compile()
+    comp8_exact = mr.lower(eight).compile()
+    comp8_pow2 = mr.lower(eight, options=ExecutionOptions(
+        items_bucket="pow2")).compile()
+    assert comp5.cache_key != comp8_exact.cache_key
+    assert comp5.cache_key != comp8_pow2.cache_key
+
+    want5 = np.asarray(mr.run(five).values)
+    want8 = np.asarray(mr.run(eight).values)
+    np.testing.assert_array_equal(want5, np.asarray(comp5(five).values))
+    np.testing.assert_array_equal(want8,
+                                  np.asarray(comp8_exact(eight).values))
+    np.testing.assert_array_equal(want8,
+                                  np.asarray(comp8_pow2(eight).values))
+
+
+def test_compiled_plan_not_shared_across_cache_hits(app, items):
+    """Each Compiled carries its own plan copy: run-time diagnostics from
+    one caller must not leak into other Compiled objects sharing the
+    cache entry (regression)."""
+    mr = MapReduce(app)
+    c1 = mr.lower(items).compile()
+    c2 = mr.lower(items).compile()
+    assert c1.plan is not c2.plan
+    c1.plan.diagnostics += ("polluted",)
+    assert "polluted" not in c2.plan.diagnostics
+    c3 = mr.lower(items).compile()
+    assert "polluted" not in c3.plan.diagnostics
+
+
 def test_run_distributed_requires_mesh(app, items):
     mr = MapReduce(app)
     with pytest.raises(TypeError):
