@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   bench_flow_sweep        Fig 10    (speedup vs (key,value) pressure)
   bench_scalability       Fig 5     (scaling -> collective-bytes scaling)
   bench_integrations      beyond paper (grad-accum / MoE / decode combiners)
+  bench_streaming         beyond paper (continuous-ingestion service)
 
 A module that raises prints a ``*_FAILED`` row and the harness exits
 non-zero at the end, so CI can gate on benchmark health.  ``--json PATH``
@@ -39,6 +40,7 @@ MODULE_NAMES = (
     "bench_flow_sweep",
     "bench_scalability",
     "bench_integrations",
+    "bench_streaming",
 )
 
 CI_SCALE = 0.05

@@ -86,6 +86,16 @@ def shard_partial_dir(ckpt_dir: str, shard: int) -> str:
     return os.path.join(ckpt_dir, f"shard_{shard}")
 
 
+def service_state_dir(ckpt_dir: str) -> str:
+    """Streaming-service state directory convention
+    (``repro.streaming.MapReduceService``): the service snapshots its
+    carried window-slot states — the same partial-aggregate format the
+    resilient driver checkpoints per shard — under one subdirectory,
+    keyed by the monotonically increasing ingested-batch id as the step,
+    so a restarted service resumes bitwise where the snapshot was cut."""
+    return os.path.join(ckpt_dir, "service")
+
+
 def latest_step(ckpt_dir: str) -> int | None:
     p = os.path.join(ckpt_dir, "LATEST")
     if not os.path.exists(p):

@@ -30,8 +30,16 @@ Staged compilation (the JaCe/JAX-AOT stage architecture)::
 ``run()``/``run_distributed()``/``run_resilient()`` are thin wrappers over
 this path; every stage answers :meth:`explain`.  Execution-time knobs
 travel in one :class:`ExecutionOptions` record accepted by all three run
-methods — the old scattered kwargs still work but emit a
-``DeprecationWarning`` and forward.
+methods — the pre-``ExecutionOptions`` scattered kwargs (deprecated with a
+forwarding shim for one release) are now a ``TypeError``.
+
+Long-lived serving: :meth:`MapReduce.serve` stages the same plan into a
+:class:`repro.streaming.MapReduceService` — micro-batches fold
+incrementally into persistent holder tables (mode="streaming"), with
+windowed aggregation, live snapshots and checkpointed warm restarts.
+
+Every entry point — ``run*``, ``Compiled.__call__`` and
+``service.snapshot()`` — returns the same :class:`MapReduceResult`.
 """
 
 from __future__ import annotations
@@ -153,23 +161,23 @@ _OPTION_FIELDS = {f.name for f in dataclasses.fields(ExecutionOptions)}
 
 def _resolve_options(options: ExecutionOptions | None, legacy: dict,
                      *, method: str, mesh=None) -> ExecutionOptions:
-    """Fold deprecated scattered kwargs into an ExecutionOptions.
+    """Reject the retired scattered kwargs; resolve the options record.
 
-    ``mesh`` stays a first-class (non-deprecated) argument on the
-    distributed entry points; everything else in ``legacy`` fires one
-    DeprecationWarning and forwards onto the record."""
+    ``mesh`` stays a first-class argument on the distributed entry points.
+    The pre-``ExecutionOptions`` scattered kwargs went through one release
+    of ``DeprecationWarning``-and-forward; the forwarding is now removed
+    and both known-but-retired and unknown kwargs raise ``TypeError`` —
+    the former with a pointer at the replacement field."""
     opts = options if options is not None else ExecutionOptions()
     if legacy:
-        unknown = sorted(set(legacy) - _OPTION_FIELDS)
-        if unknown:
-            raise TypeError(f"{method}() got unexpected keyword arguments "
-                            f"{unknown}")
-        _warnings.warn(
-            f"{method}({', '.join(sorted(legacy))}=...) scattered keyword "
-            f"arguments are deprecated; pass "
-            f"options=ExecutionOptions(...) instead",
-            DeprecationWarning, stacklevel=3)
-        opts = dataclasses.replace(opts, **legacy)
+        retired = sorted(set(legacy) & _OPTION_FIELDS)
+        if retired:
+            raise TypeError(
+                f"{method}({', '.join(retired)}=...) scattered keyword "
+                f"arguments were removed; pass "
+                f"options=ExecutionOptions({retired[0]}=...) instead")
+        raise TypeError(f"{method}() got unexpected keyword arguments "
+                        f"{sorted(legacy)}")
     if mesh is not None:
         opts = dataclasses.replace(opts, mesh=mesh)
     return opts
@@ -177,12 +185,38 @@ def _resolve_options(options: ExecutionOptions | None, legacy: dict,
 
 @dataclasses.dataclass
 class MapReduceResult:
+    """The one result record of every execution surface.
+
+    ``run()``, ``run_distributed()``, ``run_resilient()``,
+    ``Compiled.__call__`` and ``MapReduceService.snapshot()`` all return
+    this; the entry points differ only in which optional fields are
+    populated (``recovery`` from resilient runs, ``batch_id`` from
+    service snapshots)."""
+
     keys: jax.Array  # [K] = arange(K)
     values: Any  # [K, ...]
     counts: jax.Array  # [K]; 0 == key never emitted
     plan: "ExecutionPlan | None" = None
     #: fault.RecoveryLog when the result came from run_resilient.
     recovery: Any = None
+    #: id of the last micro-batch folded in, when the result is a
+    #: MapReduceService snapshot (None for batch runs).
+    batch_id: int | None = None
+
+    @property
+    def diagnostics(self) -> tuple[str, ...]:
+        """The plan's optimizer/lowering diagnostics (empty without a
+        plan) — one accessor across all entry points."""
+        return self.plan.diagnostics if self.plan is not None else ()
+
+    def __iter__(self):
+        """Bare-tuple unpacking shim: ``keys, values, counts = result``
+        still works but is deprecated — use the named fields."""
+        _warnings.warn(
+            "unpacking MapReduceResult as a bare (keys, values, counts) "
+            "tuple is deprecated; use the named fields "
+            "(.keys/.values/.counts)", DeprecationWarning, stacklevel=2)
+        return iter((self.keys, self.values, self.counts))
 
     def to_dict(self) -> dict:
         """Host-side {key: value} for present keys (tests / small results)."""
@@ -240,6 +274,11 @@ class MapReduce:
     derivation, flow choice and tiling without re-running the optimizer
     (``cache=False`` opts out).  ``lower()`` → ``optimize()`` →
     ``compile()`` continue the stages; ``run*`` wrap them.
+
+    ``streaming=True`` plans for continuous ingestion: the flow is pinned
+    to "stream" and a combiner must be derivable (an unbounded stream
+    cannot be buffered for the reduce flow); :meth:`serve` then stages
+    the plan into a long-lived ``MapReduceService``.
     """
 
     def __init__(
@@ -256,6 +295,7 @@ class MapReduce:
         autotune_probe: bool = False,
         donate: bool = False,
         cache: bool = True,
+        streaming: bool = False,
     ):
         if app.key_space <= 0:
             raise ValueError("app.key_space must be positive")
@@ -264,11 +304,13 @@ class MapReduce:
         self.combine_impl = combine_impl
         self.use_kernels = use_kernels
         self.cache = cache
+        self.streaming = streaming
         self._plan_key = pc.plan_key(
             app, flow=flow, trust_semantics=trust_semantics,
             n_pairs_hint=n_pairs_hint, use_kernels=use_kernels,
             combine_impl=combine_impl, chunk_pairs=stream_chunk_pairs,
-            key_block=stream_key_block, autotune_probe=autotune_probe)
+            key_block=stream_key_block, autotune_probe=autotune_probe,
+            streaming=streaming)
 
         entry = pc.plan_get(self._plan_key) if cache else None
         if entry is not None:
@@ -302,7 +344,8 @@ class MapReduce:
 
         self.plan = plan_execution(app, flow=flow,
                                    trust_semantics=trust_semantics,
-                                   n_pairs_hint=n_pairs_hint)
+                                   n_pairs_hint=n_pairs_hint,
+                                   streaming=streaming)
         self.tiling = None
         key_block = None
         bucket_size = None
@@ -418,9 +461,9 @@ class MapReduce:
                         **legacy) -> MapReduceResult:
         """Distributed run — shard_map over the mesh's data axis.
 
-        ``options`` (or the deprecated scattered kwargs) carry
-        ``scatter_output``, ``shuffle_capacity``, ``strict_shuffle``, ...;
-        the mesh may come as the ``mesh=`` argument or on the options."""
+        ``options`` carries ``scatter_output``, ``shuffle_capacity``,
+        ``strict_shuffle``, ...; the mesh may come as the ``mesh=``
+        argument or on the options."""
         opts = _resolve_options(options, legacy, method="run_distributed",
                                 mesh=mesh)
         if opts.mesh is None:
@@ -444,6 +487,35 @@ class MapReduce:
         return self.lower(items, options=opts, mode="resilient"
                           ).optimize().compile()(items)
 
+    def serve(self, *, batch_capacity: int, window=None,
+              options: ExecutionOptions | None = None,
+              item_spec=None,
+              ckpt_dir: str | None = None, ckpt_every: int = 0,
+              keep_ckpts: int = 3):
+        """Stage this plan into a long-lived
+        :class:`repro.streaming.MapReduceService`.
+
+        The staged path runs once (``lower().optimize().compile()`` at
+        mode="streaming"); every subsequent ``service.ingest(items)`` is a
+        plain dispatch of the AOT ingest executable — no re-trace, no
+        re-tune, no re-compile.  Micro-batches of up to ``batch_capacity``
+        items fold incrementally into persistent holder tables;
+        ``window`` (a :class:`repro.streaming.Window`) bounds aggregation
+        to the trailing micro-batches; ``ckpt_dir``/``ckpt_every`` enable
+        periodic atomic table checkpoints for warm restarts
+        (:meth:`MapReduceService.restore`).
+
+        ``item_spec`` (a ShapeDtypeStruct pytree of ONE item) compiles the
+        ingest executable eagerly — required before ``restore()`` on a
+        fresh service; omitted, staging happens at the first ingest.
+        """
+        from repro.streaming import MapReduceService
+
+        return MapReduceService(
+            self, batch_capacity=batch_capacity, window=window,
+            options=options, item_spec=item_spec, ckpt_dir=ckpt_dir,
+            ckpt_every=ckpt_every, keep_ckpts=keep_ckpts)
+
     def explain(self) -> str:
         """The optimizer's decision record: flow, derived combiner, the
         autotuned tiling and any lowering diagnostics."""
@@ -457,7 +529,7 @@ class MapReduce:
 
 def _infer_mode(opts: ExecutionOptions, mode: str | None) -> str:
     if mode is not None:
-        if mode not in ("local", "distributed", "resilient"):
+        if mode not in ("local", "distributed", "resilient", "streaming"):
             raise ValueError(f"unknown execution mode {mode!r}")
         return mode
     return "local" if opts.mesh is None else "distributed"
@@ -580,6 +652,30 @@ class Optimized:
             return pc.CompiledEntry(executable=executable, plan=plan,
                                     tiling=mr.tiling, n_bucket=self.n_bucket,
                                     mode="local")
+        if self.mode == "streaming":
+            if plan.flow != "stream":
+                raise ValueError(
+                    f"streaming mode requires the stream flow (plan chose "
+                    f"{plan.flow!r}); construct MapReduce(app, "
+                    f"streaming=True) or flow='stream'")
+            pc.STATS.compiles += 1
+            sc, ingest = eng.build_stream_ingest(
+                mr.app, plan.spec, batch_items=self.n_bucket,
+                chunk_pairs=knobs["chunk_pairs"],
+                use_kernels=knobs["use_kernels"],
+                key_block=knobs["key_block"],
+                on_fallback=eng._plan_fallback_cb(plan))
+            state_spec = jax.eval_shape(sc.init_state)
+            # AOT: (state, padded items, n_valid) -> state.  One executable
+            # serves every micro-batch size in [0, batch_capacity] — the
+            # pad rows are masked to the sentinel key, contributing exact
+            # zero to the fold.
+            executable = jax.jit(ingest).lower(
+                state_spec, self.items_spec,
+                jax.ShapeDtypeStruct((), jnp.int32)).compile()
+            return pc.CompiledEntry(executable=executable, plan=plan,
+                                    tiling=mr.tiling, n_bucket=self.n_bucket,
+                                    mode="streaming", aux=sc)
         if self.mode == "distributed":
             pc.STATS.compiles += 1
             S = opts.mesh.shape[opts.data_axis]
@@ -656,6 +752,12 @@ class Compiled:
         self.plan = dataclasses.replace(entry.plan, stage="compiled")
 
     def __call__(self, items) -> MapReduceResult:
+        if self.mode == "streaming":
+            raise TypeError(
+                "a streaming-mode Compiled is an incremental ingest "
+                "executable, not a batch job — drive it through "
+                "MapReduceService (MapReduce.serve(...)) or via "
+                "init_state()/ingest_state()")
         if self.mode == "local":
             items = jax.tree.map(jnp.asarray, items)
             if self.n_bucket != self.n_items:
@@ -677,6 +779,27 @@ class Compiled:
         keys, values, counts, log = self._entry.executable(items)
         return MapReduceResult(keys, values, counts, plan=self.plan,
                                recovery=log)
+
+    # -- streaming-mode surface (driven by repro.streaming.MapReduceService)
+
+    def init_state(self):
+        """Fresh carried combiner state (streaming mode)."""
+        return self._entry.aux.init_state()
+
+    def ingest_state(self, state, items, n_valid):
+        """Fold one padded micro-batch into ``state`` (streaming mode).
+
+        Pure AOT dispatch: ``items`` must already be padded to the lowered
+        ``batch_capacity`` shape; ``n_valid`` masks the tail."""
+        return self._entry.executable(state, items, jnp.int32(n_valid))
+
+    def state_tables(self, state):
+        """Un-finalized ``(tables, counts)`` view of a carried state."""
+        return self._entry.aux.tables_counts(state)
+
+    def finalize_state(self, state):
+        """Finalized ``Grouped(keys, values, counts)`` of a carried state."""
+        return self._entry.aux.finalize(state)
 
     # -- XLA introspection pass-through (local AOT executables) -------------
 

@@ -255,7 +255,7 @@ def _stream_combiner(app, spec, *, use_kernels=False,
 
 
 def _fold_items_chunked(app, combiner, items, chunk_items: int,
-                        n_valid=None):
+                        n_valid=None, state=None):
     """Scan the item axis in chunks, folding each chunk into the carried
     collector state (shared scaffolding of the stream and sort flows).
 
@@ -265,10 +265,17 @@ def _fold_items_chunked(app, combiner, items, chunk_items: int,
     axis itself — the N-bucketed serving path (``Compiled``) pads inputs
     up to a shared bucket shape and passes the true count here, so one
     executable serves every batch size in the bucket.
+
+    ``state`` seeds the fold with an existing carried state instead of
+    ``combiner.init_state()`` — the continuous-ingestion path: a
+    micro-batch folds into the tables accumulated by all prior batches,
+    and because the per-chunk fold sequence is identical to a batch run
+    over the concatenated items, the result is bitwise the batch answer.
     """
     n_items = jax.tree.leaves(items)[0].shape[0]
     n_chunks = -(-n_items // chunk_items)
-    state = combiner.init_state()
+    if state is None:
+        state = combiner.init_state()
     if n_chunks <= 1:
         stream = map_phase(app, items)
         if n_valid is not None:
@@ -350,6 +357,48 @@ def run_local_stream(app, spec, items, *, chunk_pairs: int = DEFAULT_CHUNK_PAIRS
         n_valid=n_valid)
     grouped = col.finalize_tables(spec, tables, counts, app.key_space)
     return grouped.keys, grouped.values, grouped.counts
+
+
+def build_stream_ingest(app, spec, *, batch_items: int,
+                        chunk_pairs: int = DEFAULT_CHUNK_PAIRS,
+                        use_kernels: bool = False,
+                        key_block: int | None = None,
+                        fold_mode: str | None = None,
+                        on_fallback: Callable | None = None):
+    """Incremental-fold entry point for the streaming service.
+
+    Returns ``(combiner, ingest)`` where ``ingest(state, items, n_valid)``
+    folds one micro-batch (padded to ``batch_items``) into the carried
+    combiner state and returns the new state.  The function is pure and
+    shape-static, so the API layer AOT-compiles it once and every
+    subsequent micro-batch is a plain dispatch — no re-trace, no re-tune.
+
+    Exactness: the per-chunk fold sequence is exactly the one
+    :func:`stream_local_tables` runs over the concatenated items (same
+    combiner mode, same chunk size, same masking), so N sequential
+    ingests produce bitwise the tables of one batch run — the monoid
+    partials that made resilient recovery exact make merge-on-arrival
+    exact too.
+    """
+    cap = max(app.emit_capacity, 1)
+    chunk_items = max(1, min(batch_items, chunk_pairs // cap))
+    n_chunks = -(-batch_items // chunk_items)
+    if (n_chunks <= 1 and key_block is not None and not use_kernels
+            and spec.mxu_lowerable
+            and batch_items * cap <= col.ADDITIVE_FOLD_PAIRS_FUSED):
+        # mirror stream_local_tables: a single-shot fold inside the fused-
+        # contraction regime keeps the unblocked contraction on-chip
+        key_block = None
+    sc = _stream_combiner(app, spec, use_kernels=use_kernels,
+                          chunk_pairs=chunk_items * cap,
+                          key_block=key_block, fold_mode=fold_mode,
+                          on_fallback=on_fallback)
+
+    def ingest(state, items, n_valid):
+        return _fold_items_chunked(app, sc, items, chunk_items,
+                                   n_valid=n_valid, state=state)
+
+    return sc, ingest
 
 
 #: default bound on pairs materialized per sort-flow chunk.  The sort flow

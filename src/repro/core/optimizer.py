@@ -69,6 +69,17 @@ class Derivation:
         """
         return "stream" if self.spec is not None else "reduce"
 
+    @property
+    def mergeable_partials(self) -> bool:
+        """Whether two independently folded partial tables can be merged
+        exactly after the fact — ``spec.merge`` (monoid / synthesized
+        merge) or the Hadoop reapply contract.  This is the capability the
+        windowed streaming service keys on: per-window-slot partials are
+        merged at query time, so a derivation without it can still stream
+        globally (one carried table) but cannot serve windowed queries."""
+        return self.spec is not None and (self.spec.merge is not None
+                                          or self.spec.reapply_ok)
+
 
 def _key_sample(key_aval):
     if isinstance(key_aval, jax.ShapeDtypeStruct):

@@ -135,7 +135,8 @@ def flow_cost_report(app, spec: C.CombinerSpec, n_pairs_hint: int
 
 def plan_execution(app, *, flow: str = "auto",
                    trust_semantics: bool = False,
-                   n_pairs_hint: int | None = None) -> ExecutionPlan:
+                   n_pairs_hint: int | None = None,
+                   streaming: bool = False) -> ExecutionPlan:
     """Pick the execution flow.
 
     flow="auto" runs the optimizer and, when a combiner is derived, selects
@@ -146,9 +147,24 @@ def plan_execution(app, *, flow: str = "auto",
     on ``plan.cost``.  "stream" / "sort" / "combine" force the respective
     optimized flow (error if no combiner can be derived); "reduce" forces
     the paper's baseline.
+
+    ``streaming=True`` plans for continuous ingestion (the
+    ``MapReduceService`` path): the flow is pinned to "stream" — the only
+    flow whose carried holder tables can absorb micro-batches
+    incrementally — and a combiner MUST be derivable, since an unbounded
+    stream cannot be buffered for the baseline reduce flow.  Chunk sizing
+    is then the micro-batch shape itself (one fold per ingest), applied by
+    the service at the compile stage.
     """
     if flow not in FLOWS:
         raise ValueError(f"unknown flow {flow!r}")
+    if streaming:
+        if flow not in ("auto", "stream"):
+            raise ValueError(
+                f"streaming execution requires the stream flow (its carried "
+                f"holder tables are what micro-batches fold into); got "
+                f"flow={flow!r}")
+        flow = "stream"
     if flow == "reduce":
         return ExecutionPlan("reduce", None, None, reason="forced by user")
 
@@ -163,6 +179,11 @@ def plan_execution(app, *, flow: str = "auto",
         derived = derive_combiner(app.reduce, key_aval, app.value_aval,
                                   trust_semantics=trust_semantics)
         if not derived.combinable:
+            if streaming:
+                raise ValueError(
+                    f"streaming execution needs a derived combiner (an "
+                    f"unbounded stream cannot be buffered for the reduce "
+                    f"flow) but derivation failed: {derived.failure}")
             if flow in ("combine", "stream", "sort"):
                 raise ValueError(
                     f"{flow} flow forced but derivation failed: "
@@ -172,6 +193,8 @@ def plan_execution(app, *, flow: str = "auto",
         spec = derived.spec
         reason = f"derived ({derived.strategy})"
 
+    if streaming:
+        reason += "; streaming pins the stream flow"
     if flow != "auto":
         return ExecutionPlan(flow, derived, spec, reason=reason)
     if n_pairs_hint is not None:

@@ -244,7 +244,7 @@ def bucket_items(n: int, policy: str = "exact") -> int:
 def plan_key(app, *, flow: str, trust_semantics: bool,
              n_pairs_hint: int | None, use_kernels: bool,
              combine_impl: str, chunk_pairs, key_block,
-             autotune_probe: bool) -> str:
+             autotune_probe: bool, streaming: bool = False) -> str:
     """Key of the plan stage (derivation + flow selection + tiling) —
     everything :class:`MapReduce` resolves before it sees item shapes."""
     return _digest(
@@ -252,7 +252,8 @@ def plan_key(app, *, flow: str, trust_semantics: bool,
         f"flow={flow}", f"trust={trust_semantics}",
         f"hint={n_pairs_hint}", f"kern={use_kernels}",
         f"impl={combine_impl}", f"chunk={chunk_pairs}",
-        f"blk={key_block}", f"probe={autotune_probe}")
+        f"blk={key_block}", f"probe={autotune_probe}",
+        f"streaming={streaming}")
 
 
 def compiled_key(app, items_spec, *, plan_key: str, flow: str,

@@ -1,0 +1,21 @@
+"""Continuous-ingestion streaming service over the staged MapReduce plan.
+
+``MapReduce(app, streaming=True).serve(batch_capacity=...)`` stages the
+plan once and returns a :class:`MapReduceService`: micro-batches fold
+incrementally into persistent holder tables (bitwise the batch answer),
+with windowed aggregation (:func:`tumbling` / :func:`sliding`), live
+:meth:`~MapReduceService.snapshot` queries, and checkpointed warm
+restarts.  :class:`IngestionQueue` is the bounded background front end.
+"""
+
+from repro.streaming.ingest import IngestionQueue
+from repro.streaming.service import MapReduceService
+from repro.streaming.windows import Window, sliding, tumbling
+
+__all__ = [
+    "MapReduceService",
+    "IngestionQueue",
+    "Window",
+    "tumbling",
+    "sliding",
+]

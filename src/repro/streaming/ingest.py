@@ -1,0 +1,69 @@
+"""Bounded background ingestion front end for :class:`MapReduceService`.
+
+The telemetry-server shape: producers enqueue micro-batches, one worker
+thread drains the queue into ``service.ingest`` — so the service's
+single-writer lock is never contended and producers get **backpressure**
+(a full queue blocks ``put``) instead of unbounded buffering.  Snapshot
+queries run concurrently against the service; they never touch the queue.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class IngestionQueue:
+    """Single-consumer micro-batch queue feeding a MapReduceService.
+
+    ``put(items)`` enqueues (blocking when ``maxsize`` batches are
+    pending); the worker folds them in arrival order, preserving the
+    service's deterministic fold sequence.  A worker-side exception is
+    re-raised on the next ``put``/``join``/``close``.
+    """
+
+    def __init__(self, service, *, maxsize: int = 8):
+        self.service = service
+        self._q: queue.Queue = queue.Queue(maxsize=maxsize)
+        self._err: Exception | None = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            batch = self._q.get()
+            try:
+                if batch is None:
+                    return
+                if self._err is None:
+                    self.service.ingest(batch)
+            except Exception as e:  # surfaced on the producer side
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def put(self, items, *, timeout: float | None = None) -> None:
+        """Enqueue one micro-batch; blocks while the queue is full."""
+        self._raise_pending()
+        self._q.put(items, timeout=timeout)
+
+    @property
+    def pending(self) -> int:
+        """Batches enqueued but not yet folded (approximate)."""
+        return self._q.qsize()
+
+    def join(self) -> None:
+        """Block until every enqueued batch has been folded."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain, stop the worker and surface any pending error."""
+        self._q.put(None)
+        self._t.join()
+        self._raise_pending()

@@ -1,6 +1,6 @@
 """Staged execution surface: lower() -> optimize() -> compile() -> call,
-ExecutionOptions as the single options vocabulary, the legacy-kwarg
-deprecation shims, and explain() at every stage."""
+ExecutionOptions as the single options vocabulary, the retired
+legacy-kwarg surface (TypeError), and explain() at every stage."""
 
 import warnings
 
@@ -167,21 +167,19 @@ def test_run_resilient_staged(app, items):
     np.testing.assert_array_equal(want, np.asarray(got.values))
 
 
-def test_legacy_kwargs_warn_deprecation(app, items):
+def test_legacy_kwargs_raise_type_error(app, items):
+    """The PR 6 deprecation shim is retired: formerly-scattered kwargs now
+    fail fast with a pointer at ExecutionOptions instead of forwarding."""
     mr = MapReduce(app)
-    with pytest.warns(DeprecationWarning, match="ExecutionOptions"):
-        res = mr.run(items, strict_shuffle=False)
-    np.testing.assert_array_equal(np.asarray(mr.run(items).values),
-                                  np.asarray(res.values))
+    with pytest.raises(TypeError, match="ExecutionOptions"):
+        mr.run(items, strict_shuffle=False)
 
 
-def test_legacy_kwargs_still_apply(app, items):
+def test_legacy_kwargs_raise_on_distributed(app, items):
     mr = MapReduce(app)
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    with pytest.warns(DeprecationWarning):
-        got = mr.run_distributed(items, mesh=mesh, scatter_output=False)
-    np.testing.assert_array_equal(np.asarray(mr.run(items).values),
-                                  np.asarray(got.values))
+    with pytest.raises(TypeError, match="ExecutionOptions"):
+        mr.run_distributed(items, mesh=mesh, scatter_output=False)
 
 
 def test_unknown_kwarg_raises_type_error(app, items):

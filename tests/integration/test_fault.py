@@ -542,9 +542,10 @@ def test_resilient_elastic_remesh_8_to_4_mesh():
             print("ELASTIC_RESILIENT_OK", flow)
 
         # the thin API surface: MapReduce(...).run_resilient + explain
+        from repro.core import ExecutionOptions
         mr = MapReduce(app, flow="stream")
-        res = mr.run_resilient(toks, mesh=mesh,
-                               inject=flt.FaultInjection(dead_hosts=(1,)))
+        res = mr.run_resilient(toks, mesh=mesh, options=ExecutionOptions(
+            inject=flt.FaultInjection(dead_hosts=(1,))))
         want = np.bincount(np.asarray(toks).reshape(-1), minlength=VOCAB)
         assert np.array_equal(np.asarray(res.values), want)
         assert res.recovery.recomputed == [(1, 2)]
