@@ -11,9 +11,21 @@ Measures, per flow, the wall-clock of
 
 and reports the recovered fraction — the point of monoid partial-aggregate
 recovery is that losing 1 of H hosts costs ~1/H of the map phase, not a
-full restart.  Standalone: not part of the run.py presets (single-process
-timings of a simulated cluster are architecture numbers, not a perf
-trajectory to gate on).
+full restart.
+
+The durable control plane (distributed/coordination.py) adds two rows:
+
+  * ``failover_adopt_ledger``   lease adoption + recovery-ledger load from
+                                a FileKVStore — the store round-trip a
+                                failover coordinator pays before phase B,
+  * ``resilient_*_coordinator_kill``  a full kill-the-coordinator chaos
+                                drill (lease lapse, re-election, ledger
+                                adoption, restore-or-recompute) vs the
+                                clean coordinated run.
+
+Wired into run.py's MODULE_NAMES: the wall-clock rows gate generously
+(single-process timings of a simulated cluster are architecture numbers),
+but recovery-time and failover-latency belong on the perf trajectory.
 
 Usage:  PYTHONPATH=src python benchmarks/bench_resilience.py
 """
@@ -39,6 +51,8 @@ import numpy as np
 from benchmarks.common import bench_scale, row
 from repro.core import MapReduceApp, plan_execution
 from repro.core import engine as eng
+from repro.distributed import chaos as chaoslib
+from repro.distributed import coordination as coordlib
 from repro.distributed import fault as flt
 
 
@@ -53,6 +67,27 @@ class WC(MapReduceApp):
 
     def reduce(self, key, values, count):
         return jnp.sum(values)
+
+
+def _bench_failover_latency(hosts: int, shards: int) -> None:
+    """Lease adoption + ledger load through a FileKVStore: the durable
+    store round-trip a failover coordinator pays before resuming phase B
+    (the compute side of failover is the restore/recompute rows below)."""
+    reps = 5
+    total = 0.0
+    for _ in range(reps):
+        with tempfile.TemporaryDirectory() as d:
+            store = coordlib.CoordinationStore(d, lease_ttl_s=60.0)
+            for s in range(shards):  # the dead coordinator's ledger
+                store.record_shard(s, host=s % hosts, step=0)
+            t0 = time.perf_counter()
+            # host 0 (the old coordinator) is dead: 1 adopts + reads
+            lease = store.adopt(1, range(1, hosts))
+            ledger = store.load_ledger(0)
+            total += time.perf_counter() - t0
+            assert lease is not None and len(ledger) == shards
+    print(row("failover_adopt_ledger", total / reps * 1e6,
+              f"shards={shards} store=file"))
 
 
 def _time_once(fn) -> float:
@@ -76,13 +111,14 @@ def main():
     app = WC()
     print("# bench_resilience: recovery cost vs restart "
           f"(n_items={n_items}, hosts={hosts})")
+    _bench_failover_latency(hosts, shards=64)
 
     for flow in ("stream", "sort", "reduce"):
-        def run(inject=None, ckpt_dir=None, flow=flow):
+        def run(inject=None, ckpt_dir=None, chaos=None, flow=flow):
             plan = plan_execution(app, flow=flow)
             return eng.run_resilient(app, plan, toks, num_hosts=hosts,
                                      num_shards=hosts, inject=inject,
-                                     ckpt_dir=ckpt_dir)
+                                     ckpt_dir=ckpt_dir, chaos=chaos)
 
         t_clean = _time_once(lambda: run())
         t_kill = _time_once(
@@ -92,6 +128,12 @@ def main():
             t_restore = _time_once(
                 lambda: run(inject=flt.FaultInjection(dead_hosts=(3,)),
                             ckpt_dir=d))
+        with tempfile.TemporaryDirectory() as d:
+            run(ckpt_dir=d)  # fresh seed for the chaos drill
+            t_failover = _time_once(
+                lambda: run(ckpt_dir=d,
+                            chaos=chaoslib.ChaosPlan()
+                            .kill_coordinator(after=1)))
         t_restart = t_clean + t_kill  # lose the run, start over, then pay
         # the failed attempt too — the floor a restart policy pays
 
@@ -100,6 +142,8 @@ def main():
                   f"recompute_overhead={t_kill / t_clean:.2f}x_clean"))
         print(row(f"resilient_{flow}_restore1of{hosts}", t_restore * 1e6,
                   f"restore_overhead={t_restore / t_clean:.2f}x_clean"))
+        print(row(f"resilient_{flow}_coordinator_kill", t_failover * 1e6,
+                  f"failover_overhead={t_failover / t_clean:.2f}x_clean"))
         print(row(f"resilient_{flow}_restart_floor", t_restart * 1e6,
                   f"recovery_saves={t_restart / max(t_kill, 1e-9):.2f}x"))
 

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   bench_scalability       Fig 5     (scaling -> collective-bytes scaling)
   bench_integrations      beyond paper (grad-accum / MoE / decode combiners)
   bench_streaming         beyond paper (continuous-ingestion service)
+  bench_resilience        beyond paper (recovery time, failover latency)
 
 A module that raises prints a ``*_FAILED`` row and the harness exits
 non-zero at the end, so CI can gate on benchmark health.  ``--json PATH``
@@ -41,6 +42,7 @@ MODULE_NAMES = (
     "bench_scalability",
     "bench_integrations",
     "bench_streaming",
+    "bench_resilience",
 )
 
 CI_SCALE = 0.05

@@ -1,16 +1,34 @@
-"""Sharded, atomic, async checkpoints with restore-time resharding.
+"""Sharded, atomic, async, CHECKSUMMED checkpoints with resharding restore.
 
 Layout:  <dir>/step_<N>/
-            manifest.json       tree structure, shapes, dtypes, step
+            manifest.json       tree structure, shapes, dtypes, step,
+                                checksum {algo, arrays}
+            manifest.crc        <algo>:<hex crc of manifest.json bytes>
             arrays.npz          flat leaf arrays (leaf_<i>)
          <dir>/LATEST           text file naming the newest complete step
+         <dir>/step_<N>.corrupt quarantined checkpoint (failed verification)
 
 Writes go to ``step_<N>.tmp`` then ``os.replace`` (atomic on POSIX) — a
-crashed writer never corrupts LATEST.  ``AsyncCheckpointer`` runs saves on a
-writer thread so the train loop is not blocked (fault-tolerance posture:
-checkpoint/restart is the recovery mechanism for node failures; see
-distributed/fault.py).  ``restore(..., shardings=...)`` device_puts straight
-into the (possibly different) mesh — elastic restarts reshard here.
+crashed writer never corrupts LATEST.  Atomic rename protects against a
+*crashed writer*; it cannot protect against bit rot, a torn copy from a
+remote store, or a byzantine disk — so every payload carries a CRC
+(crc32c when the wheel is available, else zlib's crc32; the algorithm is
+recorded in the manifest so readers verify with whatever wrote it).
+
+``verify_step`` checks manifest + payload integrity; a failed check raises
+``CheckpointCorruptError`` naming the step and path.  ``restore`` with an
+explicit step quarantines a corrupt checkpoint (renamed to ``*.corrupt``
+for post-mortem, never deleted) and raises; ``restore(step=None)`` walks
+candidates newest-first, quarantining corrupt ones, and restores the
+newest VALID checkpoint — the recovery caller (engine.run_resilient /
+MapReduceService) then recomputes anything newer from its shards, which
+the monoid semantics make bitwise-exact.
+
+``AsyncCheckpointer`` runs saves on a writer thread so the train loop is
+not blocked (fault-tolerance posture: checkpoint/restart is the recovery
+mechanism for node failures; see distributed/fault.py).
+``restore(..., shardings=...)`` device_puts straight into the (possibly
+different) mesh — elastic restarts reshard here.
 """
 
 from __future__ import annotations
@@ -19,10 +37,57 @@ import json
 import os
 import queue
 import threading
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
+
+try:  # pragma: no cover - exercised only where the wheel exists
+    from crc32c import crc32c as _crc_fn
+    CRC_ALGO = "crc32c"
+except ImportError:
+    _crc_fn = zlib.crc32
+    CRC_ALGO = "crc32"
+
+_ALGOS = {"crc32": zlib.crc32, "crc32c": _crc_fn if CRC_ALGO == "crc32c"
+          else None}
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (torn write, bit rot,
+    truncated copy).  Carries the offending ``step`` and ``path`` so the
+    operator knows exactly which artifact to inspect (it is quarantined
+    to ``<path>.corrupt``, never silently deleted)."""
+
+    def __init__(self, reason: str, *, step: int | None = None,
+                 path: str | None = None):
+        msg = f"corrupt checkpoint at step {step} ({path}): {reason}"
+        super().__init__(msg)
+        self.step = step
+        self.path = path
+        self.reason = reason
+
+
+def _crc_bytes(data: bytes, algo: str = CRC_ALGO) -> int:
+    fn = _ALGOS.get(algo)
+    if fn is None:  # recorded by an algo we can't compute -> skip check
+        return -1
+    return fn(data) & 0xFFFFFFFF
+
+
+def _crc_file(path: str, algo: str = CRC_ALGO) -> int:
+    fn = _ALGOS.get(algo)
+    if fn is None:
+        return -1
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                break
+            crc = fn(chunk, crc)
+    return crc & 0xFFFFFFFF
 
 
 def _flatten(tree):
@@ -38,16 +103,21 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
     os.makedirs(tmp, exist_ok=True)
 
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    apath = os.path.join(tmp, "arrays.npz")
+    np.savez(apath, **arrays)
     manifest = {
         "step": step,
         "treedef": str(treedef),
         "num_leaves": len(leaves),
         "shapes": [list(np.shape(a)) for a in arrays.values()],
         "dtypes": [str(np.asarray(a).dtype) for a in arrays.values()],
+        "checksum": {"algo": CRC_ALGO, "arrays": _crc_file(apath)},
     }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    body = json.dumps(manifest).encode()
+    with open(os.path.join(tmp, "manifest.json"), "wb") as f:
+        f.write(body)
+    with open(os.path.join(tmp, "manifest.crc"), "w") as f:
+        f.write(f"{CRC_ALGO}:{_crc_bytes(body):08x}\n")
     if os.path.exists(final):
         import shutil
 
@@ -61,11 +131,26 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
     return final
 
 
+def _step_dirs(ckpt_dir: str) -> list[int]:
+    """Step numbers of the complete (non-tmp, non-quarantined) checkpoint
+    dirs — robust to ``step_<N>.corrupt`` neighbors and stray files."""
+    out = []
+    try:
+        names = os.listdir(ckpt_dir)
+    except FileNotFoundError:
+        return []
+    for d in names:
+        if not d.startswith("step_") or d.endswith((".tmp", ".corrupt")):
+            continue
+        try:
+            out.append(int(d.split("_", 1)[1]))
+        except ValueError:
+            continue
+    return sorted(out)
+
+
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(
-        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and not d.endswith(".tmp"))
-    for s in steps[:-keep]:
+    for s in _step_dirs(ckpt_dir)[:-keep]:
         import shutil
 
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
@@ -74,9 +159,81 @@ def _gc(ckpt_dir: str, keep: int):
 def has_step(ckpt_dir: str, step: int) -> bool:
     """Whether a COMPLETE checkpoint for ``step`` exists (the atomic
     ``os.replace`` means a present ``step_<N>`` directory is never a torn
-    write).  Used by the resilient MapReduce driver to decide between
-    restoring a shard's partial aggregate and re-executing the shard."""
+    write — but it may still fail checksum verification; see
+    ``verify_step``).  Used by the resilient MapReduce driver to decide
+    between restoring a shard's partial aggregate and re-executing."""
     return os.path.isdir(os.path.join(ckpt_dir, f"step_{step}"))
+
+
+def verify_step(ckpt_dir: str, step: int) -> None:
+    """Integrity-check one checkpoint; raises ``CheckpointCorruptError``
+    (naming the step and path) on a torn, truncated, or bit-rotted
+    artifact.  Checkpoints written before the checksum layer (no
+    ``checksum`` manifest field) are accepted — the payload zip's own
+    per-member CRCs still guard the actual array reads."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    if not os.path.isdir(d):
+        raise FileNotFoundError(f"no checkpoint for step {step} under "
+                                f"{ckpt_dir}")
+    mpath = os.path.join(d, "manifest.json")
+    apath = os.path.join(d, "arrays.npz")
+    for p, what in ((mpath, "manifest.json"), (apath, "arrays.npz")):
+        if not os.path.exists(p):
+            raise CheckpointCorruptError(f"missing {what} (torn write)",
+                                         step=step, path=d)
+    with open(mpath, "rb") as f:
+        body = f.read()
+    cpath = os.path.join(d, "manifest.crc")
+    if os.path.exists(cpath):
+        with open(cpath) as f:
+            rec = f.read().strip()
+        try:
+            algo, hexcrc = rec.split(":", 1)
+            want = int(hexcrc, 16)
+        except ValueError:
+            raise CheckpointCorruptError(
+                f"unparseable manifest.crc {rec!r}", step=step, path=d)
+        got = _crc_bytes(body, algo)
+        if got != -1 and got != want:
+            raise CheckpointCorruptError(
+                f"manifest checksum mismatch ({algo} {got:08x} != "
+                f"{want:08x})", step=step, path=d)
+    try:
+        manifest = json.loads(body.decode())
+    except (ValueError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"unparseable manifest (torn write?): {e}", step=step, path=d)
+    ck = manifest.get("checksum")
+    if ck:
+        algo = ck.get("algo", "crc32")
+        got = _crc_file(apath, algo)
+        want = int(ck.get("arrays", -1))
+        if got != -1 and got != want:
+            raise CheckpointCorruptError(
+                f"payload checksum mismatch ({algo} {got:08x} != "
+                f"{want:08x})", step=step, path=d)
+
+
+def has_valid_step(ckpt_dir: str, step: int) -> bool:
+    """``has_step`` plus checksum verification, without raising."""
+    try:
+        verify_step(ckpt_dir, step)
+    except (CheckpointCorruptError, FileNotFoundError):
+        return False
+    return True
+
+
+def quarantine_step(ckpt_dir: str, step: int) -> str:
+    """Move a corrupt checkpoint aside to ``step_<N>.corrupt`` for
+    post-mortem (never deleted by ``_gc``); returns the new path."""
+    src = os.path.join(ckpt_dir, f"step_{step}")
+    dst = src + ".corrupt"
+    if os.path.exists(dst):
+        import shutil
+
+        shutil.rmtree(dst, ignore_errors=True)
+    os.replace(src, dst)
+    return dst
 
 
 def shard_partial_dir(ckpt_dir: str, shard: int) -> str:
@@ -104,20 +261,76 @@ def latest_step(ckpt_dir: str) -> int | None:
         return int(f.read().strip())
 
 
+def _load_leaves(ckpt_dir: str, step: int) -> list[np.ndarray]:
+    """Verify + read one checkpoint's leaf arrays; any read failure is a
+    ``CheckpointCorruptError`` naming the step and path (np.load on a
+    truncated zip raises cryptic internals otherwise)."""
+    verify_step(ckpt_dir, step)
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    try:
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            return [z[f"leaf_{i}"] for i in range(len(z.files))]
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"unreadable arrays.npz ({type(e).__name__}: {e})",
+            step=step, path=d)
+
+
 def restore(ckpt_dir: str, example_tree: Any, *, step: int | None = None,
             shardings: Any = None) -> tuple[Any, int]:
     """Restore into the structure of ``example_tree`` (avals ok).
+
+    With an explicit ``step``: a corrupt checkpoint is quarantined to
+    ``step_<N>.corrupt`` and ``CheckpointCorruptError`` (naming step and
+    path) propagates.  With ``step=None``: candidates are tried
+    newest-first (LATEST, then the step-dir scan); corrupt ones are
+    quarantined and skipped, and the newest VALID checkpoint is restored
+    — a torn newest write therefore degrades to the previous snapshot
+    instead of crashing the restart path.
 
     ``shardings``: optional pytree of NamedShardings — leaves are
     device_put with them, which RESHARDS onto whatever mesh they name
     (elastic restart path).
     """
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step}")
-    with np.load(os.path.join(d, "arrays.npz")) as z:
-        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    if step is not None:
+        try:
+            leaves = _load_leaves(ckpt_dir, step)
+        except CheckpointCorruptError:
+            if has_step(ckpt_dir, step):
+                quarantine_step(ckpt_dir, step)
+            raise
+    else:
+        latest = latest_step(ckpt_dir)
+        candidates = sorted(set(_step_dirs(ckpt_dir))
+                            | ({latest} if latest is not None else set()),
+                            reverse=True)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        leaves = None
+        for cand in candidates:
+            try:
+                leaves = _load_leaves(ckpt_dir, cand)
+            except FileNotFoundError:
+                continue
+            except CheckpointCorruptError as e:
+                if has_step(ckpt_dir, cand):
+                    q = quarantine_step(ckpt_dir, cand)
+                    import warnings
+
+                    warnings.warn(
+                        f"skipping corrupt checkpoint step {cand} "
+                        f"(quarantined to {q}): {e.reason}; falling back "
+                        f"to the newest valid checkpoint", RuntimeWarning,
+                        stacklevel=2)
+                continue
+            step = cand
+            break
+        if leaves is None:
+            raise FileNotFoundError(
+                f"no VALID checkpoint under {ckpt_dir} "
+                f"(candidates {candidates} all corrupt or missing)")
     _, treedef = _flatten(example_tree)
     if shardings is not None:
         shard_leaves = jax.tree_util.tree_flatten(shardings)[0]

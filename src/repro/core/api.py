@@ -124,7 +124,8 @@ class ExecutionOptions:
     ``shuffle_capacity``/``strict_shuffle`` govern the all-to-all
     overflow envelope.  Resilience (``run_resilient``): ``num_hosts`` /
     ``num_shards`` / ``ckpt_dir`` / ``step`` / ``inject`` / ``timeout_s``
-    / ``straggler_lag``.  Serving: ``items_bucket="pow2"`` pads the batch
+    / ``straggler_lag``, plus the durable control plane ``coord`` /
+    ``retry`` / ``chaos``.  Serving: ``items_bucket="pow2"`` pads the batch
     axis to the next power of two so nearby batch sizes share one compiled
     executable (pad rows are masked out; local runs only);
     ``cache=False`` bypasses the content-keyed plan/executable cache.
@@ -144,6 +145,14 @@ class ExecutionOptions:
     inject: Any = None
     timeout_s: float = 60.0
     straggler_lag: int = 1
+    #: durable control plane (coordination.CoordinationStore | KVStore |
+    #: path); defaults to <ckpt_dir>/coord when chaos/retry ask for one.
+    coord: Any = None
+    #: coordination.RetryPolicy bounding store/restore ops (deterministic
+    #: capped backoff; every retry lands on plan.recovery).
+    retry: Any = None
+    #: chaos.ChaosPlan multi-fault drill script.
+    chaos: Any = None
     # lowering overrides (None -> the MapReduce constructor's choice)
     combine_impl: str | None = None
     use_kernels: bool | None = None
@@ -491,7 +500,7 @@ class MapReduce:
               options: ExecutionOptions | None = None,
               item_spec=None,
               ckpt_dir: str | None = None, ckpt_every: int = 0,
-              keep_ckpts: int = 3):
+              keep_ckpts: int = 3, retry_policy=None):
         """Stage this plan into a long-lived
         :class:`repro.streaming.MapReduceService`.
 
@@ -514,7 +523,8 @@ class MapReduce:
         return MapReduceService(
             self, batch_capacity=batch_capacity, window=window,
             options=options, item_spec=item_spec, ckpt_dir=ckpt_dir,
-            ckpt_every=ckpt_every, keep_ckpts=keep_ckpts)
+            ckpt_every=ckpt_every, keep_ckpts=keep_ckpts,
+            retry_policy=retry_policy)
 
     def explain(self) -> str:
         """The optimizer's decision record: flow, derived combiner, the
@@ -712,7 +722,8 @@ class Optimized:
                 chunk_pairs=opts.chunk_pairs, key_block=opts.key_block,
                 bucket_size=opts.bucket_size,
                 level_fanouts=opts.level_fanouts,
-                strict_shuffle=opts.strict_shuffle)
+                strict_shuffle=opts.strict_shuffle,
+                coord=opts.coord, retry=opts.retry, chaos=opts.chaos)
 
         return pc.CompiledEntry(executable=drive, plan=plan,
                                 tiling=mr.tiling, n_bucket=self.n_bucket,

@@ -1131,6 +1131,9 @@ def run_resilient(
     bucket_size: int | None = None,
     level_fanouts: tuple[int, ...] | None = None,
     strict_shuffle: bool = False,
+    coord=None,
+    retry=None,
+    chaos=None,
 ):
     """Fault-tolerant distributed MapReduce driver.
 
@@ -1166,15 +1169,39 @@ def run_resilient(
     returned as a :class:`fault.RecoveryLog` and summarized onto
     ``plan.recovery`` (see ``MapReduce.explain()``).
 
+    **Durable control plane** — with ``coord`` set (a
+    ``coordination.CoordinationStore``, a ``KVStore``, or a directory
+    path) or a ``chaos`` plan given, the control plane moves onto the
+    durable store: heartbeats become ``hosts/<h>`` records, the
+    coordinator holds a ``lease`` (``coordination.elect`` — lowest live
+    rank — is the only host allowed to adopt an expired one), and every
+    completed shard lands in the durable ``ledger/``.  If the
+    coordinator dies, the lowest-ranked survivor adopts the lease AND
+    the ledger from the store and resumes phase B from the durable
+    per-shard partials — bitwise-identical, because partials are pure
+    functions of their shards.  ``retry`` (a
+    ``coordination.RetryPolicy``) bounds every store read/write and
+    shard restore with a deterministic capped backoff; every retry,
+    lease adoption, quarantine, and partition event is recorded onto
+    ``plan.recovery`` — no silent retries.  ``chaos`` (a
+    ``chaos.ChaosPlan``) scripts multi-fault drills on top:
+    kill-coordinator, corrupt-checkpoint-N (detected by the checksum
+    layer, quarantined to ``*.corrupt``, recovered by deterministic
+    recompute), partition-host, delayed-store, stragglers.
+
     Returns ``(keys, values, counts, log)`` where the first three are
     bitwise what the fault-free ``run_distributed`` produces on a
     ``num_shards``-wide mesh: stream/combine results span the full key
     space; reduce/sort results are the key-range-concatenated
     ``ceil(K/S)*S`` layout.
     """
+    import os
+
     import numpy as np
 
     from repro.checkpoint import ckpt
+    from repro.distributed import chaos as chaoslib
+    from repro.distributed import coordination as coordlib
     from repro.distributed import fault as flt
 
     inject = inject if inject is not None else flt.FaultInjection()
@@ -1229,22 +1256,92 @@ def run_resilient(
     partial_example = jax.eval_shape(_partial, shard_slice(0))
 
     def save_partial(s: int, p) -> None:
-        if ckpt_dir is not None:
+        if ckpt_dir is None:
+            return
+
+        def _save():
             ckpt.save(ckpt.shard_partial_dir(ckpt_dir, s), step, p)
 
+        if coord is not None:
+            coord.retried(f"save shard {s} partial", _save, kind="ckpt")
+        else:
+            _save()
+
     def try_restore(s: int):
+        """Restore a shard's durable partial; a checksum failure is
+        quarantined and logged, and the caller falls back to the
+        deterministic recompute (bitwise-identical by construction)."""
         if ckpt_dir is None:
             return None
         d = ckpt.shard_partial_dir(ckpt_dir, s)
         if not ckpt.has_step(d, step):
             return None
-        tree, _ = ckpt.restore(d, partial_example, step=step)
+
+        def _load():
+            return ckpt.restore(d, partial_example, step=step)
+
+        try:
+            if coord is not None:
+                tree, _ = coord.retried(f"restore shard {s} partial",
+                                        _load, kind="ckpt")
+            else:
+                tree, _ = _load()
+        except ckpt.CheckpointCorruptError as e:
+            log.corrupt.append(s)
+            events.append(
+                f"checkpoint: shard {s} partial failed verification "
+                f"({e.reason}); quarantined, falling back to "
+                f"deterministic recompute")
+            return None
         return tree
 
-    # -- phase A: primary execution under the stateless assignment ----------
+    # -- durable control plane: coordination store + chaos resolution -------
     log = flt.RecoveryLog(num_hosts=H, num_shards=S, step=step)
     clock = flt.StepClock()
-    mon = flt.HeartbeatMonitor(H, timeout_s=timeout_s, clock=clock)
+    coordinated = (coord is not None or chaos is not None
+                   or retry is not None)
+    lease = None
+    partitioned: set[int] = set()
+    if coordinated:
+        if isinstance(coord, coordlib.CoordinationStore):
+            coord.clock = clock  # rebind onto the drill's synthetic clock
+            coord.sleep = clock.advance
+            if retry is not None:
+                coord.retry = retry
+        else:
+            if isinstance(coord, coordlib.KVStore):
+                kv = coord
+            elif isinstance(coord, str):
+                kv = coordlib.FileKVStore(coord)
+            elif ckpt_dir is not None:
+                kv = coordlib.FileKVStore(os.path.join(ckpt_dir, "coord"))
+            else:
+                kv = coordlib.MemKVStore()
+            coord = coordlib.CoordinationStore(
+                kv, retry=retry, lease_ttl_s=timeout_s,
+                clock=clock, sleep=clock.advance)
+        events = coord.events
+        coordinator = coordlib.elect(range(H))
+        if chaos is not None:
+            inject = chaos.resolve_injection(inject, coordinator)
+            partitioned = set(chaos.partition_hosts)
+            if chaos.store_fail_ops:
+                coord.inject_store_faults(chaos.store_fail_ops,
+                                          chaos.store_fail_kinds)
+            for line in chaos.describe():
+                events.append(f"chaos: {line}")
+        mon = coordlib.DurableHeartbeatMonitor(
+            coord, H, timeout_s=timeout_s, clock=clock)
+        for ph in partitioned:
+            mon.partition(ph)
+        lease = coord.adopt(coordinator, range(H))
+        log.coordinator = coordinator
+    else:
+        coord = None
+        events = []
+        mon = flt.HeartbeatMonitor(H, timeout_s=timeout_s, clock=clock)
+
+    # -- phase A: primary execution under the stateless assignment ----------
     dead_script = set(inject.dead_hosts)
     strag_script = set(inject.straggler_hosts)
     owner = {s: h for h in range(H)
@@ -1260,6 +1357,15 @@ def run_resilient(
             if h in strag_script:
                 mon.beat(h, step=0)  # alive, but no progress this round
                 continue
+            if h in partitioned:
+                # the host keeps computing, but nothing it does reaches
+                # the cluster: beats, checkpoints, and partials are all
+                # dropped at the transport — survivors must recover its
+                # shards as if it were dead
+                partial_fn(shard_slice(s))
+                progress[h] = j + 1
+                mon.beat(h, step=progress[h])  # dropped by the monitor
+                continue
             p = partial_fn(shard_slice(s))
             if h not in dead_script or inject.checkpoint_survives:
                 save_partial(s, p)
@@ -1267,6 +1373,10 @@ def run_resilient(
                 # a dying host's in-memory partial dies with it; only the
                 # checkpoint (if any) outlives the crash
                 partials[s] = p
+            if coord is not None:
+                # the worker itself writes the durable ledger record, so
+                # the recovery log survives a coordinator death
+                coord.record_shard(s, h, step)
             computed_by[s] = h
             log.computed.append((s, h))
             progress[h] = j + 1
@@ -1278,17 +1388,56 @@ def run_resilient(
     # step S — under an uneven S/H split the floor-count hosts legitimately
     # complete fewer shards than the ceil-count ones, and must not read as
     # stragglers for it --------------------------------------------------
+    # -- chaos: corrupt durable partials (and the memory that held them) --
+    if chaos is not None and chaos.corrupt_shards:
+        for s in chaos.corrupt_shards:
+            partials.pop(s, None)  # holder's memory died with the event
+            if ckpt_dir is None:
+                continue
+            if chaoslib.corrupt_shard_partial(ckpt_dir, s, step) is None:
+                continue
+            d = ckpt.shard_partial_dir(ckpt_dir, s)
+            try:
+                ckpt.verify_step(d, step)
+            except ckpt.CheckpointCorruptError as e:
+                ckpt.quarantine_step(d, step)
+                log.corrupt.append(s)
+                events.append(
+                    f"checkpoint: shard {s} partial failed verification "
+                    f"({e.reason}); quarantined to *.corrupt, "
+                    f"deterministic recompute scheduled")
+
     clock.advance(mon.timeout_s + mon.grace_s + 1.0)
     for h in range(H):
         if h not in dead_script:
             owned = len(flt.shard_for(step, h, H, S))
             mon.beat(h, step=(S if progress[h] >= owned else progress[h]))
+            if (lease is not None and h == lease.holder
+                    and h not in partitioned):
+                lease = coord.renew(lease)  # healthy coordinator holds on
     detected_dead = mon.dead_hosts()
     detected_strag = mon.stragglers(lag=straggler_lag)
     log.dead_hosts = list(detected_dead)
     log.straggler_hosts = list(detected_strag)
     alive = mon.alive_hosts()
     backup_pool = [a for a in alive if a not in set(detected_strag)] or alive
+
+    # -- lease failover: if the coordinator's lease lapsed (holder dead or
+    # partitioned), the lowest-ranked survivor adopts the lease AND the
+    # durable ledger, and resumes phase B from the store's partials -------
+    if coord is not None and alive:
+        cur = coord.lease()
+        now = clock()
+        if cur is not None and (cur.holder not in alive
+                                or cur.expires_at <= now):
+            new_holder = coordlib.elect(alive)
+            lease = coord.adopt(new_holder, alive)
+            ledger = coord.load_ledger(step)
+            log.failover = (cur.holder, new_holder, lease.epoch)
+            events.append(
+                f"failover: host {new_holder} adopted the recovery "
+                f"ledger ({len(ledger)} durable shard records) at epoch "
+                f"{lease.epoch}; resuming phase B from durable partials")
 
     def recover(s: int, failed_host: int, ledger: list) -> None:
         backup, _ = flt.backup_assignment(step, failed_host, H, S,
@@ -1405,5 +1554,7 @@ def run_resilient(
         counts = jnp.concatenate([o[2] for o in outs])
 
     log.final_mesh = final_mesh
+    log.partitioned = sorted(partitioned)
+    log.store_events = tuple(events)
     plan.recovery += tuple(log.summary())
     return keys, values, counts, log

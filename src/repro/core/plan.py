@@ -45,9 +45,13 @@ class ExecutionPlan:
     diagnostics: tuple[str, ...] = ()
     #: fault-recovery events from ``engine.run_resilient`` — which shards
     #: were restored from checkpointed partials, recomputed on backup
-    #: ranks, or speculatively re-executed, and any elastic remesh.  The
-    #: monoid-merge recovery argument makes these pure bookkeeping: the
-    #: answer is bitwise the no-failure one.
+    #: ranks, or speculatively re-executed, and any elastic remesh; plus
+    #: the durable control plane's provenance: lease elections and
+    #: failovers (which host adopted coordination, at what epoch), every
+    #: store retry with the backoff delay taken (no silent retries), and
+    #: checksum quarantines of corrupt checkpoints.  The monoid-merge
+    #: recovery argument makes these pure bookkeeping: the answer is
+    #: bitwise the no-failure one.
     recovery: tuple[str, ...] = ()
     #: staged-compilation bookkeeping (api.Lowered/Optimized/Compiled):
     #: the furthest stage this plan has reached, the content cache key it

@@ -48,7 +48,21 @@ def best_mesh(devices=None, *, model_parallel: int | None = None,
     return Mesh(arr, axis_names)
 
 
-def elastic_restore(ckpt_dir: str, example_tree, mesh, *, fsdp: bool = True):
-    """Restore LATEST resharded onto ``mesh``. Returns (tree, step)."""
+def elastic_restore(ckpt_dir: str, example_tree, mesh, *, fsdp: bool = True,
+                    retry=None):
+    """Restore the newest VALID checkpoint resharded onto ``mesh``
+    (corrupt snapshots are quarantined and skipped by the checksum layer
+    in ckpt.restore).  Returns (tree, step).
+
+    ``retry``: optional ``coordination.RetryPolicy`` — a flaky store read
+    is retried on its bounded deterministic backoff schedule instead of
+    failing the whole elastic restart.
+    """
     shardings = shd.param_shardings(example_tree, mesh, fsdp=fsdp)
-    return ckpt.restore(ckpt_dir, example_tree, shardings=shardings)
+
+    def _load():
+        return ckpt.restore(ckpt_dir, example_tree, shardings=shardings)
+
+    if retry is None:
+        return _load()
+    return retry.call(_load, op=f"elastic restore from {ckpt_dir}")

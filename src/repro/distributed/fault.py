@@ -216,6 +216,18 @@ class RecoveryLog:
     shuffle_overflow: tuple = ()
     #: the mesh run_resilient ended on (None when driven mesh-less).
     final_mesh: Any = None
+    #: lease holder elected at the start of a coordinated run, else None.
+    coordinator: int | None = None
+    #: (old_holder, new_holder, epoch) when the lease failed over.
+    failover: tuple | None = None
+    #: shards whose durable partials failed checksum verification and
+    #: were quarantined to ``*.corrupt`` then recomputed.
+    corrupt: list = dataclasses.field(default_factory=list)
+    #: hosts whose beats/writes a chaos partition dropped at the wire.
+    partitioned: list = dataclasses.field(default_factory=list)
+    #: raw control-plane event lines (retries, backoffs, lease adoptions,
+    #: quarantines) from the CoordinationStore — no silent retries.
+    store_events: tuple = ()
 
     def summary(self) -> tuple[str, ...]:
         """Human-readable recovery events for ``plan.recovery``."""
@@ -223,6 +235,26 @@ class RecoveryLog:
             f"resilient run: {self.num_shards} shards over "
             f"{self.num_hosts} hosts at step {self.step}; "
             f"{len(self.computed)} computed in the primary phase"]
+        if self.coordinator is not None and self.failover is None:
+            lines.append(
+                f"coordinator: host {self.coordinator} held the lease "
+                f"for the whole run")
+        if self.failover is not None:
+            old, new, epoch = self.failover
+            lines.append(
+                f"failover: coordinator {old} lost the lease; host {new} "
+                f"adopted the durable ledger at epoch {epoch} and "
+                f"resumed phase B from checkpointed partials")
+        if self.partitioned:
+            lines.append(
+                f"partitioned hosts {sorted(self.partitioned)}: beats and "
+                f"writes dropped at the transport; shards recovered on "
+                f"live ranks")
+        if self.corrupt:
+            lines.append(
+                f"corrupt checkpoints: shards {sorted(self.corrupt)} "
+                f"failed checksum verification, quarantined to *.corrupt "
+                f"and recomputed deterministically")
         if self.dead_hosts:
             lines.append(
                 f"detected dead hosts {sorted(self.dead_hosts)}; "
@@ -247,4 +279,5 @@ class RecoveryLog:
             lines.append(
                 f"shuffle overflow: {total_ovf} pairs past capacity "
                 f"(per-shard {tuple(int(x) for x in self.shuffle_overflow)})")
+        lines.extend(self.store_events)
         return tuple(lines)

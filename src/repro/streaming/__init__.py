@@ -5,16 +5,24 @@ plan once and returns a :class:`MapReduceService`: micro-batches fold
 incrementally into persistent holder tables (bitwise the batch answer),
 with windowed aggregation (:func:`tumbling` / :func:`sliding`), live
 :meth:`~MapReduceService.snapshot` queries, and checkpointed warm
-restarts.  :class:`IngestionQueue` is the bounded background front end.
+restarts.  :class:`IngestionQueue` is the bounded background front end;
+a poison batch is quarantined (:class:`PoisonBatch`), a fatal worker
+death surfaces as :class:`WorkerDiedError` and marks the service failed
+(:class:`ServiceFailedError` on further ingests — snapshots keep
+serving).
 """
 
-from repro.streaming.ingest import IngestionQueue
-from repro.streaming.service import MapReduceService
+from repro.streaming.ingest import IngestionQueue, PoisonBatch, \
+    WorkerDiedError
+from repro.streaming.service import MapReduceService, ServiceFailedError
 from repro.streaming.windows import Window, sliding, tumbling
 
 __all__ = [
     "MapReduceService",
+    "ServiceFailedError",
     "IngestionQueue",
+    "PoisonBatch",
+    "WorkerDiedError",
     "Window",
     "tumbling",
     "sliding",

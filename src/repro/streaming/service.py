@@ -49,6 +49,13 @@ from repro.core.api import ExecutionOptions, MapReduce, MapReduceResult
 from repro.streaming.windows import Window
 
 
+class ServiceFailedError(RuntimeError):
+    """The service was marked failed (fatal ingestion-worker death or an
+    explicit ``fail()``); ingestion is refused but ``snapshot()`` keeps
+    serving the last consistent state — readers outlive a broken writer
+    path, and a warm ``restore()`` clears the mark."""
+
+
 @dataclasses.dataclass(frozen=True)
 class _ServiceState:
     """One immutable generation of the service: swap-on-ingest."""
@@ -82,7 +89,7 @@ class MapReduceService:
                  options: ExecutionOptions | None = None,
                  item_spec: Any = None,
                  ckpt_dir: str | None = None, ckpt_every: int = 0,
-                 keep_ckpts: int = 3):
+                 keep_ckpts: int = 3, retry_policy: Any = None):
         if batch_capacity <= 0:
             raise ValueError("batch_capacity must be positive")
         if mr.plan.flow != "stream":
@@ -117,11 +124,42 @@ class MapReduceService:
                           if ckpt_dir is not None else None)
         self.ckpt_every = int(ckpt_every)
         self.keep_ckpts = int(keep_ckpts)
+        self.retry_policy = retry_policy
         self._lock = threading.Lock()  # serializes writers, never readers
         self._compiled = None
         self._state: _ServiceState | None = None
+        self._failed: BaseException | None = None
+        #: control-plane event lines (retries/backoffs on checkpoint and
+        #: restore, failure marks) — shown by explain(), mirrored onto
+        #: the compiled plan's ``recovery`` diagnostics
+        self.events: list[str] = []
         if item_spec is not None:
             self._compile(item_spec)
+
+    # -- failure state ------------------------------------------------------
+
+    def fail(self, exc: BaseException) -> None:
+        """Mark the service failed (called by the ingestion front end on
+        fatal worker death).  Ingestion is refused from here on;
+        snapshots keep serving the last published state."""
+        self._failed = exc
+        self._record(f"service marked FAILED: {type(exc).__name__}: {exc}; "
+                     f"snapshots still serve the last consistent state")
+
+    @property
+    def failed(self) -> BaseException | None:
+        """The failure the service was marked with, or None."""
+        return self._failed
+
+    def _record(self, line: str) -> None:
+        self.events.append(line)
+        if self._compiled is not None:
+            self._compiled.plan.recovery += (line,)
+
+    def _retried(self, op: str, fn):
+        if self.retry_policy is None:
+            return fn()
+        return self.retry_policy.call(fn, op=op, on_event=self._record)
 
     # -- staging ------------------------------------------------------------
 
@@ -157,6 +195,12 @@ class MapReduceService:
 
         Thread-safe single-writer: concurrent callers serialize on the
         service lock; snapshots never wait on it."""
+        if self._failed is not None:
+            raise ServiceFailedError(
+                f"service is marked failed "
+                f"({type(self._failed).__name__}: {self._failed}); "
+                f"snapshot() still serves, restore() a checkpoint to "
+                f"resume ingestion") from self._failed
         items = jax.tree.map(jnp.asarray, items)
         n = int(jax.tree.leaves(items)[0].shape[0])
         if n > self.batch_capacity:
@@ -245,8 +289,10 @@ class MapReduceService:
                 "meta": np.asarray([st.batch_id, st.n_items], np.int64)}
 
     def _checkpoint(self, st: _ServiceState) -> None:
-        ckpt.save(self._ckpt_dir, st.batch_id, self._state_tree(st),
-                  keep=self.keep_ckpts)
+        self._retried(
+            f"checkpoint batch {st.batch_id}",
+            lambda: ckpt.save(self._ckpt_dir, st.batch_id,
+                              self._state_tree(st), keep=self.keep_ckpts))
 
     def checkpoint(self) -> str:
         """Snapshot the current state to the checkpoint dir now (atomic);
@@ -257,17 +303,31 @@ class MapReduceService:
             raise RuntimeError("nothing to checkpoint: service not staged")
         with self._lock:
             st = self._state
-            return ckpt.save(self._ckpt_dir, st.batch_id,
-                             self._state_tree(st), keep=self.keep_ckpts)
+            return self._retried(
+                f"checkpoint batch {st.batch_id}",
+                lambda: ckpt.save(self._ckpt_dir, st.batch_id,
+                                  self._state_tree(st),
+                                  keep=self.keep_ckpts))
 
     def restore(self, ckpt_dir: str | None = None,
                 *, step: int | None = None) -> int:
-        """Warm restart: load the newest complete checkpoint (or ``step``)
+        """Warm restart: load the newest VALID checkpoint (or ``step``)
         and resume bitwise-identical to the service that wrote it.
+
+        Integrity: every snapshot is checksummed (checkpoint/ckpt.py).
+        With an explicit ``step``, a torn or corrupt snapshot raises
+        :class:`~repro.checkpoint.ckpt.CheckpointCorruptError` naming the
+        step and path (the artifact is quarantined to ``*.corrupt``).
+        With ``step=None``, corrupt candidates are quarantined and
+        skipped and the newest VALID snapshot is restored — a torn
+        newest write degrades to the previous snapshot instead of
+        crashing the restart.  ``retry_policy`` (if set) retries flaky
+        store reads on its bounded deterministic backoff.
 
         The service must be staged first (construct with ``item_spec=``,
         or over the same app after one ingest) so the state structure is
-        known.  Returns the restored batch id."""
+        known.  A successful restore clears a ``failed`` mark.  Returns
+        the restored batch id."""
         d = (ckpt.service_state_dir(ckpt_dir) if ckpt_dir is not None
              else self._ckpt_dir)
         if d is None:
@@ -280,12 +340,18 @@ class MapReduceService:
             slots=tuple(self._compiled.init_state()
                         for _ in range(self.n_slots)),
             batch_id=0, n_items=0))
-        tree, step = ckpt.restore(d, example, step=step)
+        tree, step = self._retried(
+            f"service restore from {d}",
+            lambda: ckpt.restore(d, example, step=step))
         with self._lock:
             self._state = _ServiceState(
                 slots=tuple(tree["slots"]),
                 batch_id=int(tree["meta"][0]),
                 n_items=int(tree["meta"][1]))
+            if self._failed is not None:
+                self._record(f"service failure mark cleared by restore of "
+                             f"batch {step}")
+                self._failed = None
         return step
 
     # -- introspection -------------------------------------------------------
@@ -333,4 +399,9 @@ class MapReduceService:
                 f"{'none' if last is None else f'batch {last}'})")
         else:
             lines.append("checkpoint: off")
+        if self._failed is not None:
+            lines.append(f"state: FAILED ({type(self._failed).__name__}: "
+                         f"{self._failed}) — snapshots only")
+        for ev in self.events:
+            lines.append(f"event: {ev}")
         return "\n".join(lines)

@@ -1,0 +1,699 @@
+"""Chaos drills for the durable control plane (distributed/coordination.py
++ chaos.py): lease-based coordinator failover, checksummed checkpoint
+quarantine, bounded deterministic retry/backoff, network partitions and
+multi-fault scripts — every recovered answer bitwise-identical to the
+clean run, for the stream, sort and reduce flows (honoring the
+REPRO_TEST_FLOW / REPRO_TEST_KERNELS CI matrix)."""
+
+import os
+import tempfile
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _subproc import run_with_devices
+
+from repro.checkpoint import ckpt
+from repro.core import MapReduceApp, plan_execution
+from repro.core import engine as eng
+from repro.distributed import chaos as chaoslib
+from repro.distributed import coordination as coordlib
+from repro.distributed import fault
+
+VOCAB = 48
+
+
+class WC(MapReduceApp):
+    key_space = VOCAB
+    value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+    max_values_per_key = 256
+    emit_capacity = 8
+
+    def map(self, item, emit):
+        emit(item, jnp.ones_like(item))
+
+    def reduce(self, key, values, count):
+        return jnp.sum(values)
+
+
+def _tokens(n_items=64):
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, VOCAB, (n_items, 8)).astype(np.int32))
+
+
+def _bitwise_equal(a, b):
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(a[:3], b[:3]))
+
+
+def _chaos_flows(matrix_flows):
+    # the ISSUE's acceptance flows; `combine` rides along in test_fault.py
+    return matrix_flows(("stream", "sort", "reduce"))
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy: bounded, deterministic, no silent retries
+# ---------------------------------------------------------------------------
+
+
+def test_retry_schedule_deterministic_capped():
+    pol = coordlib.RetryPolicy(max_attempts=5, base_delay_s=0.1,
+                               multiplier=2.0, max_delay_s=0.5)
+    assert pol.schedule() == (0.1, 0.2, 0.4, 0.5)
+    assert pol.schedule() == pol.schedule()  # jitter-free
+
+
+def test_retry_backoff_then_success_records_events():
+    pol = coordlib.RetryPolicy(max_attempts=4, base_delay_s=0.01)
+    calls, slept, events = [], [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise coordlib.StoreTimeout("transient")
+        return "ok"
+
+    out = pol.call(flaky, op="flaky op", sleep=slept.append,
+                   on_event=events.append)
+    assert out == "ok" and len(calls) == 3
+    assert slept == [0.01, 0.02]  # the deterministic schedule, no jitter
+    assert any("backing off" in e for e in events)
+    assert any("succeeded on attempt 3/4" in e for e in events)
+
+
+def test_retry_bounded_raises_after_cap():
+    """No unbounded loops: a persistently failing op raises RetryError
+    after exactly max_attempts tries."""
+    pol = coordlib.RetryPolicy(max_attempts=3, base_delay_s=0.0)
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise coordlib.StoreTimeout("down")
+
+    with pytest.raises(coordlib.RetryError, match="3 bounded attempts"):
+        pol.call(always_fails, op="dead store", sleep=lambda _: None)
+    assert len(calls) == 3
+
+
+def test_retry_does_not_retry_missing_files():
+    """FileNotFoundError is not transient: a missing checkpoint must not
+    burn the whole backoff schedule before surfacing."""
+    pol = coordlib.RetryPolicy(max_attempts=5)
+    calls = []
+
+    def missing():
+        calls.append(1)
+        raise FileNotFoundError("no checkpoint")
+
+    with pytest.raises(FileNotFoundError):
+        pol.call(missing, sleep=lambda _: None)
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# Lease election: deterministic, exactly one winner
+# ---------------------------------------------------------------------------
+
+
+def test_elect_lowest_live_rank():
+    assert coordlib.elect([3, 1, 5]) == 1
+    assert coordlib.elect(range(8)) == 0
+    assert coordlib.elect({7}) == 7
+    with pytest.raises(ValueError):
+        coordlib.elect([])
+
+
+def test_lease_expiry_failover_deterministic():
+    """Holder 0 stops renewing; after the TTL only the lowest-ranked live
+    host can adopt, at a bumped epoch — every other claimant is refused."""
+    clk = fault.StepClock()
+    store = coordlib.CoordinationStore(coordlib.MemKVStore(),
+                                       lease_ttl_s=10.0, clock=clk)
+    first = store.adopt(0, range(4))
+    assert first is not None and (first.holder, first.epoch) == (0, 1)
+    clk.advance(5.0)
+    assert store.adopt(2, range(4)) is None  # live holder keeps it
+    clk.advance(6.0)  # lease expired; holder 0 presumed dead
+    alive = [2, 3]
+    assert store.adopt(3, alive) is None  # not the lowest live rank
+    second = store.adopt(2, alive)
+    assert second is not None and (second.holder, second.epoch) == (2, 2)
+    assert any("adopted coordination" in e for e in store.events)
+
+
+def test_lease_adoption_exactly_one_winner_exhaustive():
+    """For every claim order over a small alive-set, exactly one host
+    ends up holding the lease: elect()'s winner."""
+    import itertools
+
+    for alive in ([0, 1, 2], [1, 3], [2], [0, 2, 5, 7]):
+        for order in itertools.permutations(alive):
+            store = coordlib.CoordinationStore(
+                coordlib.MemKVStore(), lease_ttl_s=10.0,
+                clock=fault.StepClock())
+            wins = [h for h in order if store.adopt(h, alive) is not None]
+            assert wins == [min(alive)], (alive, order, wins)
+
+
+def test_lease_election_deterministic_hypothesis():
+    """Property drill: for ANY alive-set and ANY adoption attempt order,
+    election is deterministic and picks exactly one live host — the
+    lowest rank."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(
+        alive=st.sets(st.integers(min_value=0, max_value=15), min_size=1,
+                      max_size=16),
+        seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @hyp.settings(max_examples=200, deadline=None)
+    def drill(alive, seed):
+        assert coordlib.elect(alive) == min(alive)  # pure + deterministic
+        order = sorted(alive,
+                       key=lambda h: np.random.default_rng(seed + h)
+                       .integers(0, 1 << 30))
+        store = coordlib.CoordinationStore(
+            coordlib.MemKVStore(), lease_ttl_s=10.0,
+            clock=fault.StepClock())
+        winners = [h for h in order if store.adopt(h, alive) is not None]
+        assert winners == [min(alive)]
+
+    drill()
+
+
+# ---------------------------------------------------------------------------
+# Checksummed checkpoint store (unit level; the matrix drills below use it
+# through the resilient driver)
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "n": jnp.asarray([7], jnp.int32)}
+
+
+def test_checkpoint_verify_and_quarantine():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 3, _tree())
+        ckpt.verify_step(d, 3)  # intact: no raise
+        assert ckpt.has_valid_step(d, 3)
+        chaoslib.corrupt_payload(os.path.join(d, "step_3", "arrays.npz"))
+        with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+            ckpt.verify_step(d, 3)
+        assert "step 3" in str(ei.value) and "step_3" in str(ei.value)
+        assert not ckpt.has_valid_step(d, 3)
+        q = ckpt.quarantine_step(d, 3)
+        assert q.endswith("step_3.corrupt") and os.path.isdir(q)
+        # quarantined neighbors must not break step listing or gc
+        ckpt.save(d, 4, _tree())
+        assert ckpt.latest_step(d) == 4
+
+
+def test_restore_explicit_corrupt_step_raises_and_quarantines():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 5, _tree())
+        chaoslib.truncate_payload(os.path.join(d, "step_5", "arrays.npz"))
+        with pytest.raises(ckpt.CheckpointCorruptError, match="step 5"):
+            ckpt.restore(d, _tree(), step=5)
+        assert os.path.isdir(os.path.join(d, "step_5.corrupt"))
+        assert not os.path.isdir(os.path.join(d, "step_5"))
+
+
+def test_restore_falls_back_to_newest_valid():
+    """A torn newest write degrades to the previous snapshot — the
+    satellite acceptance for MapReduceService.restore(step=None)."""
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        ckpt.save(d, 1, t)
+        ckpt.save(d, 2, jax.tree.map(lambda a: a + 1, t))
+        ckpt.save(d, 3, jax.tree.map(lambda a: a + 2, t))
+        chaoslib.truncate_payload(os.path.join(d, "step_3", "arrays.npz"))
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            tree, step = ckpt.restore(d, t, step=None)
+        assert step == 2
+        assert np.array_equal(np.asarray(tree["w"]),
+                              np.asarray(t["w"]) + 1)
+        assert any("quarantined" in str(x.message) for x in w)
+        assert os.path.isdir(os.path.join(d, "step_3.corrupt"))
+        # all candidates corrupt -> clear FileNotFoundError, no crash
+        chaoslib.corrupt_payload(os.path.join(d, "step_2", "arrays.npz"))
+        chaoslib.corrupt_payload(os.path.join(d, "step_1", "arrays.npz"))
+        with pytest.raises(FileNotFoundError, match="no VALID checkpoint"), \
+                warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ckpt.restore(d, t, step=None)
+
+
+def test_legacy_checkpoint_without_checksum_still_restores():
+    """Pre-checksum checkpoints (no manifest.crc / checksum field) must
+    stay readable — upgrades cannot orphan existing snapshots."""
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        ckpt.save(d, 1, t)
+        os.remove(os.path.join(d, "step_1", "manifest.crc"))
+        import json
+
+        mpath = os.path.join(d, "step_1", "manifest.json")
+        with open(mpath) as f:
+            m = json.load(f)
+        del m["checksum"]
+        with open(mpath, "w") as f:
+            json.dump(m, f)
+        ckpt.verify_step(d, 1)  # legacy accepted
+        tree, step = ckpt.restore(d, t)
+        assert step == 1
+        assert np.array_equal(np.asarray(tree["w"]), np.asarray(t["w"]))
+
+
+# ---------------------------------------------------------------------------
+# FileKVStore + CoordinationStore
+# ---------------------------------------------------------------------------
+
+
+def test_file_kv_store_roundtrip_and_atomicity():
+    with tempfile.TemporaryDirectory() as d:
+        kv = coordlib.FileKVStore(d)
+        kv.put("hosts/3", b'{"host": 3}')
+        kv.put("lease", b'{"holder": 0}')
+        assert kv.get("hosts/3") == b'{"host": 3}'
+        assert kv.get("missing") is None
+        assert kv.keys("hosts/") == ["hosts/3"]
+        assert sorted(kv.keys()) == ["hosts/3", "lease"]
+        kv.delete("hosts/3")
+        assert kv.get("hosts/3") is None
+        with pytest.raises(ValueError):
+            kv.put("../escape", b"nope")
+
+
+def test_coordination_store_heartbeats_and_ledger_survive_restart():
+    """The durability bar: a brand-new CoordinationStore over the same
+    directory (a failover coordinator on another host) reads the same
+    heartbeats, lease and ledger the dead one wrote."""
+    clk = fault.StepClock()
+    with tempfile.TemporaryDirectory() as d:
+        c1 = coordlib.CoordinationStore(d, clock=clk, lease_ttl_s=5.0)
+        c1.beat(0, step=2)
+        c1.beat(1, step=1)
+        c1.adopt(0, [0, 1])
+        c1.record_shard(4, host=0, step=7)
+        c1.record_shard(5, host=1, step=7)
+
+        c2 = coordlib.CoordinationStore(d, clock=clk, lease_ttl_s=5.0)
+        recs = c2.host_records()
+        assert recs[0]["step"] == 2 and recs[1]["step"] == 1
+        lease = c2.lease()
+        assert (lease.holder, lease.epoch) == (0, 1)
+        assert c2.load_ledger(7) == {4: 0, 5: 1}
+        assert c2.load_ledger(8) == {}
+
+
+def test_durable_monitor_partition_drops_beats():
+    clk = fault.StepClock()
+    store = coordlib.CoordinationStore(coordlib.MemKVStore(), clock=clk)
+    mon = coordlib.DurableHeartbeatMonitor(store, 3, timeout_s=10.0,
+                                           clock=clk)
+    for h in range(3):
+        mon.beat(h, step=1)
+    mon.partition(2)
+    clk.advance(11.0)
+    mon.beat(0, step=2)
+    mon.beat(1, step=2)
+    mon.beat(2, step=2)  # dropped at the transport
+    assert mon.dead_hosts() == [2]
+    assert sorted(mon.alive_hosts()) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# The chaos matrix: in-process drills on the resilient driver (bitwise
+# vs the clean run, stream/sort/reduce, flow-matrix aware)
+# ---------------------------------------------------------------------------
+
+
+def _clean(flow, toks, use_kernels):
+    plan = plan_execution(WC(), flow=flow)
+    return eng.run_resilient(WC(), plan, toks, num_hosts=4, num_shards=8,
+                             use_kernels=use_kernels)
+
+
+def test_chaos_coordinator_kill_midphase_failover_bitwise(
+        matrix_flows, matrix_use_kernels):
+    """Coordinator (host 0, the elected lease holder) dies mid-phase-A:
+    the lowest-ranked survivor adopts the lease + durable ledger at a
+    bumped epoch and phase B resumes from durable partials, bitwise."""
+    toks = _tokens()
+    for flow in _chaos_flows(matrix_flows):
+        base = _clean(flow, toks, matrix_use_kernels)
+        with tempfile.TemporaryDirectory() as d:
+            plan = plan_execution(WC(), flow=flow)
+            out = eng.run_resilient(
+                WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+                use_kernels=matrix_use_kernels,
+                chaos=chaoslib.ChaosPlan().kill_coordinator(after=1))
+            assert _bitwise_equal(base, out), flow
+            log = out[3]
+            assert log.coordinator == 0
+            assert log.failover == (0, 1, 2), log.failover  # epoch bumped
+            assert 0 in log.dead_hosts
+            # the failover + adoption provenance reaches explain()
+            assert any("failover" in e and "adopted" in e
+                       for e in plan.recovery)
+            # host 0 checkpointed its first shard before dying: restored
+            assert log.restored, log
+
+
+def test_chaos_corrupt_one_of_eight_shard_partials(matrix_flows,
+                                                   matrix_use_kernels):
+    """1-of-8 durable shard partials is corrupt: the checksum layer
+    detects it, quarantines to *.corrupt, and the shard is recomputed
+    deterministically — never restored, never crashed, still bitwise."""
+    toks = _tokens()
+    for flow in _chaos_flows(matrix_flows):
+        base = _clean(flow, toks, matrix_use_kernels)
+        with tempfile.TemporaryDirectory() as d:
+            plan = plan_execution(WC(), flow=flow)
+            # host 2 owns shards {2, 6}; it dies AFTER checkpointing both,
+            # and shard 2's checkpoint is then corrupted on disk
+            out = eng.run_resilient(
+                WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+                use_kernels=matrix_use_kernels,
+                chaos=(chaoslib.ChaosPlan()
+                       .kill_host(2, after=2)
+                       .corrupt_checkpoint(2)))
+            assert _bitwise_equal(base, out), flow
+            log = out[3]
+            assert log.corrupt == [2]
+            assert 2 not in log.restored and 6 in log.restored
+            assert 2 in [s for s, _ in log.recomputed]
+            assert os.path.isdir(os.path.join(
+                ckpt.shard_partial_dir(d, 2), "step_0.corrupt"))
+            assert any("quarantined" in e for e in plan.recovery)
+
+
+def test_chaos_store_timeout_backoff_success(matrix_flows,
+                                             matrix_use_kernels):
+    """Store write timeouts on the first checkpoint ops: absorbed by the
+    bounded deterministic backoff (retry -> success), every attempt on
+    the record, output bitwise."""
+    toks = _tokens()
+    for flow in _chaos_flows(matrix_flows):
+        base = _clean(flow, toks, matrix_use_kernels)
+        with tempfile.TemporaryDirectory() as d:
+            plan = plan_execution(WC(), flow=flow)
+            out = eng.run_resilient(
+                WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+                use_kernels=matrix_use_kernels,
+                retry=coordlib.RetryPolicy(max_attempts=4,
+                                           base_delay_s=0.01),
+                chaos=chaoslib.ChaosPlan().delay_store(2))
+            assert _bitwise_equal(base, out), flow
+            log = out[3]
+            assert any("backing off" in e for e in log.store_events)
+            assert any("succeeded on attempt" in e
+                       for e in log.store_events)
+            # provenance reaches the plan diagnostics — no silent retries
+            assert any("retry:" in e for e in plan.recovery)
+
+
+def test_chaos_store_timeouts_exhaust_bounded_budget():
+    """More injected timeouts than the retry budget: the driver fails
+    with RetryError after the capped attempts — never an unbounded loop."""
+    toks = _tokens()
+    with tempfile.TemporaryDirectory() as d:
+        plan = plan_execution(WC(), flow="stream")
+        with pytest.raises(coordlib.RetryError, match="bounded attempts"):
+            eng.run_resilient(
+                WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+                retry=coordlib.RetryPolicy(max_attempts=2,
+                                           base_delay_s=0.0),
+                chaos=chaoslib.ChaosPlan().delay_store(50))
+
+
+def test_chaos_partitioned_host_recovered(matrix_flows, matrix_use_kernels):
+    """A partitioned host keeps computing but its beats/writes never
+    reach the store: the cluster declares it dead and recovers its
+    shards on live ranks, bitwise."""
+    toks = _tokens()
+    for flow in _chaos_flows(matrix_flows):
+        base = _clean(flow, toks, matrix_use_kernels)
+        with tempfile.TemporaryDirectory() as d:
+            plan = plan_execution(WC(), flow=flow)
+            out = eng.run_resilient(
+                WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+                use_kernels=matrix_use_kernels,
+                chaos=chaoslib.ChaosPlan().partition(3))
+            assert _bitwise_equal(base, out), flow
+            log = out[3]
+            assert log.partitioned == [3]
+            assert 3 in log.dead_hosts  # detected via dropped beats
+            assert any("partition" in e for e in plan.recovery)
+
+
+def test_chaos_multifault_drill(matrix_flows, matrix_use_kernels):
+    """The full drill: coordinator killed mid-run + one corrupt
+    checkpoint + one straggler + flaky store, in ONE run — recovery is
+    still bitwise-identical to the clean answer."""
+    toks = _tokens()
+    for flow in _chaos_flows(matrix_flows):
+        base = _clean(flow, toks, matrix_use_kernels)
+        with tempfile.TemporaryDirectory() as d:
+            plan = plan_execution(WC(), flow=flow)
+            ch = (chaoslib.ChaosPlan()
+                  .kill_coordinator(after=1)
+                  .corrupt_checkpoint(0)
+                  .straggler(3)
+                  .delay_store(1))
+            out = eng.run_resilient(
+                WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+                use_kernels=matrix_use_kernels,
+                retry=coordlib.RetryPolicy(max_attempts=4,
+                                           base_delay_s=0.01),
+                chaos=ch)
+            assert _bitwise_equal(base, out), flow
+            log = out[3]
+            assert log.failover == (0, 1, 2)
+            assert log.corrupt == [0]
+            assert log.straggler_hosts == [3]
+
+
+def test_chaos_events_reach_explain(matrix_use_kernels):
+    """`explain()` shows the full control-plane story: the lease
+    election, the backoff schedule taken and which host adopted — the
+    no-silent-retries satellite."""
+    toks = _tokens()
+    with tempfile.TemporaryDirectory() as d:
+        plan = plan_execution(WC(), flow="stream")
+        eng.run_resilient(
+            WC(), plan, toks, num_hosts=4, num_shards=8, ckpt_dir=d,
+            use_kernels=matrix_use_kernels,
+            retry=coordlib.RetryPolicy(max_attempts=3, base_delay_s=0.25),
+            chaos=(chaoslib.ChaosPlan().kill_coordinator(after=1)
+                   .delay_store(1)))
+        text = plan.explain()
+        assert "recovery: lease: host 0 elected coordinator" in text
+        assert "backing off 0.25s" in text  # the schedule actually taken
+        assert "host 1 adopted" in text
+
+
+def test_chaos_knobs_through_execution_options():
+    """The coord/retry/chaos knobs travel through ExecutionOptions and
+    the staged run_resilient wrapper (the README example's shape)."""
+    from repro.core import ExecutionOptions, MapReduce
+
+    toks = _tokens()
+    mr = MapReduce(WC())
+    with tempfile.TemporaryDirectory() as d:
+        res = mr.run_resilient(toks, options=ExecutionOptions(
+            num_hosts=4, num_shards=8, ckpt_dir=d,
+            coord=os.path.join(d, "coord"),
+            retry=coordlib.RetryPolicy(max_attempts=4, base_delay_s=0.01),
+            chaos=chaoslib.ChaosPlan().kill_coordinator(after=1)
+            .delay_store(1)))
+        log = res.recovery
+        assert log.failover == (0, 1, 2)
+        assert any("backing off" in e for e in log.store_events)
+        text = mr.explain()
+        assert "adopted" in text and "backing off" in text
+
+
+# ---------------------------------------------------------------------------
+# The acceptance drill: fake 8-device mesh, multi-fault, vs run_distributed
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_multifault_bitwise_vs_distributed_mesh_subprocess():
+    """ISSUE acceptance: on a fake 8-device mesh, with the coordinator
+    killed mid-run, one checkpoint corrupted and one straggler host, the
+    recovered output is bitwise-identical to the fault-free
+    ``run_distributed`` answer for stream, sort and reduce."""
+    out = run_with_devices("""
+        import os, tempfile, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import MapReduceApp, plan_execution
+        from repro.core import engine as eng
+        from repro.distributed import chaos as chaoslib
+        from repro.distributed import coordination as coordlib
+
+        UK = os.environ.get("REPRO_TEST_KERNELS", "").lower() not in (
+            "", "0", "false", "no")
+        OVR = os.environ.get("REPRO_TEST_FLOW", "").strip().lower()
+        FLOWS = (OVR,) if OVR in ("stream", "sort", "reduce") else (
+            "stream", "sort", "reduce")
+
+        VOCAB = 48
+        class WC(MapReduceApp):
+            key_space = VOCAB
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 256
+            emit_capacity = 8
+            def map(self, item, emit): emit(item, jnp.ones_like(item))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        toks = jax.device_put(
+            jnp.asarray(rng.integers(0, VOCAB, (64, 8)).astype(np.int32)),
+            NamedSharding(mesh, P("data")))
+        app = WC()
+
+        def bits(arrs):
+            return [np.asarray(a).tobytes() for a in arrs]
+
+        for flow in FLOWS:
+            with mesh:
+                plan0 = plan_execution(app, flow=flow)
+                ref = bits(eng.run_distributed(app, plan0, toks, mesh=mesh,
+                                               use_kernels=UK))
+            with tempfile.TemporaryDirectory() as d:
+                # seed every durable shard partial, coordinated
+                plan1 = plan_execution(app, flow=flow)
+                eng.run_resilient(app, plan1, toks, mesh=mesh,
+                                  use_kernels=UK, ckpt_dir=d,
+                                  coord=os.path.join(d, "coord"))
+                # the multi-fault drill: coordinator (host 0) dies after
+                # its first shard, shard 5's durable partial is corrupt,
+                # host 6 straggles, the store times out twice
+                plan2 = plan_execution(app, flow=flow)
+                ch = (chaoslib.ChaosPlan()
+                      .kill_coordinator(after=1)
+                      .corrupt_checkpoint(5)
+                      .straggler(6)
+                      .delay_store(2))
+                k, v, c, log = eng.run_resilient(
+                    app, plan2, toks, mesh=mesh, use_kernels=UK,
+                    ckpt_dir=d, coord=os.path.join(d, "coord"),
+                    retry=coordlib.RetryPolicy(max_attempts=4,
+                                               base_delay_s=0.01),
+                    chaos=ch)
+                assert bits((k, v, c)) == ref, ("chaos", flow)
+                assert log.coordinator == 0
+                assert log.failover == (0, 1, 2), log.failover
+                assert log.corrupt == [5]
+                assert log.straggler_hosts == [6]
+                assert any("backing off" in e for e in log.store_events)
+            print("CHAOS_BITWISE_OK", flow)
+    """, n=8)
+    assert out.count("CHAOS_BITWISE_OK") >= 1
+
+
+# ---------------------------------------------------------------------------
+# Streaming service under chaos: torn snapshot -> newest valid
+# ---------------------------------------------------------------------------
+
+
+def test_service_restores_newest_valid_after_torn_write():
+    """ISSUE acceptance (streaming half): after a torn checkpoint write,
+    ``restore(step=None)`` falls back to the newest VALID snapshot and
+    resumes bitwise; the torn artifact is quarantined, and an explicit
+    ``restore(step=torn)`` raises CheckpointCorruptError naming the step
+    and path."""
+    from repro.core.api import MapReduce
+
+    I32 = jnp.int32
+    B = 16
+
+    class KV(MapReduceApp):
+        key_space = VOCAB
+        value_aval = jax.ShapeDtypeStruct((), I32)
+        max_values_per_key = 4096
+        emit_capacity = 1
+
+        def map(self, item, emit):
+            emit(item, jnp.ones_like(item))
+
+        def reduce(self, key, values, count):
+            return jnp.sum(values)
+
+    rng = np.random.default_rng(11)
+    batches = [jnp.asarray(rng.integers(0, VOCAB, (B,)).astype(np.int32))
+               for _ in range(8)]
+    spec = jax.ShapeDtypeStruct((), I32)
+
+    def build(d):
+        return MapReduce(KV(), streaming=True).serve(
+            batch_capacity=B, ckpt_dir=d, ckpt_every=2, item_spec=spec)
+
+    with tempfile.TemporaryDirectory() as d:
+        svc = build(d)
+        for i, b in enumerate(batches):
+            svc.ingest(b)
+            if i == 5:  # snapshot state at the batch-6 checkpoint
+                want6 = svc.snapshot()
+        assert ckpt.latest_step(ckpt.service_state_dir(d)) == 8
+        # tear the newest snapshot on disk
+        assert chaoslib.corrupt_service_checkpoint(d, 8) is not None
+
+        # restore(step=None): falls back to batch 6, bitwise
+        fresh = build(d)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            got = fresh.restore()
+        assert got == 6 and fresh.batch_id == 6
+        snap = fresh.snapshot()
+        assert (np.asarray(snap.values).tobytes()
+                == np.asarray(want6.values).tobytes())
+        assert os.path.isdir(os.path.join(
+            ckpt.service_state_dir(d), "step_8.corrupt"))
+
+        # replaying batches 7..8 reconverges bitwise with the original
+        for b in batches[6:]:
+            fresh.ingest(b)
+        want = svc.snapshot()
+        got = fresh.snapshot()
+        assert (np.asarray(got.values).tobytes()
+                == np.asarray(want.values).tobytes())
+        assert got.batch_id == want.batch_id == 8
+
+
+def test_service_explicit_corrupt_step_raises_with_name():
+    from repro.core.api import MapReduce
+
+    I32 = jnp.int32
+    B = 8
+
+    class KV(MapReduceApp):
+        key_space = VOCAB
+        value_aval = jax.ShapeDtypeStruct((), I32)
+        max_values_per_key = 4096
+        emit_capacity = 1
+
+        def map(self, item, emit):
+            emit(item, jnp.ones_like(item))
+
+        def reduce(self, key, values, count):
+            return jnp.sum(values)
+
+    spec = jax.ShapeDtypeStruct((), I32)
+    with tempfile.TemporaryDirectory() as d:
+        svc = MapReduce(KV(), streaming=True).serve(
+            batch_capacity=B, ckpt_dir=d, ckpt_every=1, item_spec=spec)
+        svc.ingest(jnp.zeros((B,), I32))
+        assert chaoslib.corrupt_service_checkpoint(d, 1) is not None
+        fresh = MapReduce(KV(), streaming=True).serve(
+            batch_capacity=B, ckpt_dir=d, item_spec=spec)
+        with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+            fresh.restore(step=1)
+        assert "step 1" in str(ei.value) and "step_1" in str(ei.value)

@@ -302,6 +302,67 @@ def test_ingestion_queue_surfaces_worker_errors():
     q.close()
 
 
+def test_ingestion_queue_quarantines_poison_batch():
+    """A poison batch is quarantined with its sequence number; the worker
+    keeps consuming and the service keeps folding + serving snapshots."""
+    svc = MapReduce(wc_app(), streaming=True).serve(batch_capacity=8)
+    q = IngestionQueue(svc, maxsize=4)
+    q.put(jnp.zeros((8,), I32))        # seq 1: fine
+    q.put(jnp.zeros((16,), I32))       # seq 2: poison (oversized)
+    q.put(jnp.full((8,), 5, I32))      # seq 3: still folded after poison
+    with pytest.raises(ValueError, match="batch_capacity"):
+        q.join()
+    q.close()
+    assert [p.seq for p in q.quarantined] == [2]
+    assert "batch_capacity" in str(q.quarantined[0].error)
+    snap = svc.snapshot()
+    assert snap.batch_id == 2        # batches 1 and 3 both landed
+    assert count_of(snap, 5) == 8
+    assert not svc.failed            # poison != service failure
+
+
+def test_ingestion_queue_worker_death_unstrands_producers():
+    """Regression: a fatal (non-batch) worker death used to kill the
+    thread silently — producers then blocked forever on a full queue and
+    close() hung.  Now the death surfaces as WorkerDiedError on the next
+    put()/close(), and the service is marked failed."""
+    from repro.streaming import ServiceFailedError, WorkerDiedError
+
+    class Dying:
+        batch_id = 0
+
+        def __init__(self):
+            self.failure = None
+
+        def ingest(self, items):
+            raise KeyboardInterrupt("simulated fatal worker death")
+
+        def fail(self, exc):
+            self.failure = exc
+
+    svc = Dying()
+    q = IngestionQueue(svc, maxsize=1)
+    q.put(jnp.zeros((4,), I32))  # worker dies processing this
+    with pytest.raises(WorkerDiedError):
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:  # death is asynchronous
+            q.put(jnp.zeros((4,), I32), timeout=5.0)
+    with pytest.raises(WorkerDiedError):
+        q.close()
+    assert isinstance(svc.failure, KeyboardInterrupt)
+
+    # a real service marked failed: ingest raises, snapshots keep serving
+    real = MapReduce(wc_app(), streaming=True).serve(batch_capacity=8)
+    real.ingest(jnp.full((8,), 7, I32))
+    real.fail(RuntimeError("ingestion worker died"))
+    assert real.failed
+    with pytest.raises(ServiceFailedError, match="worker died"):
+        real.ingest(jnp.zeros((8,), I32))
+    snap = real.snapshot()  # reads stay up for the last good state
+    assert snap.batch_id == 1 and count_of(snap, 7) == 8
+    assert "FAILED" in real.explain()
+
+
 # ---------------------------------------------------------------------------
 # Checkpointed warm restart
 # ---------------------------------------------------------------------------
