@@ -41,6 +41,14 @@ cost model (extended with per-pass terms) must still pick sort for
 must hold.  The nightly CI job runs ``--crossover --big --json
 BENCH_nightly.json`` and diffs against the committed nightly baseline.
 
+PR 9 adds the skew rows (``--skew``): a Zipf(1.1) key stream driven through
+the mesh-less resilient sort flow on 8 shards with
+``ShuffleOptions(skew="auto")`` — the sampled histogram derives balanced
+range boundaries + hot-key splits (``core/skew.py``), so the zipf row must
+stay within 1.5× of the uniform row's wall-clock and raise ZERO
+shuffle-overflow ``LoweringFallbackWarning``s, with bitwise parity against
+the single-host oracle asserted on both rows.
+
 ``python benchmarks/bench_flow_sweep.py --crossover`` runs only the
 crossover rows (the CI smoke step).
 """
@@ -49,6 +57,7 @@ from __future__ import annotations
 
 import os
 import sys
+import time
 
 # self-locating like run.py: `python benchmarks/bench_flow_sweep.py` puts
 # benchmarks/ (not the repo root) on sys.path
@@ -57,12 +66,15 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_scale, row, time_fn
-from repro.core import MapReduce, MapReduceApp
+from repro.core import (ExecutionOptions, LoweringFallbackWarning, MapReduce,
+                        MapReduceApp, ShuffleOptions)
 from repro.core import engine as eng
 from repro.core.plan import flow_cost_report
 from repro.roofline import analysis as roofline
@@ -382,9 +394,92 @@ def crossover_big():
               f"not timed)"))
 
 
+#: key space of the skew rows (big enough that zipf's heavy head and long
+#: tail land in different fixed-width ranges).
+SKEW_K = 8192
+#: shard count the skew rows drive the mesh-less resilient path at.
+SKEW_S = 8
+
+
+def skew_bench():
+    """The PR 9 headline rows: skew-adaptive shuffle planning.
+
+    A Zipf(1.1) key stream is driven through the mesh-less resilient sort
+    flow on 8 shards with ``ShuffleOptions(skew="auto")``: the sampled key
+    histogram (``core/skew.py``) derives balanced range boundaries, splits
+    the hot head keys across shards and sizes the capacity envelope to the
+    sampled p-max destination load.  Gated: the zipf row stays within 1.5×
+    of the uniform row's wall-clock, raises ZERO shuffle-overflow
+    ``LoweringFallbackWarning``s, and both rows are bitwise-identical to
+    the single-host oracle (the uniform row snaps to the identity plan, so
+    it IS the legacy fixed-width arithmetic).
+    """
+    rng = np.random.default_rng(3)
+    K, S = SKEW_K, SKEW_S
+    # floor at 8k pairs: below ~1k pairs/shard the rows time host dispatch,
+    # not shuffle behaviour, and the ratio gate drowns in scheduler jitter
+    N = max(1 << 13, int((1 << 14) * bench_scale()))
+    app = make_app(K, max(4096, N))
+    opts = ExecutionOptions(num_hosts=S, num_shards=S,
+                            shuffle=ShuffleOptions(skew="auto"))
+
+    uni = rng.integers(0, K, size=(N // 8, 8)).astype(np.int32)
+    zpf = (rng.zipf(1.1, size=(N // 8, 8)) % K).astype(np.int32)
+
+    results = {}
+    for name, toks in (("uniform", uni), ("zipf", zpf)):
+        items = jnp.asarray(toks)
+        mr = MapReduce(app, flow="sort", cache=False)
+        want = np.bincount(toks.reshape(-1), minlength=K)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            res = mr.run_resilient(items, options=opts)
+        bad = [w for w in caught
+               if issubclass(w.category, LoweringFallbackWarning)]
+        assert not bad, (
+            f"skew row '{name}' raised overflow/fallback warnings: "
+            f"{[str(w.message) for w in bad]}")
+        np.testing.assert_array_equal(np.asarray(res.values), want)
+        results[name] = (mr, items, res)
+
+    mr_u, it_u, res_u = results["uniform"]
+    mr_z, it_z, res_z = results["zipf"]
+
+    # interleave the two rows call-by-call: machine-load drift over the
+    # measurement window then hits both rows alike and cancels out of the
+    # ratio, which is what the gate scores
+    for _ in range(2):
+        mr_u.run_resilient(it_u, options=opts)
+        mr_z.run_resilient(it_z, options=opts)
+    tus, tzs = [], []
+    for _ in range(11):
+        t0 = time.perf_counter()
+        mr_u.run_resilient(it_u, options=opts)
+        tus.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        mr_z.run_resilient(it_z, options=opts)
+        tzs.append(time.perf_counter() - t0)
+    t_u = float(np.median(tus))
+    t_z = float(np.median(tzs))
+    plan_lines = tuple(res_z.recovery.skew_plan)
+    assert plan_lines, "zipf row must engage the skew planner"
+    assert not tuple(res_u.recovery.skew_plan), (
+        "uniform row must snap to the identity plan (legacy arithmetic)")
+    assert t_z <= 1.5 * t_u, (
+        f"zipf row left the uniform row's wall-clock class: "
+        f"zipf={t_z * 1e6:.0f}us uniform={t_u * 1e6:.0f}us "
+        f"({t_z / t_u:.2f}x > 1.5x)")
+    print(row("flow_sweep_skew_sort_uniform", t_u * 1e6,
+              f"S={S} K={K} N={N} plan=identity-snap (bitwise-legacy)"))
+    print(row("flow_sweep_skew_sort_zipf", t_z * 1e6,
+              f"uniform={t_u * 1e6:.1f}us ratio={t_z / t_u:.2f}x "
+              f"(gate <=1.5x) overflow_warnings=0 {'; '.join(plan_lines)}"))
+
+
 def main():
     sweep()
     crossover()
+    skew_bench()
 
 
 if __name__ == "__main__":
@@ -400,6 +495,9 @@ if __name__ == "__main__":
     ap.add_argument("--big", action="store_true",
                     help="add the K=1M multi-pass crossover rows (the "
                          "nightly stress job)")
+    ap.add_argument("--skew", action="store_true",
+                    help="run only the skew-adaptive shuffle rows (uniform "
+                         "vs Zipf(1.1) on the resilient sort flow)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write parsed rows as a BENCH_*.json artifact "
                          "(compare.py-compatible)")
@@ -414,18 +512,21 @@ if __name__ == "__main__":
 
     print("name,us_per_call,derived")
     with contextlib.redirect_stdout(_Tee()):
-        if args.crossover or args.big:
+        if args.crossover or args.big or args.skew:
             if args.crossover:
                 crossover()
             if args.big:
                 crossover_big()
+            if args.skew:
+                skew_bench()
         else:
             main()
     if args.json:
         from benchmarks.common import parse_rows
 
         mode = "+".join([m for m, on in (("crossover", args.crossover),
-                                         ("big", args.big)) if on]) or "full"
+                                         ("big", args.big),
+                                         ("skew", args.skew)) if on]) or "full"
         with open(args.json, "w") as f:
             json.dump({"scale": bench_scale(), "preset": mode,
                        "rows": parse_rows(buf.getvalue()), "failures": []},

@@ -39,6 +39,7 @@ from repro.core.optimizer import Derivation, derive_combiner
 from repro.core.pipeline import Pipeline, StageSemantics, extract_semantics
 from repro.core.plan import FLOWS, ExecutionPlan, plan_execution
 from repro.core.plan_cache import CacheStats, stats_snapshot
+from repro.core.skew import ShuffleOptions, ShufflePlan, SkewProfile
 
 #: the public execution surface — ``from repro.core import *`` pulls exactly
 #: this; anything else in the submodules is implementation detail.
@@ -50,6 +51,9 @@ __all__ = [
     "make_app",
     "Emitter",
     "ExecutionOptions",
+    "ShuffleOptions",
+    "ShufflePlan",
+    "SkewProfile",
     "Lowered",
     "Optimized",
     "Compiled",

@@ -57,6 +57,8 @@ from repro.core import collector as col
 from repro.core import engine as eng
 from repro.core import combiner as C
 from repro.core import plan_cache as pc
+from repro.core import skew as sk
+from repro.core.skew import ShuffleOptions
 from repro.core.optimizer import Derivation, derive_combiner
 from repro.core.plan import ExecutionPlan, plan_execution
 
@@ -120,9 +122,15 @@ class ExecutionOptions:
     MapReduce constructor's choice".
 
     Distribution: ``mesh`` + ``data_axis`` select the shard_map data axis;
-    ``scatter_output`` key-shards stream/combine results;
-    ``shuffle_capacity``/``strict_shuffle`` govern the all-to-all
-    overflow envelope.  Resilience (``run_resilient``): ``num_hosts`` /
+    ``scatter_output`` key-shards stream/combine results; ``shuffle``
+    (a :class:`repro.core.skew.ShuffleOptions`) is the unified all-to-all
+    surface — capacity/strict envelope plus the skew-adaptive planner
+    (sampled histograms, balanced range boundaries, hot-key splitting).
+    The flat ``shuffle_capacity``/``strict_shuffle`` fields are its
+    deprecated spelling: non-default values forward into a
+    ``ShuffleOptions`` with a ``DeprecationWarning`` (one release), and
+    whenever ``shuffle`` is set it is authoritative — the flat fields are
+    overwritten to mirror it.  Resilience (``run_resilient``): ``num_hosts`` /
     ``num_shards`` / ``ckpt_dir`` / ``step`` / ``inject`` / ``timeout_s``
     / ``straggler_lag``, plus the durable control plane ``coord`` /
     ``retry`` / ``chaos``.  Serving: ``items_bucket="pow2"`` pads the batch
@@ -137,6 +145,9 @@ class ExecutionOptions:
     scatter_output: bool = False
     shuffle_capacity: int | None = None
     strict_shuffle: bool = False
+    #: the unified shuffle surface (skew.ShuffleOptions); None + default
+    #: flat fields keeps the bitwise-legacy fixed-width shuffle.
+    shuffle: sk.ShuffleOptions | None = None
     # resilience
     num_hosts: int | None = None
     num_shards: int | None = None
@@ -163,6 +174,28 @@ class ExecutionOptions:
     # serving
     items_bucket: str = "exact"
     cache: bool = True
+
+    def __post_init__(self):
+        sh = self.shuffle
+        if sh is None:
+            if self.shuffle_capacity is not None or self.strict_shuffle:
+                _warnings.warn(
+                    "ExecutionOptions(shuffle_capacity=..., "
+                    "strict_shuffle=...) are deprecated; pass "
+                    "shuffle=ShuffleOptions(capacity=..., strict=...) "
+                    "instead", DeprecationWarning, stacklevel=3)
+                object.__setattr__(self, "shuffle", sk.ShuffleOptions(
+                    capacity=self.shuffle_capacity,
+                    strict=self.strict_shuffle))
+            return
+        if not isinstance(sh, sk.ShuffleOptions):
+            raise TypeError(
+                f"ExecutionOptions.shuffle must be a skew.ShuffleOptions, "
+                f"got {type(sh).__name__}")
+        # the record is authoritative: mirror onto the flat fields so both
+        # read surfaces agree and dataclasses.replace round-trips silently
+        object.__setattr__(self, "shuffle_capacity", sh.capacity)
+        object.__setattr__(self, "strict_shuffle", sh.strict)
 
 
 _OPTION_FIELDS = {f.name for f in dataclasses.fields(ExecutionOptions)}
@@ -454,10 +487,52 @@ class MapReduce:
               mode: str | None = None) -> "Lowered":
         """Stage 1: bind this plan to an item spec (concrete arrays or a
         ShapeDtypeStruct pytree).  ``mode`` defaults to "local", or
-        "distributed" when ``options.mesh`` is set."""
-        return Lowered(self, pc.items_spec_of(items),
-                       options if options is not None else ExecutionOptions(),
-                       mode=mode)
+        "distributed" when ``options.mesh`` is set.
+
+        With ``options.shuffle.skew="auto"`` and concrete items, this is
+        where the skew planner samples the emitted key histogram and bakes
+        balanced boundaries / hot-key splits into the frozen
+        ``ShuffleOptions`` (spec-only lowering skips the probe and keeps
+        the fixed-width ranges)."""
+        opts = options if options is not None else ExecutionOptions()
+        rmode = _infer_mode(opts, mode)
+        if rmode in ("distributed", "resilient"):
+            opts = self._resolve_shuffle(opts, items, rmode)
+        return Lowered(self, pc.items_spec_of(items), opts, mode=rmode)
+
+    def _resolve_shuffle(self, opts: ExecutionOptions, items,
+                         mode: str) -> ExecutionOptions:
+        """Lower()-time skew resolution: sample/recall the key histogram
+        and return options with the decision baked into ``opts.shuffle``;
+        provenance lands on ``plan.skew`` (shown by ``explain()``)."""
+        sh = opts.shuffle
+        if sh is None or (sh.skew != "auto" and sh.boundaries is None):
+            return opts
+        leaves = jax.tree.leaves(items)
+        if any(isinstance(l, jax.ShapeDtypeStruct) for l in leaves):
+            return opts  # spec-only lowering: nothing to sample
+        S = _shard_count(opts, mode)
+        if S is None or S <= 1:
+            return opts
+        resolved, profile = sk.resolve_shuffle_options(
+            self.app, self.plan, items, num_shards=S, options=sh)
+        lines: list[str] = []
+        if profile is not None:
+            lines.extend(profile.describe())
+        splan = sk.plan_from_options(
+            self.app.key_space, S, resolved, flow=self.plan.flow,
+            spec=self.plan.spec, value_aval=self.app.value_aval)
+        if splan is not None:
+            lines.extend(splan.describe())
+        elif profile is not None and resolved.boundaries is None:
+            lines.append(
+                f"plan: fixed-width ranges kept (imbalance at/under the "
+                f"{sk.SNAP_IMBALANCE}x snap threshold)")
+        if lines:
+            self.plan.skew = tuple(lines)
+        if resolved is sh:
+            return opts
+        return dataclasses.replace(opts, shuffle=resolved)
 
     def run(self, items, *, options: ExecutionOptions | None = None,
             **legacy) -> MapReduceResult:
@@ -535,6 +610,20 @@ class MapReduce:
 # ---------------------------------------------------------------------------
 # The explicit stages: Lowered -> Optimized -> Compiled
 # ---------------------------------------------------------------------------
+
+
+def _shard_count(opts: ExecutionOptions, mode: str) -> int | None:
+    """Shard count a run in ``mode`` will see — mirrors
+    ``engine.run_resilient``'s host/shard resolution so the skew plan is
+    derived for the exact all-to-all it will route.  None when the mesh
+    is not known yet (distributed mode without a mesh)."""
+    mesh_hosts = (int(opts.mesh.shape[opts.data_axis])
+                  if opts.mesh is not None else None)
+    if mode == "distributed":
+        return mesh_hosts
+    H = opts.num_hosts if opts.num_hosts is not None else (mesh_hosts or 1)
+    return int(opts.num_shards if opts.num_shards is not None
+               else (mesh_hosts or H))
 
 
 def _infer_mode(opts: ExecutionOptions, mode: str | None) -> str:
@@ -620,8 +709,13 @@ class Optimized:
             # `padded` distinguishes the (items, n_valid) calling convention
             # from the exact (items,) one at the same traced shape — e.g. a
             # pow2 batch of 5 padded to 8 vs an exact-fit batch of 8
+            # repr(opts.shuffle) digests the FULL resolved shuffle record —
+            # capacity/strict plus the skew planner's boundaries and hot
+            # splits — so warm repeats re-derive nothing and two plans with
+            # different boundary layouts never share an executable
             extra=(f"padded={padded}", f"bucket={opts.items_bucket}",
                    opts.scatter_output, opts.shuffle_capacity,
+                   repr(opts.shuffle),
                    knobs["combine_impl"], knobs["use_kernels"],
                    knobs["chunk_pairs"], knobs["key_block"],
                    knobs["bucket_size"], knobs["level_fanouts"]))
@@ -701,13 +795,26 @@ class Optimized:
                 shuffle_capacity=opts.shuffle_capacity,
                 chunk_pairs=chunk_pairs, key_block=key_block,
                 bucket_size=knobs["bucket_size"],
-                level_fanouts=knobs["level_fanouts"])
+                level_fanouts=knobs["level_fanouts"],
+                shuffle_plan=sk.plan_from_options(
+                    mr.app.key_space, S, opts.shuffle, flow=plan.flow,
+                    spec=plan.spec, value_aval=mr.app.value_aval))
             # the persistent jitted shard_map IS the executable: repeat
             # calls hit jit's trace cache instead of rebuilding the
             # shard_map per call like the old run_distributed did
             return pc.CompiledEntry(executable=jitted, plan=plan,
                                     tiling=mr.tiling, n_bucket=self.n_bucket,
                                     mode="distributed", aux=post)
+
+        S_res = _shard_count(opts, "resilient")
+        res_plan = sk.plan_from_options(
+            mr.app.key_space, S_res, opts.shuffle, flow=plan.flow,
+            spec=plan.spec, value_aval=mr.app.value_aval)
+        # resilient mode is never plan-cached (the drive closure is a host
+        # driver, not an executable), so the jitted phase functions cache
+        # on the MapReduce instance — repeat run_resilient() calls pay
+        # dispatch, not re-trace/re-compile, of phases A and B
+        jits = mr.__dict__.setdefault("_resilient_jits", {})
 
         def drive(items):  # resilient host driver — not XLA-compilable
             return eng.run_resilient(
@@ -723,7 +830,9 @@ class Optimized:
                 bucket_size=opts.bucket_size,
                 level_fanouts=opts.level_fanouts,
                 strict_shuffle=opts.strict_shuffle,
-                coord=opts.coord, retry=opts.retry, chaos=opts.chaos)
+                shuffle_plan=res_plan,
+                coord=opts.coord, retry=opts.retry, chaos=opts.chaos,
+                jit_cache=jits)
 
         return pc.CompiledEntry(executable=drive, plan=plan,
                                 tiling=mr.tiling, n_bucket=self.n_bucket,

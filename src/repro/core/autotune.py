@@ -119,6 +119,12 @@ class StreamTiling:
 # ---------------------------------------------------------------------------
 
 
+#: key prefix of the skew planner's histogram decisions (core/skew.py),
+#: which share this cache file with the StreamTiling entries — same
+#: micro-probe posture, same opt-in persistence.
+SKEW_KEY_PREFIX = "skew|"
+
+
 def tune_cache_path() -> str | None:
     """Path of the persistent tuning cache, or None when disabled."""
     p = os.environ.get(TUNE_CACHE_ENV, "").strip()

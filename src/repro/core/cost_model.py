@@ -175,8 +175,17 @@ def estimate_flow_cost(
     chunk_pairs: int | None = None,
     max_values_per_key: int | None = None,
     backend: str = "cpu",
+    skew_factor: float = 1.0,
 ) -> FlowCost:
-    """Model one flow's cost for a workload (see module docstring)."""
+    """Model one flow's cost for a workload (see module docstring).
+
+    ``skew_factor`` is the sampled key-distribution imbalance (max range
+    load over the uniform share, >= 1.0, from ``core/skew.py``): the
+    shuffled flows (sort/reduce) are paced by their HOTTEST shard, so
+    their estimate scales by the imbalance — which is how ``flow="auto"``
+    prices a skewed all-to-all against the skew-immune stream flow.  The
+    table-merge flows are unaffected (their per-shard work is
+    item-partitioned, not key-partitioned)."""
     n, k = max(int(n_pairs), 1), max(int(key_space), 1)
     lmax = max_values_per_key or max(n // k, 1)
     chunk = chunk_pairs or n
@@ -219,6 +228,13 @@ def estimate_flow_cost(
         est = max(v for _, v in terms)  # overlappable roofline terms
     else:
         raise ValueError(f"unknown backend profile {backend!r}")
+    sf = max(float(skew_factor), 1.0)
+    if sf > 1.0 and flow in ("sort", "reduce"):
+        # the all-to-all flows finish when their hottest destination
+        # shard does: scale the whole estimate by the imbalance factor
+        extra = est * (sf - 1.0)
+        terms = list(terms) + [("skew", extra)]
+        est += extra
     return FlowCost(flow=flow, est_s=est, model_bytes=model_bytes,
                     terms=tuple(terms))
 
@@ -241,6 +257,7 @@ def choose_flow(
     max_values_per_key: int | None = None,
     candidates: tuple[str, ...] = ("stream", "sort"),
     backend: str | None = None,
+    skew_factor: float = 1.0,
 ) -> CostReport:
     """Rank ``candidates`` by modeled cost and pick the cheapest.
 
@@ -255,7 +272,7 @@ def choose_flow(
                             holder_bytes=holder_bytes,
                             chunk_pairs=chunk_pairs,
                             max_values_per_key=max_values_per_key,
-                            backend=backend)
+                            backend=backend, skew_factor=skew_factor)
          for f in candidates),
         key=lambda fc: fc.est_s)
     return CostReport(chosen=costs[0].flow, n_pairs=n_pairs,

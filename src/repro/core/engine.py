@@ -178,7 +178,8 @@ def _check_sort_kernel_plan(spec, key_space: int, value_aval,
                             use_kernels: bool,
                             bucket_size: int | None,
                             level_fanouts: tuple[int, ...] | None,
-                            on_fallback: Callable | None):
+                            on_fallback: Callable | None,
+                            skew_factor: float | None = None):
     """Resolve the radix level plan for the kernel sort fold.
 
     Returns ``(use_kernels, bucket_size, level_fanouts)``.  A key space
@@ -186,7 +187,9 @@ def _check_sort_kernel_plan(spec, key_space: int, value_aval,
     :class:`LoweringFallbackWarning` (once, through the plan sink) with the
     plan diagnostics and drops to the pure-JAX multi-pass sorted fold —
     instead of the old behaviour of silently clamping the bucket count
-    past the padded-layout envelope."""
+    past the padded-layout envelope.  ``skew_factor`` (the sampled
+    fixed-width imbalance) shrinks the leaf bucket so a hot leaf's padded
+    region still fits the partition's VMEM envelope."""
     if not use_kernels or bucket_size is not None:
         return use_kernels, bucket_size, level_fanouts
     if not spec.kernel_monoid_ok(value_aval):
@@ -194,7 +197,8 @@ def _check_sort_kernel_plan(spec, key_space: int, value_aval,
     from repro.kernels import ops
 
     d, _ = spec.holder_width(value_aval)
-    plan = ops.plan_radix_levels(key_space, d=d + 1)
+    plan = ops.plan_radix_levels(key_space, d=d + 1,
+                                 skew_factor=skew_factor)
     if not plan.feasible:
         col._emit_fallback(
             f"sort flow: {plan.reason}; degrading to the pure-JAX "
@@ -666,7 +670,7 @@ def shuffle_bucket_capacity(n_pairs: int, num_shards: int) -> int:
 
 
 def _bucketize_pairs(app, stream: col.PairStream, *, num_shards,
-                     shuffle_capacity):
+                     shuffle_capacity, shuffle_plan=None):
     """Pack a shard's pair stream into per-destination send buckets.
 
     Range partitioning: key k -> shard ``k // ceil(K/S)`` — the shard key
@@ -677,6 +681,13 @@ def _bucketize_pairs(app, stream: col.PairStream, *, num_shards,
     are a pure function of the shard's items, so a lost shard's
     contribution to every key range can be deterministically recomputed.
 
+    ``shuffle_plan`` (a ``skew.ShufflePlan``) replaces the fixed-width
+    arithmetic with sampled balanced range boundaries (searchsorted
+    routing) and round-robins each hot key's occurrences over its split
+    destinations; ``None`` keeps the legacy path bitwise.  The default
+    capacity envelope then derives from the plan's sampled p-max
+    destination load instead of the uniform 2x share.
+
     Returns ``(send_keys [S, B], send_vals [S, B, ...], overflow)`` where
     ``overflow`` counts the valid pairs that did NOT fit their
     destination bucket (silently dropped by the pre-PR-5 shuffle).
@@ -685,9 +696,36 @@ def _bucketize_pairs(app, stream: col.PairStream, *, num_shards,
     S = num_shards
     K_local = -(-K // S)  # ceil
     n = stream.keys.shape[0]
-    B = shuffle_capacity or shuffle_bucket_capacity(n, S)
+    if shuffle_capacity:
+        B = shuffle_capacity
+    elif shuffle_plan is not None:
+        B = shuffle_plan.capacity_for(n)
+    else:
+        B = shuffle_bucket_capacity(n, S)
 
-    tgt = jnp.where(stream.valid, stream.keys // K_local, S)
+    if shuffle_plan is None:
+        tgt = jnp.where(stream.valid, stream.keys // K_local, S)
+    else:
+        cuts = jnp.asarray(shuffle_plan.boundaries[1:-1], jnp.int32)
+        tgt = jnp.searchsorted(cuts, stream.keys, side="right"
+                               ).astype(jnp.int32)
+        if shuffle_plan.hot_keys:
+            hk = jnp.asarray(shuffle_plan.hot_keys, jnp.int32)
+            hw = jnp.asarray(shuffle_plan.hot_ways, jnp.int32)
+            owners = jnp.asarray(
+                [shuffle_plan.hot_owner(k) for k in shuffle_plan.hot_keys],
+                jnp.int32)
+            eq = stream.keys[:, None] == hk[None, :]  # [n, H]
+            is_hot = jnp.any(eq, axis=1)
+            hidx = jnp.argmax(eq, axis=1)
+            # occurrence rank of each hot pair within its key: round-robin
+            # over the split destinations starting at the range owner
+            occ = jnp.take_along_axis(
+                jnp.cumsum(eq.astype(jnp.int32), axis=0),
+                hidx[:, None], axis=1)[:, 0] - 1
+            dest = (owners[hidx] + occ % hw[hidx]) % S
+            tgt = jnp.where(is_hot, dest, tgt)
+        tgt = jnp.where(stream.valid, tgt, S)
     oh = (tgt[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
     rank = jnp.take_along_axis(
         jnp.cumsum(oh, axis=0), jnp.minimum(tgt, S - 1)[:, None],
@@ -705,18 +743,38 @@ def _bucketize_pairs(app, stream: col.PairStream, *, num_shards,
     return send_keys, send_vals, overflow
 
 
-def _localize_recv(app, recv_keys, recv_vals, *, num_shards, shard_index
-                   ) -> tuple[col.PairStream, jax.Array]:
+def _localize_recv(app, recv_keys, recv_vals, *, num_shards, shard_index,
+                   shuffle_plan=None) -> tuple[col.PairStream, jax.Array]:
     """Rebase a received ``[S, B]`` bucket stack into the shard's local key
     range ``[0, K_local]`` (sentinel = K_local).  Shared between the
     all-to-all receive side and the resilient driver's host-side assembly
     (which concatenates the same buckets in the same source order the
-    tiled all-to-all would)."""
+    tiled all-to-all would).
+
+    With a ``shuffle_plan`` the shard's range is its boundary span
+    ``[b[i], b[i+1])`` rebased into the STATIC width ``plan.width`` (the
+    widest span — shard_map out-widths must be uniform; narrow ranges pad
+    with zero-count rows, the same posture as the legacy ceil padding).
+    Hot keys are dropped to the sentinel here: their pairs fold into the
+    separate hot-table path and re-enter the owner's range at the
+    finalize patch."""
     K = app.key_space
-    K_local = -(-K // num_shards)
-    lo = shard_index * K_local
-    lkeys = jnp.where(recv_keys < K, recv_keys - lo, K_local)
-    lkeys = jnp.where((lkeys >= 0) & (lkeys <= K_local), lkeys, K_local)
+    if shuffle_plan is None:
+        K_local = -(-K // num_shards)
+        lo = shard_index * K_local
+        lkeys = jnp.where(recv_keys < K, recv_keys - lo, K_local)
+        lkeys = jnp.where((lkeys >= 0) & (lkeys <= K_local), lkeys, K_local)
+    else:
+        K_local = shuffle_plan.width
+        bnd = jnp.asarray(shuffle_plan.boundaries, jnp.int32)
+        lo = bnd[shard_index]
+        hi = bnd[shard_index + 1]
+        inside = (recv_keys >= lo) & (recv_keys < hi)
+        if shuffle_plan.hot_keys:
+            hk = jnp.asarray(shuffle_plan.hot_keys, jnp.int32)
+            inside = inside & ~jnp.any(
+                recv_keys[..., None] == hk, axis=-1)
+        lkeys = jnp.where(inside, recv_keys - lo, K_local)
     lstream = col.PairStream(
         lkeys.reshape(-1),
         jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]), recv_vals),
@@ -725,17 +783,20 @@ def _localize_recv(app, recv_keys, recv_vals, *, num_shards, shard_index
 
 
 def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
-                   shuffle_capacity
-                   ) -> tuple[col.PairStream, jax.Array, jax.Array]:
+                   shuffle_capacity, shuffle_plan=None
+                   ) -> tuple[col.PairStream, jax.Array, jax.Array,
+                              tuple]:
     """Key-partitioned all-to-all of raw pairs (the reduce-flow shuffle).
 
     Returns the received local stream (keys rebased into ``[0, K_local]``),
-    this shard's key offset, and the shard's overflow count (valid pairs
-    past the per-destination capacity — see :func:`_bucketize_pairs`).
-    """
+    this shard's key offset, the shard's overflow count (valid pairs past
+    the per-destination capacity — see :func:`_bucketize_pairs`), and the
+    raw flat received ``(keys, vals)`` — the hot-key split path folds its
+    partial tables from the latter, since hot pairs are routed OUTSIDE
+    their owner's range and dropped by the localization."""
     send_keys, send_vals, overflow = _bucketize_pairs(
         app, stream, num_shards=num_shards,
-        shuffle_capacity=shuffle_capacity)
+        shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan)
 
     recv_keys = lax.all_to_all(send_keys, axis_name, split_axis=0,
                                concat_axis=0, tiled=True)
@@ -746,8 +807,12 @@ def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
 
     me = lax.axis_index(axis_name)
     lstream, lo = _localize_recv(app, recv_keys, recv_vals,
-                                 num_shards=num_shards, shard_index=me)
-    return lstream, lo, overflow
+                                 num_shards=num_shards, shard_index=me,
+                                 shuffle_plan=shuffle_plan)
+    flat_recv = (recv_keys.reshape(-1),
+                 jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]),
+                              recv_vals))
+    return lstream, lo, overflow, flat_recv
 
 
 def _reduce_range(app, lstream: col.PairStream, lo):
@@ -766,20 +831,58 @@ def _reduce_range(app, lstream: col.PairStream, lo):
     return grouped.keys + lo, grouped.values, grouped.counts
 
 
-def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity):
+def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity,
+                     shuffle_plan=None):
     def fn(local_items):
         stream = map_phase(app, local_items)
-        lstream, lo, overflow = _shuffle_pairs(
+        lstream, lo, overflow, _ = _shuffle_pairs(
             app, stream, axis_name=axis_name, num_shards=num_shards,
-            shuffle_capacity=shuffle_capacity)
+            shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan)
         return _reduce_range(app, lstream, lo) + (overflow[None],)
 
     return fn
 
 
+def _fold_hot_tables(app, spec, recv_keys, recv_vals, shuffle_plan):
+    """Fold a shard's received hot-key pairs into ``[H, ...]`` partial
+    holder tables (H = number of split keys; identity rows for hot keys
+    this shard received nothing of).  The split destinations' partials
+    recombine exactly through the monoid merge — the reason hot splitting
+    is gated on :func:`skew.hot_split_ok`."""
+    hk = jnp.asarray(shuffle_plan.hot_keys, jnp.int32)
+    H = len(shuffle_plan.hot_keys)
+    eq = recv_keys[:, None] == hk[None, :]
+    hidx = jnp.where(jnp.any(eq, axis=1),
+                     jnp.argmax(eq, axis=1).astype(jnp.int32), H)
+    sc = col.StreamCombiner(spec, H, app.value_aval)
+    state = sc.fold_chunk(sc.init_state(),
+                          col.PairStream(hidx, recv_vals, H))
+    return sc.tables_counts(state)
+
+
+def _patch_hot_rows(spec, tables, counts, hot_tables, hot_counts,
+                    shuffle_plan, shard_index, width):
+    """Land the MERGED hot-key aggregates back into the range tables of
+    each key's owner shard (rows the localization left at identity),
+    right before finalize.  Non-owner shards patch the dropped sentinel
+    row ``width`` (mode="drop")."""
+    hk = jnp.asarray(shuffle_plan.hot_keys, jnp.int32)
+    owners = jnp.asarray(
+        [shuffle_plan.hot_owner(k) for k in shuffle_plan.hot_keys],
+        jnp.int32)
+    bnd = jnp.asarray(shuffle_plan.boundaries, jnp.int32)
+    rows = jnp.where(owners == shard_index, hk - bnd[owners], width)
+    counts = counts.at[rows].set(hot_counts.astype(counts.dtype),
+                                 mode="drop")
+    tables = jax.tree.map(
+        lambda t, h: t.at[rows].set(h.astype(t.dtype), mode="drop"),
+        tables, hot_tables)
+    return tables, counts
+
+
 def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
                    use_kernels, chunk_pairs, bucket_size=None,
-                   level_fanouts=None, on_fallback=None):
+                   level_fanouts=None, on_fallback=None, shuffle_plan=None):
     """Sort flow per shard: the reduce-flow key-partitioned all-to-all
     (bucket boundaries == shard key ranges, O(N) traffic), then the local
     sort collector folds the received presorted-by-range segment in
@@ -790,36 +893,57 @@ def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
     all-to-all is the distributed form of radix level 0 (wire format
     unchanged from the reduce flow), and each shard re-derives the
     remaining level decomposition for its own ``K/S`` range — one fewer
-    level than the local pipeline needs at the full key space."""
+    level than the local pipeline needs at the full key space.
+
+    With a skew ``shuffle_plan``, the ranges are the sampled balanced
+    boundaries and each hot key's occurrences arrive split over several
+    shards: every shard folds its hot slice into ``[H, ...]`` partial
+    tables, a monoid collective merges them, and the owner shard patches
+    the merged row into its range before finalize — exact by the monoid
+    merge argument."""
 
     def fn(local_items):
         stream = map_phase(app, local_items)
-        lstream, lo, overflow = _shuffle_pairs(
+        lstream, lo, overflow, flat_recv = _shuffle_pairs(
             app, stream, axis_name=axis_name, num_shards=num_shards,
-            shuffle_capacity=shuffle_capacity)
+            shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan)
+        hot_patch = None
+        if shuffle_plan is not None and shuffle_plan.hot_keys:
+            ht, hc = _fold_hot_tables(app, spec, flat_recv[0],
+                                      flat_recv[1], shuffle_plan)
+            mt, mc = merge_tables_collective(spec, ht, hc, axis_name)
+            me = lax.axis_index(axis_name)
+
+            def hot_patch(tables, counts):
+                return _patch_hot_rows(spec, tables, counts, mt, mc,
+                                       shuffle_plan, me,
+                                       lstream.key_space)
         out = _sort_range_fold(app, spec, lstream, lo,
                                use_kernels=use_kernels,
                                chunk_pairs=chunk_pairs,
                                bucket_size=bucket_size,
                                level_fanouts=level_fanouts,
-                               on_fallback=on_fallback)
+                               on_fallback=on_fallback,
+                               skew_factor=(shuffle_plan.imbalance
+                                            if shuffle_plan else None),
+                               hot_patch=hot_patch)
         return out + (overflow[None],)
 
     return fn
 
 
-def _sort_range_fold(app, spec, lstream: col.PairStream, lo, *,
-                     use_kernels, chunk_pairs, bucket_size=None,
-                     level_fanouts=None, on_fallback=None):
-    """Sort-flow tail for one key range: fold the localized presorted-by-
-    range segment with the local sort collector in ``chunk_pairs``-sized
-    pieces and finalize the range.  Shared between the all-to-all shard fn
-    and the resilient driver's per-range replay (identical chunking, so a
-    recovered range is bitwise the no-failure range)."""
+def _sort_range_tables(app, spec, lstream: col.PairStream, *,
+                       use_kernels, chunk_pairs, bucket_size=None,
+                       level_fanouts=None, on_fallback=None,
+                       skew_factor=None):
+    """Fold one localized key range to UN-finalized ``(tables, counts)``
+    with the sort collector in ``chunk_pairs``-sized pieces — the shared
+    core of :func:`_sort_range_fold` and the resilient driver's hot-split
+    two-pass phase B (which must patch merged hot rows in between)."""
     K_local = lstream.key_space
     uk, bs, lf = _check_sort_kernel_plan(
         spec, K_local, app.value_aval, use_kernels, bucket_size,
-        level_fanouts, on_fallback)
+        level_fanouts, on_fallback, skew_factor=skew_factor)
     sc = col.SortCombiner(
         spec, K_local, app.value_aval,
         sort_fold_fn=_sort_fold_kernel(uk, bs, lf))
@@ -845,7 +969,28 @@ def _sort_range_fold(app, spec, lstream: col.PairStream, lo, *,
                 state, col.PairStream(ck, cv, K_local)), None
 
         state, _ = lax.scan(body, state, (keys_p, vals_p))
-    tables, counts = sc.tables_counts(state)
+    return sc.tables_counts(state)
+
+
+def _sort_range_fold(app, spec, lstream: col.PairStream, lo, *,
+                     use_kernels, chunk_pairs, bucket_size=None,
+                     level_fanouts=None, on_fallback=None,
+                     skew_factor=None, hot_patch=None):
+    """Sort-flow tail for one key range: fold the localized presorted-by-
+    range segment with the local sort collector in ``chunk_pairs``-sized
+    pieces and finalize the range.  Shared between the all-to-all shard fn
+    and the resilient driver's per-range replay (identical chunking, so a
+    recovered range is bitwise the no-failure range).  ``hot_patch`` (the
+    skew hot-split path) rewrites the merged hot rows into the tables
+    between the fold and the finalize."""
+    K_local = lstream.key_space
+    tables, counts = _sort_range_tables(
+        app, spec, lstream, use_kernels=use_kernels,
+        chunk_pairs=chunk_pairs, bucket_size=bucket_size,
+        level_fanouts=level_fanouts, on_fallback=on_fallback,
+        skew_factor=skew_factor)
+    if hot_patch is not None:
+        tables, counts = hot_patch(tables, counts)
     keys = jnp.arange(K_local, dtype=jnp.int32) + lo
     vals = jax.vmap(spec.finalize)(keys, tables, counts)
     return keys, vals, counts
@@ -881,6 +1026,44 @@ def _distributed_tiling(app, plan, items, num_shards, *, use_kernels,
     if chunk_pairs is None:
         chunk_pairs = DEFAULT_CHUNK_PAIRS
     return chunk_pairs, key_block
+
+
+def _densify_ranges(keys, values, counts, shuffle_plan):
+    """Scatter concatenated boundary-range outputs into the dense
+    ``keys == arange(K)`` layout.
+
+    The legacy fixed-width layout has row index == key by construction
+    (contiguous ``ceil(K/S)`` spans, padding at the tail), so consumers
+    may index values by key.  Balanced boundary ranges pad each shard to
+    the WIDEST span, so row != key — this rebuilds the dense layout.
+
+    Which rows are authoritative is STATIC: shard ``s``'s output row
+    ``i`` is real iff ``i`` is inside its actual boundary span (rows past
+    it are pads whose keys belong to the NEXT shard's range and must not
+    shadow it).  Every key has exactly one authoritative row, so the
+    scatter covers all of [0, K) — including count-0 keys, whose rows
+    carry the flow's own absent-key value (finalize-of-identity /
+    reduce-over-pads), keeping the dense result bitwise the single-host
+    one."""
+    import numpy as np
+
+    K = shuffle_plan.key_space
+    b = shuffle_plan.boundaries
+    W = shuffle_plan.width
+    spans = np.asarray([b[s + 1] - b[s]
+                        for s in range(shuffle_plan.num_shards)])
+    auth = jnp.asarray(
+        (np.arange(W)[None, :] < spans[:, None]).reshape(-1))
+    slot = jnp.where(auth, keys, K)
+    dcounts = jnp.zeros((K,), counts.dtype).at[slot].set(
+        jnp.where(auth, counts, 0), mode="drop")
+    dvalues = jax.tree.map(
+        lambda v: jnp.zeros((K,) + v.shape[1:], v.dtype)
+        .at[slot].set(
+            jnp.where(auth.reshape((-1,) + (1,) * (v.ndim - 1)), v,
+                      jnp.zeros((), v.dtype)), mode="drop"),
+        values)
+    return jnp.arange(K, dtype=jnp.int32), dvalues, dcounts
 
 
 def _surface_overflow(plan, overflow, *, strict: bool,
@@ -949,6 +1132,7 @@ def run_distributed(
     bucket_size: int | None = None,
     level_fanouts: tuple[int, ...] | None = None,
     strict_shuffle: bool = False,
+    shuffle_plan=None,
 ):
     """shard_map the chosen flow over ``data_axis`` of ``mesh``.
 
@@ -981,7 +1165,8 @@ def run_distributed(
         combine_impl=combine_impl, use_kernels=use_kernels,
         scatter_output=scatter_output, shuffle_capacity=shuffle_capacity,
         chunk_pairs=chunk_pairs, key_block=key_block,
-        bucket_size=bucket_size, level_fanouts=level_fanouts)
+        bucket_size=bucket_size, level_fanouts=level_fanouts,
+        shuffle_plan=shuffle_plan)
     return post(jitted(items), strict_shuffle=strict_shuffle)
 
 
@@ -999,6 +1184,7 @@ def build_distributed_fn(
     key_block: int | None = None,
     bucket_size: int | None = None,
     level_fanouts: tuple[int, ...] | None = None,
+    shuffle_plan=None,
 ):
     """Build the persistent distributed executable for one (plan, mesh).
 
@@ -1033,12 +1219,24 @@ def build_distributed_fn(
                             use_kernels=use_kernels, chunk_pairs=chunk_pairs,
                             bucket_size=bucket_size,
                             level_fanouts=level_fanouts,
-                            on_fallback=_plan_fallback_cb(plan))
+                            on_fallback=_plan_fallback_cb(plan),
+                            shuffle_plan=shuffle_plan)
         out_spec = (P(data_axis), P(data_axis), P(data_axis), P(data_axis))
     else:
+        if shuffle_plan is not None and shuffle_plan.hot_keys:
+            raise ValueError(
+                "hot-key splitting needs the sort flow's monoid tables; "
+                "the reduce flow takes boundary rebalancing only")
         fn = _reduce_shard_fn(app, axis_name=data_axis, num_shards=S,
-                              shuffle_capacity=shuffle_capacity)
+                              shuffle_capacity=shuffle_capacity,
+                              shuffle_plan=shuffle_plan)
         out_spec = (P(data_axis), P(data_axis), P(data_axis), P(data_axis))
+    if (shuffle_plan is not None
+            and plan.flow in ("reduce", "sort")
+            and shuffle_plan.num_shards != S):
+        raise ValueError(
+            f"shuffle_plan was derived for {shuffle_plan.num_shards} "
+            f"shards but the mesh data axis has {S}")
 
     sm = shard_map(fn, mesh=mesh, in_specs=(P(data_axis),),
                    out_specs=out_spec, check_rep=False)
@@ -1049,6 +1247,8 @@ def build_distributed_fn(
             keys, values, counts, overflow = out
             _surface_overflow(plan, overflow, strict=strict_shuffle,
                               shuffle_capacity=shuffle_capacity)
+            if shuffle_plan is not None:
+                return _densify_ranges(keys, values, counts, shuffle_plan)
             return keys, values, counts
         return out
 
@@ -1059,6 +1259,32 @@ def build_distributed_fn(
 # Fault-tolerant elastic driver: deterministic shard re-execution +
 # partial-aggregate recovery (run_resilient)
 # ---------------------------------------------------------------------------
+
+
+def _merge_tables_host(spec, tables_seq, counts_seq):
+    """Host-side UN-finalized merge of stacked partial holder tables —
+    the shared monoid/``spec.merge`` core of :func:`merge_partial_tables`
+    and the resilient hot-split recombine (which must patch the merged
+    hot rows into range tables before finalizing)."""
+    leaves_seq = [jax.tree.leaves(t) for t in tables_seq]
+    treedef = jax.tree.structure(tables_seq[0])
+    if (spec.monoids is not None
+            and len(spec.monoids) == len(leaves_seq[0])):
+        merged = []
+        for i, mono in enumerate(spec.monoids):
+            stack = jnp.stack([ls[i] for ls in leaves_seq])
+            try:
+                red = mono.dense_reduce(stack, axis=0)
+            except KeyError:  # no dense lowering: shard-0 table (the
+                red = stack[0]  # collective all-gather fallback's g[0])
+            merged.append(red.astype(leaves_seq[0][i].dtype))
+        return jax.tree.unflatten(treedef, merged)
+    tables = tables_seq[0]
+    na = counts_seq[0]
+    for tab, nb in zip(tables_seq[1:], counts_seq[1:]):
+        tables = jax.vmap(spec.merge)(tables, tab, na, nb)
+        na = na + nb
+    return tables
 
 
 def merge_partial_tables(app, spec, tables_seq, counts_seq):
@@ -1077,25 +1303,7 @@ def merge_partial_tables(app, spec, tables_seq, counts_seq):
     total_counts = jnp.sum(counts_stack, axis=0).astype(counts_seq[0].dtype)
 
     if spec.merge is not None:
-        leaves_seq = [jax.tree.leaves(t) for t in tables_seq]
-        treedef = jax.tree.structure(tables_seq[0])
-        if (spec.monoids is not None
-                and len(spec.monoids) == len(leaves_seq[0])):
-            merged = []
-            for i, mono in enumerate(spec.monoids):
-                stack = jnp.stack([ls[i] for ls in leaves_seq])
-                try:
-                    red = mono.dense_reduce(stack, axis=0)
-                except KeyError:  # no dense lowering: shard-0 table (the
-                    red = stack[0]  # collective all-gather fallback's g[0])
-                merged.append(red.astype(leaves_seq[0][i].dtype))
-            tables = jax.tree.unflatten(treedef, merged)
-        else:
-            tables = tables_seq[0]
-            na = counts_seq[0]
-            for tab, nb in zip(tables_seq[1:], counts_seq[1:]):
-                tables = jax.vmap(spec.merge)(tables, tab, na, nb)
-                na = na + nb
+        tables = _merge_tables_host(spec, tables_seq, counts_seq)
         out = col.finalize_tables(spec, tables, total_counts,
                                   total_counts.shape[0])
         return out.keys, out.values, out.counts
@@ -1131,9 +1339,11 @@ def run_resilient(
     bucket_size: int | None = None,
     level_fanouts: tuple[int, ...] | None = None,
     strict_shuffle: bool = False,
+    shuffle_plan=None,
     coord=None,
     retry=None,
     chaos=None,
+    jit_cache: dict | None = None,
 ):
     """Fault-tolerant distributed MapReduce driver.
 
@@ -1228,6 +1438,22 @@ def run_resilient(
     if flow in ("stream", "sort", "combine") and spec is None:
         raise ValueError(f"{flow} flow needs a derived combiner spec")
 
+    # the host driver rebuilds its phase closures per call; `jit_cache`
+    # (held by the caller, e.g. per-MapReduce) keys the jitted fns by every
+    # capture that reaches a trace, so steady-state calls skip the
+    # re-trace/re-compile and pay only dispatch
+    _jits = jit_cache if jit_cache is not None else {}
+    _jkey = (flow, H, S, per, chunk_pairs, key_block, use_kernels,
+             combine_impl, shuffle_capacity, strict_shuffle, bucket_size,
+             level_fanouts,
+             shuffle_plan.epoch if shuffle_plan is not None else None)
+
+    def _cached_jit(name, fn):
+        got = _jits.get((name,) + _jkey)
+        if got is None:
+            got = _jits[(name,) + _jkey] = jax.jit(fn)
+        return got
+
     def shard_slice(s: int):
         return jax.tree.map(lambda a: a[s * per:(s + 1) * per], items)
 
@@ -1245,15 +1471,38 @@ def run_resilient(
                 combine_impl=combine_impl, use_kernels=use_kernels)
             return {"tables": tables, "counts": counts}
     else:  # reduce | sort: the all-to-all wire format is the partial
+        if (shuffle_plan is not None and shuffle_plan.hot_keys
+                and flow != "sort"):
+            raise ValueError(
+                "hot-key splitting needs the sort flow's monoid tables; "
+                "the reduce flow takes boundary rebalancing only")
+        if shuffle_plan is not None and shuffle_plan.num_shards != S:
+            raise ValueError(
+                f"shuffle_plan was derived for {shuffle_plan.num_shards} "
+                f"shards but run_resilient partitions into {S}")
+        # the boundary epoch rides in the checkpointable wire format:
+        # a durable partial bucketized under DIFFERENT boundaries must
+        # never be merged with this run's (the send buckets mean
+        # different key ranges) — restore rejects on mismatch and falls
+        # back to the deterministic recompute, keeping recovery bitwise
+        plan_epoch = (shuffle_plan.epoch if shuffle_plan is not None
+                      else 0)
+
         def _partial(local_items):
             send_keys, send_vals, overflow = _bucketize_pairs(
                 app, map_phase(app, local_items), num_shards=S,
-                shuffle_capacity=shuffle_capacity)
+                shuffle_capacity=shuffle_capacity,
+                shuffle_plan=shuffle_plan)
             return {"send_keys": send_keys, "send_vals": send_vals,
-                    "overflow": overflow}
+                    "overflow": overflow,
+                    "boundary_epoch": jnp.full((1,), plan_epoch,
+                                               jnp.uint32)}
 
-    partial_fn = jax.jit(_partial)
-    partial_example = jax.eval_shape(_partial, shard_slice(0))
+    partial_fn = _cached_jit("partial", _partial)
+    partial_example = _jits.get(("partial_example",) + _jkey)
+    if partial_example is None:
+        partial_example = _jits[("partial_example",) + _jkey] = (
+            jax.eval_shape(_partial, shard_slice(0)))
 
     def save_partial(s: int, p) -> None:
         if ckpt_dir is None:
@@ -1293,6 +1542,17 @@ def run_resilient(
                 f"({e.reason}); quarantined, falling back to "
                 f"deterministic recompute")
             return None
+        if flow in ("reduce", "sort"):
+            got = int(np.asarray(tree["boundary_epoch"]).reshape(-1)[0])
+            if got != plan_epoch:
+                log.epoch_rejects.append(s)
+                events.append(
+                    f"checkpoint: shard {s} partial carries boundary "
+                    f"epoch {got} != this run's {plan_epoch} (the skew "
+                    f"boundaries changed between runs); discarded — its "
+                    f"send buckets mean different key ranges — and the "
+                    f"deterministic recompute takes over")
+                return None
         return tree
 
     # -- durable control plane: coordination store + chaos resolution -------
@@ -1523,36 +1783,114 @@ def run_resilient(
         _surface_overflow(plan, overflow, strict=strict_shuffle,
                           shuffle_capacity=shuffle_capacity)
 
-        def _range_out(r, recv_keys, recv_vals):
-            lstream, lo = _localize_recv(app, recv_keys, recv_vals,
-                                         num_shards=S, shard_index=r)
-            if flow == "reduce":
-                return _reduce_range(app, lstream, lo)
-            return _sort_range_fold(
-                app, spec, lstream, lo, use_kernels=use_kernels,
-                chunk_pairs=chunk_pairs, bucket_size=bucket_size,
-                level_fanouts=level_fanouts, on_fallback=cb)
-
-        range_fn = jax.jit(_range_out)
-        outs = []
-        for r in range(S):
+        def _assemble(sk, sv):
             # the host-side transpose of the tiled all-to-all: destination
-            # r receives every source's r-th bucket, in source order
-            recv_keys = jnp.stack(
-                [partials[s]["send_keys"][r] for s in range(S)])
+            # r receives every source's r-th bucket, in source order —
+            # swapaxes turns the stacked (source, dest, B) sends into a
+            # (dest, source, B) batch the vmapped phase B consumes whole
+            recv_keys = jnp.swapaxes(jnp.stack(sk), 0, 1)
             recv_vals = jax.tree.map(
-                lambda *leaves: jnp.stack(leaves),
-                *[jax.tree.map(lambda v, r=r: v[r],
-                               partials[s]["send_vals"])
-                  for s in range(S)])
-            outs.append(range_fn(jnp.asarray(r, jnp.int32),
-                                 recv_keys, recv_vals))
-        keys = jnp.concatenate([o[0] for o in outs])
-        values = jax.tree.map(
-            lambda *leaves: jnp.concatenate(leaves),
-            *[o[1] for o in outs])
-        counts = jnp.concatenate([o[2] for o in outs])
+                lambda *leaves: jnp.swapaxes(jnp.stack(leaves), 0, 1), *sv)
+            return recv_keys, recv_vals
 
+        def _flatten(stacked):
+            # (S, W) range batches, flattened in shard order — identical
+            # to concatenating the S per-range outputs
+            keys = stacked[0].reshape(-1)
+            values = jax.tree.map(
+                lambda v: v.reshape((-1,) + v.shape[2:]), stacked[1])
+            counts = stacked[2].reshape(-1)
+            if shuffle_plan is not None:
+                keys, values, counts = _densify_ranges(
+                    keys, values, counts, shuffle_plan)
+            return keys, values, counts
+
+        send_keys = [partials[s]["send_keys"] for s in range(S)]
+        send_vals = [partials[s]["send_vals"] for s in range(S)]
+        ranks = jnp.arange(S, dtype=jnp.int32)
+
+        skew_hot = (shuffle_plan is not None and shuffle_plan.hot_keys
+                    and flow == "sort")
+        if not skew_hot:
+            def _range_out(r, recv_keys, recv_vals):
+                lstream, lo = _localize_recv(
+                    app, recv_keys, recv_vals, num_shards=S,
+                    shard_index=r, shuffle_plan=shuffle_plan)
+                if flow == "reduce":
+                    return _reduce_range(app, lstream, lo)
+                return _sort_range_fold(
+                    app, spec, lstream, lo, use_kernels=use_kernels,
+                    chunk_pairs=chunk_pairs, bucket_size=bucket_size,
+                    level_fanouts=level_fanouts, on_fallback=cb,
+                    skew_factor=(shuffle_plan.imbalance
+                                 if shuffle_plan is not None else None))
+
+            # one dispatch for the whole phase B: it is embarrassingly
+            # parallel over destinations, so vmap batches the S per-range
+            # calls and the assemble/flatten/densify glue fuses alongside
+            def _phase_b(sk, sv):
+                recv_keys, recv_vals = _assemble(sk, sv)
+                stacked = jax.vmap(_range_out)(ranks, recv_keys, recv_vals)
+                return _flatten(stacked)
+
+            keys, values, counts = _cached_jit("phase_b", _phase_b)(
+                send_keys, send_vals)
+        else:
+            # hot-split recombine, host-driven in two passes: (1) each
+            # range folds its un-finalized tables AND its slice of the
+            # split hot keys' pairs; (2) the hot partials merge across
+            # ranges on the host (the mesh-less mirror of the collective
+            # monoid merge); (3) each range patches the merged hot rows
+            # into the owner's table and finalizes — bitwise the
+            # all-to-all shard fn's answer by the monoid merge argument.
+            def _range_tabs(r, recv_keys, recv_vals):
+                lstream, _ = _localize_recv(
+                    app, recv_keys, recv_vals, num_shards=S,
+                    shard_index=r, shuffle_plan=shuffle_plan)
+                tables, counts = _sort_range_tables(
+                    app, spec, lstream, use_kernels=use_kernels,
+                    chunk_pairs=chunk_pairs, bucket_size=bucket_size,
+                    level_fanouts=level_fanouts, on_fallback=cb,
+                    skew_factor=shuffle_plan.imbalance)
+                fk = recv_keys.reshape(-1)
+                fv = jax.tree.map(
+                    lambda v: v.reshape((-1,) + v.shape[2:]), recv_vals)
+                ht, hc = _fold_hot_tables(app, spec, fk, fv,
+                                          shuffle_plan)
+                return tables, counts, ht, hc
+
+            def _range_fin(r, tables, counts, mt, mc):
+                W = shuffle_plan.width
+                lo = jnp.asarray(shuffle_plan.boundaries, jnp.int32)[r]
+                tables, counts = _patch_hot_rows(
+                    spec, tables, counts, mt, mc, shuffle_plan, r, W)
+                keys = jnp.arange(W, dtype=jnp.int32) + lo
+                vals = jax.vmap(spec.finalize)(keys, tables, counts)
+                return keys, vals, counts
+
+            def _hot_merge(ht, hc):
+                mt = _merge_tables_host(
+                    spec, [jax.tree.map(lambda v, r=r: v[r], ht)
+                           for r in range(S)],
+                    [hc[r] for r in range(S)])
+                mc = jnp.sum(hc, axis=0).astype(hc.dtype)
+                return mt, mc
+
+            def _phase_b_hot(sk, sv):
+                recv_keys, recv_vals = _assemble(sk, sv)
+                tables, counts, ht, hc = jax.vmap(_range_tabs)(
+                    ranks, recv_keys, recv_vals)
+                mt, mc = _hot_merge(ht, hc)
+                stacked = jax.vmap(_range_fin, in_axes=(0, 0, 0, None, None))(
+                    ranks, tables, counts, mt, mc)
+                return _flatten(stacked)
+
+            keys, values, counts = _cached_jit("phase_b_hot", _phase_b_hot)(
+                send_keys, send_vals)
+
+    if shuffle_plan is not None and flow in ("reduce", "sort"):
+        log.skew_plan = shuffle_plan.describe()
+        log.boundary_epoch = int(shuffle_plan.epoch)
     log.final_mesh = final_mesh
     log.partitioned = sorted(partitioned)
     log.store_events = tuple(events)

@@ -63,6 +63,10 @@ class ExecutionPlan:
     #: pipeline-fusion decisions (core/pipeline.py): one line per DAG edge
     #: — fused handoff, eliminated dead columns, pushed-down filters.
     fusion: tuple[str, ...] = ()
+    #: skew-adaptive shuffle provenance (core/skew.py): the sampled
+    #: histogram summary (heavy hitters, imbalance factor, sample-vs-cache
+    #: source), the balanced range boundaries, and any hot-key splits.
+    skew: tuple[str, ...] = ()
 
     @property
     def optimized(self) -> bool:
@@ -99,6 +103,8 @@ class ExecutionPlan:
                 lines.append(f"  - {note}")
         for decision in self.fusion:
             lines.append(f"fusion: {decision}")
+        for line in self.skew:
+            lines.append(f"skew: {line}")
         for diag in self.diagnostics:
             lines.append(f"diagnostic: {diag}")
         for event in self.recovery:
@@ -120,8 +126,8 @@ def _cost_candidates(spec: C.CombinerSpec) -> tuple[str, ...]:
     return ("stream",)
 
 
-def flow_cost_report(app, spec: C.CombinerSpec, n_pairs_hint: int
-                     ) -> cm.CostReport:
+def flow_cost_report(app, spec: C.CombinerSpec, n_pairs_hint: int,
+                     *, skew_factor: float = 1.0) -> cm.CostReport:
     """Rank the eligible flows for ``app``/``spec`` at a workload size.
 
     The planner calls this under ``flow="auto"``; benchmarks use it
@@ -134,7 +140,7 @@ def flow_cost_report(app, spec: C.CombinerSpec, n_pairs_hint: int
         n_pairs=n_pairs_hint, key_space=app.key_space, d=d,
         value_bytes=value_bytes, holder_bytes=holder_bytes,
         max_values_per_key=getattr(app, "max_values_per_key", None),
-        candidates=_cost_candidates(spec))
+        candidates=_cost_candidates(spec), skew_factor=skew_factor)
 
 
 def plan_execution(app, *, flow: str = "auto",

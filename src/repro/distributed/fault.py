@@ -228,6 +228,16 @@ class RecoveryLog:
     #: raw control-plane event lines (retries, backoffs, lease adoptions,
     #: quarantines) from the CoordinationStore — no silent retries.
     store_events: tuple = ()
+    #: skew shuffle-plan provenance (boundary spans + split-key shard
+    #: ownership lines) when the run routed by a ``skew.ShufflePlan``.
+    skew_plan: tuple = ()
+    #: content fingerprint of the boundary layout stamped into the
+    #: checkpointable wire format (0 = legacy fixed-width ranges).
+    boundary_epoch: int = 0
+    #: shards whose durable partials carried a STALE boundary epoch
+    #: (bucketized under different key ranges) — rejected at restore and
+    #: recomputed deterministically.
+    epoch_rejects: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> tuple[str, ...]:
         """Human-readable recovery events for ``plan.recovery``."""
@@ -255,6 +265,14 @@ class RecoveryLog:
                 f"corrupt checkpoints: shards {sorted(self.corrupt)} "
                 f"failed checksum verification, quarantined to *.corrupt "
                 f"and recomputed deterministically")
+        if self.epoch_rejects:
+            lines.append(
+                f"stale boundary epochs: shards "
+                f"{sorted(self.epoch_rejects)} checkpointed under "
+                f"different skew boundaries (epoch != "
+                f"{self.boundary_epoch}); rejected and recomputed")
+        for line in self.skew_plan:
+            lines.append(f"skew: {line}")
         if self.dead_hosts:
             lines.append(
                 f"detected dead hosts {sorted(self.dead_hosts)}; "

@@ -221,7 +221,8 @@ def plan_radix_levels(key_space: int, *, d: int = 1, pad_align: int = 256,
                       max_fanout: int | None = None,
                       max_levels: int | None = None,
                       leaf_cap: int | None = None,
-                      budget: int = VMEM_BUDGET) -> RadixPlan:
+                      budget: int = VMEM_BUDGET,
+                      skew_factor: float | None = None) -> RadixPlan:
     """Pick the leaf bucket and per-level fan-outs for a key space.
 
     The leaf is the ``segment_reduce`` block (VMEM-resident ``[leaf, D]``,
@@ -231,10 +232,20 @@ def plan_radix_levels(key_space: int, *, d: int = 1, pad_align: int = 256,
     reported infeasible — the caller warns and falls back instead of
     clamping the bucket count past the padded-layout envelope (the old
     silent degrade).  The budget knobs default to the module constants at
-    call time (patchable in tests)."""
+    call time (patchable in tests).
+
+    ``skew_factor`` (the sampled fixed-width load imbalance from
+    ``core/skew.py``, >= 1.0) halves the leaf cap per power of two of
+    imbalance: under skew the hottest leaf's pair REGION (not the key
+    count) dominates the partition's padded layout, so smaller leaves
+    spread the hot range over more buckets and keep each region inside
+    the VMEM envelope."""
     max_fanout = MAX_RADIX_FANOUT if max_fanout is None else max_fanout
     max_levels = MAX_RADIX_LEVELS if max_levels is None else max_levels
     leaf_cap = LEAF_BUCKET_CAP if leaf_cap is None else leaf_cap
+    if skew_factor is not None and skew_factor > 1.0:
+        shrink = 1 << int(np.ceil(np.log2(float(skew_factor))))
+        leaf_cap = max(leaf_cap // shrink, pad_align)
     leaf = _pow2_floor(max(key_space // max_fanout, 8 * pad_align))
     leaf = min(leaf, _pow2_floor(leaf_cap))
     while leaf > 8 and leaf * max(d, 1) * 4 > budget // 8:

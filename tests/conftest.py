@@ -23,14 +23,51 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 #   REPRO_TEST_KERNELS=1
 #       flips the use_kernels default to True (combine with
 #       JAX_PALLAS_INTERPRET=1 to exercise the Pallas kernel lowerings).
+#   REPRO_TEST_SKEW=zipf
+#       flips the ShuffleOptions.skew default to "auto", so every
+#       distributed/resilient run in the suite goes through the sampled-
+#       histogram shuffle planner (bitwise-parity guarantees make this a
+#       pure routing change).  Tests that assert the fixed-width shuffle
+#       arithmetic itself mark themselves `fixed_shuffle` and skip.
 # ---------------------------------------------------------------------------
 
 FLOW_OVERRIDE = os.environ.get("REPRO_TEST_FLOW", "").strip().lower() or None
 KERNELS_OVERRIDE = (os.environ.get("REPRO_TEST_KERNELS", "").strip().lower()
                     not in ("", "0", "false", "no"))
+SKEW_OVERRIDE = os.environ.get("REPRO_TEST_SKEW", "").strip().lower() or None
+
+
+def _apply_skew_override() -> None:
+    if SKEW_OVERRIDE is None:
+        return
+    import dataclasses
+
+    from repro.core import skew
+
+    # flip only the DEFAULT of the frozen options record: every field has
+    # a default, so __init__.__defaults__ lines up with the field order
+    fields = [f.name for f in dataclasses.fields(skew.ShuffleOptions)]
+    defaults = list(skew.ShuffleOptions.__init__.__defaults__)
+    defaults[fields.index("skew")] = "auto"
+    skew.ShuffleOptions.__init__.__defaults__ = tuple(defaults)
+
+    # ExecutionOptions(shuffle=None) must also route through the planner:
+    # materialize the (now skew="auto") record where None would have
+    # kept the legacy fixed-width arithmetic
+    from repro.core import api
+
+    orig_post = api.ExecutionOptions.__post_init__
+
+    def patched_post(self):
+        orig_post(self)
+        if self.shuffle is None:
+            object.__setattr__(self, "shuffle", skew.ShuffleOptions())
+
+    api.ExecutionOptions.__post_init__ = patched_post
 
 
 def _apply_matrix_overrides() -> None:
+    _apply_skew_override()
     if FLOW_OVERRIDE is None and not KERNELS_OVERRIDE:
         return
     from repro.core import api
@@ -86,6 +123,9 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "purejax_lowering: measures the pure-JAX default "
         "lowering's compiled profile (skipped under REPRO_TEST_KERNELS)")
+    config.addinivalue_line(
+        "markers", "fixed_shuffle: asserts the fixed-width shuffle "
+        "arithmetic/overflow behaviour (skipped under REPRO_TEST_SKEW)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -96,8 +136,13 @@ def pytest_collection_modifyitems(config, items):
     skip_kern = pytest.mark.skip(
         reason="measures the pure-JAX lowering's compiled profile; "
                "REPRO_TEST_KERNELS overrides the lowering")
+    skip_skew = pytest.mark.skip(
+        reason="asserts the fixed-width shuffle arithmetic; "
+               "REPRO_TEST_SKEW routes through the skew planner")
     for item in items:
         if FLOW_OVERRIDE is not None and "auto_flow" in item.keywords:
             item.add_marker(skip_flow)
         if KERNELS_OVERRIDE and "purejax_lowering" in item.keywords:
             item.add_marker(skip_kern)
+        if SKEW_OVERRIDE is not None and "fixed_shuffle" in item.keywords:
+            item.add_marker(skip_skew)

@@ -1,0 +1,475 @@
+"""Skew-adaptive shuffle planning (core/skew.py + the engine routing).
+
+The exactness contracts under test:
+
+* uniform keys: the planner SNAPS to the identity plan, so the engine runs
+  the bitwise-legacy fixed-width arithmetic — skew="auto" output is
+  bitwise-identical to the default, on every flow;
+* skewed keys (Zipf, forced hot key): balanced boundaries + hot-key
+  splitting still equal the single-host oracle bitwise (integer monoids),
+  including a hot key whose mass exceeds one shard's uniform capacity;
+* hot-split recombine: for every commutative-monoid spec in the matrix,
+  splitting a key's pairs over several destinations and merging the
+  partial aggregates equals the unsplit reduce (hypothesis property);
+* the resilient driver's recovery (kill 1 of 8 hosts, restore from
+  checkpointed partials) stays bitwise under skew boundaries, and a
+  checkpoint written under DIFFERENT boundaries is rejected by its epoch
+  stamp and recomputed;
+* the derived capacity envelope sizes to the sampled p-max destination
+  load — a mild-skew run no longer overflows/warns (the PR's bugfix).
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExecutionOptions, LoweringFallbackWarning, MapReduce,
+                        MapReduceApp, ShuffleOptions)
+from repro.core import engine as eng
+from repro.core import plan_cache as pc
+from repro.core import skew
+from repro.core.plan import plan_execution
+
+I32 = jnp.int32
+
+
+def make_app(key_space, *, emit=4, reduce=None):
+    class App(MapReduceApp):
+        pass
+
+    app = App()
+    app.key_space = key_space
+    app.value_aval = jax.ShapeDtypeStruct((), I32)
+    app.max_values_per_key = 4096
+    app.emit_capacity = emit
+    app.map = lambda item, emit_: emit_(item, jnp.ones_like(item))
+    app.reduce = reduce or (lambda k, v, c: jnp.sum(v))
+    return app
+
+
+def zipf_items(key_space, n_items, emit, *, a=1.1, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.zipf(a, size=(n_items, emit)) % key_space
+    return jnp.asarray(keys, I32)
+
+
+# ---------------------------------------------------------------------------
+# derivation unit tests (pure host-side numpy)
+# ---------------------------------------------------------------------------
+
+
+def test_derive_uniform_snaps_to_identity():
+    hist = np.full(64, 10, np.int64)
+    d = skew.derive(hist, 8)
+    assert d.boundaries is None and not d.hot_keys
+    assert d.imbalance == pytest.approx(1.0)
+
+
+def test_derive_balances_skewed_ranges():
+    hist = np.zeros(64, np.int64)
+    hist[:8] = 100  # all mass in the first fixed-width range
+    d = skew.derive(hist, 4)
+    assert d.boundaries is not None
+    p = skew.ShufflePlan(key_space=64, num_shards=4,
+                         boundaries=d.boundaries)
+    loads = [int(hist[a:b].sum()) for a, b in zip(d.boundaries,
+                                                  d.boundaries[1:])]
+    assert max(loads) < int(hist.sum())  # no single range holds everything
+    assert d.imbalance == pytest.approx(4.0)
+    assert p.width >= 1
+
+
+def test_derive_hot_key_split_and_envelope():
+    hist = np.full(64, 10, np.int64)
+    hist[3] = 5000
+    d = skew.derive(hist, 8, mergeable=True)
+    assert d.hot_keys == (3,)
+    assert d.hot_ways[0] >= 2
+    # the sampled p-max destination fraction prices the SPLIT load
+    assert d.max_dest_frac is not None and d.max_dest_frac < 0.5
+    # without mergeability the head key cannot split
+    d2 = skew.derive(hist, 8, mergeable=False)
+    assert not d2.hot_keys and d2.boundaries is not None
+
+
+def test_shuffle_plan_validation_and_epoch():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        skew.ShufflePlan(key_space=8, num_shards=2, boundaries=(0, 0, 8))
+    with pytest.raises(ValueError, match="boundaries"):
+        skew.ShufflePlan(key_space=8, num_shards=2, boundaries=(0, 4))
+    with pytest.raises(ValueError, match="pair up"):
+        ShuffleOptions(hot_keys=(1,), hot_ways=())
+    p1 = skew.ShufflePlan(key_space=8, num_shards=2, boundaries=(0, 3, 8))
+    p2 = skew.ShufflePlan(key_space=8, num_shards=2, boundaries=(0, 5, 8))
+    assert p1.epoch != p2.epoch and p1.epoch != 0
+    assert p1.hot_owner(2) == 0 and p1.hot_owner(3) == 1
+    # capacity envelope: p-max load + slack, legacy 2N/S as the floor
+    p3 = skew.ShufflePlan(key_space=16, num_shards=4,
+                          boundaries=(0, 4, 8, 12, 16), max_dest_frac=0.6)
+    assert p3.capacity_for(100) == 90       # 100*0.6*1.5 > legacy 50
+    p4 = dataclasses.replace(p3, max_dest_frac=0.25)
+    assert p4.capacity_for(100) == 50       # derived 38 floored at legacy
+    assert p3.capacity_for(4) >= 2
+
+
+# ---------------------------------------------------------------------------
+# options surface: deprecation forwarding + plan-cache key digest
+# ---------------------------------------------------------------------------
+
+
+def test_flat_shuffle_kwargs_forward_with_deprecation():
+    with pytest.warns(DeprecationWarning, match="shuffle_capacity"):
+        o = ExecutionOptions(shuffle_capacity=33, strict_shuffle=True)
+    assert o.shuffle is not None
+    assert o.shuffle.capacity == 33 and o.shuffle.strict
+    # round-trips through replace() without re-warning (record is set)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        o2 = dataclasses.replace(o, step=3)
+    assert o2.shuffle_capacity == 33 and o2.strict_shuffle
+    # the record is authoritative: flat fields mirror it
+    o3 = ExecutionOptions(shuffle=ShuffleOptions(capacity=7, strict=True))
+    assert o3.shuffle_capacity == 7 and o3.strict_shuffle
+    with pytest.raises(TypeError, match="ShuffleOptions"):
+        ExecutionOptions(shuffle="auto")
+
+
+def test_default_options_stay_legacy_and_warning_free():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        o = ExecutionOptions()
+    # None (unless the REPRO_TEST_SKEW override materialized it) keeps
+    # the engine on shuffle_plan=None
+    if o.shuffle is not None:
+        assert o.shuffle.boundaries is None
+
+
+def test_shuffle_options_digested_into_compiled_key():
+    app = make_app(64)
+    mr = MapReduce(app, flow="sort")
+    items = zipf_items(64, 32, 4)
+    base = ExecutionOptions(num_hosts=2, num_shards=4)
+    a = mr.lower(items, options=dataclasses.replace(
+        base, shuffle=ShuffleOptions(boundaries=(0, 2, 4, 8, 64))),
+        mode="distributed")
+    b = mr.lower(items, options=dataclasses.replace(
+        base, shuffle=ShuffleOptions(boundaries=(0, 16, 32, 48, 64))),
+        mode="distributed")
+    ka = pc.compiled_key(
+        app, a.items_spec, plan_key="p", flow="sort", n_bucket=32,
+        mesh=None, data_axis="data", mode="distributed",
+        extra=(repr(a.options.shuffle),))
+    kb = pc.compiled_key(
+        app, b.items_spec, plan_key="p", flow="sort", n_bucket=32,
+        mesh=None, data_axis="data", mode="distributed",
+        extra=(repr(b.options.shuffle),))
+    assert ka != kb
+
+
+def test_warm_repeat_serves_resolution_from_memo():
+    skew.clear_memo()
+    app = make_app(64)
+    items = zipf_items(64, 64, 4, seed=3)
+    opts = ExecutionOptions(num_hosts=2, num_shards=8,
+                            shuffle=ShuffleOptions(skew="auto"))
+    mr = MapReduce(app, flow="sort")
+    before = skew.stats_snapshot()
+    mr.lower(items, options=opts, mode="resilient")
+    mid = skew.stats_snapshot()
+    assert mid["samples"] == before["samples"] + 1
+    mr.lower(items, options=opts, mode="resilient")
+    after = skew.stats_snapshot()
+    assert after["samples"] == mid["samples"]  # zero re-derives
+    assert after["cache_hits"] == mid["cache_hits"] + 1
+
+
+def test_spec_only_lowering_skips_the_probe():
+    app = make_app(64)
+    mr = MapReduce(app, flow="sort")
+    spec = jax.ShapeDtypeStruct((64, 4), I32)
+    before = skew.stats_snapshot()["samples"]
+    low = mr.lower(spec, options=ExecutionOptions(
+        num_hosts=2, num_shards=8, shuffle=ShuffleOptions(skew="auto")),
+        mode="resilient")
+    assert skew.stats_snapshot()["samples"] == before
+    assert low.options.shuffle.boundaries is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end exactness (mesh-less resilient driver: 8 shards, 1 device)
+# ---------------------------------------------------------------------------
+
+
+def _oracle(app, items):
+    r = MapReduce(app, flow="stream", cache=False).run(items)
+    return (np.asarray(r.values), np.asarray(r.counts))
+
+
+def test_uniform_keys_bitwise_parity_all_flows():
+    """Identity snap: on uniform keys skew='auto' output is bitwise the
+    default run's, on every flow (the shuffled ones route identically;
+    the table-merge ones ignore the shuffle surface)."""
+    K = 64
+    app = make_app(K)
+    rng = np.random.default_rng(1)
+    items = jnp.asarray(
+        rng.permutation(np.repeat(np.arange(K), 8)).reshape(-1, 4), I32)
+    for flow in ("stream", "sort", "combine", "reduce"):
+        mr = MapReduce(app, flow=flow, cache=False)
+        base = mr.run_resilient(items, options=ExecutionOptions(
+            num_hosts=2, num_shards=8))
+        res = mr.run_resilient(items, options=ExecutionOptions(
+            num_hosts=2, num_shards=8,
+            shuffle=ShuffleOptions(skew="auto")))
+        assert np.array_equal(np.asarray(res.values),
+                              np.asarray(base.values)), flow
+        assert np.array_equal(np.asarray(res.counts),
+                              np.asarray(base.counts)), flow
+
+
+def test_zipf_parity_with_hot_key_past_shard_capacity():
+    """Zipf(1.1) + a forced hot key holding more pairs than one shard's
+    uniform capacity: balanced boundaries + hot split equal the
+    single-host oracle bitwise (integer monoid), with ZERO overflow."""
+    K = 256
+    app = make_app(K, emit=8)
+    keys = np.array(zipf_items(K, 128, 8, seed=7))
+    keys[::2] = 5  # hot key: half of all pairs (> any shard's 2N/S share)
+    items = jnp.asarray(keys, I32)
+    want_v, want_c = _oracle(app, items)
+    for flow in ("sort", "reduce"):
+        mr = MapReduce(app, flow=flow, cache=False)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            res = mr.run_resilient(items, options=ExecutionOptions(
+                num_hosts=2, num_shards=8,
+                shuffle=ShuffleOptions(skew="auto")))
+        assert not [x for x in w
+                    if issubclass(x.category, LoweringFallbackWarning)], flow
+        assert np.array_equal(np.asarray(res.values), want_v), flow
+        assert np.array_equal(np.asarray(res.counts), want_c), flow
+        lines = "\n".join(res.recovery.summary())
+        assert "skew" in lines, lines
+        if flow == "sort":
+            assert "hot keys split" in lines, lines
+
+
+def test_mild_skew_default_capacity_no_longer_warns():
+    """The PR's capacity bugfix: a mildly skewed run under the DERIVED
+    envelope (sampled p-max load + slack) is exact and quiet, where the
+    legacy uniform 2N/S envelope overflowed and warned."""
+    K = 64
+    app = make_app(K, emit=8)
+    keys = np.array(zipf_items(K, 64, 8, seed=11))
+    keys[:, :3] = 9  # ~3/8 of the mass on one key: mild, not extreme
+    items = jnp.asarray(keys, I32)
+    want_v, want_c = _oracle(app, items)
+    plan = plan_execution(app, flow="reduce")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        k, v, c, log = eng.run_resilient(app, plan, items, num_hosts=2,
+                                         num_shards=8)
+    assert any("overflow" in str(x.message) for x in w), \
+        "precondition lost: legacy envelope should overflow here"
+    mr = MapReduce(app, flow="reduce", cache=False)
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        res = mr.run_resilient(items, options=ExecutionOptions(
+            num_hosts=2, num_shards=8,
+            shuffle=ShuffleOptions(skew="auto")))
+    assert not [x for x in w2
+                if issubclass(x.category, LoweringFallbackWarning)]
+    assert np.array_equal(np.asarray(res.values), want_v)
+    assert np.array_equal(np.asarray(res.counts), want_c)
+
+
+def test_reduce_flow_rejects_hot_keys():
+    app = make_app(16)
+    mr = MapReduce(app, flow="reduce", cache=False)
+    items = jnp.zeros((16, 4), I32)
+    with pytest.raises(ValueError, match="hot-key"):
+        mr.run_resilient(items, options=ExecutionOptions(
+            num_hosts=2, num_shards=4,
+            shuffle=ShuffleOptions(boundaries=(0, 4, 8, 12, 16),
+                                   hot_keys=(0,), hot_ways=(2,))))
+
+
+# ---------------------------------------------------------------------------
+# hot-split recombine == unsplit reduce (monoid matrix property)
+# ---------------------------------------------------------------------------
+
+MONOID_REDUCERS = {
+    "sum": lambda k, v, c: jnp.sum(v),
+    "max": lambda k, v, c: jnp.max(v),
+    "min": lambda k, v, c: jnp.min(v),
+    "mean": lambda k, v, c: jnp.sum(v) // jnp.maximum(c, 1),
+    "sumsq": lambda k, v, c: jnp.sum(v * v),
+}
+
+def _check_hot_split_recombine(reducer, hot, ways, seed):
+    K, S = 16, 4
+    app = make_app(K, emit=4, reduce=MONOID_REDUCERS[reducer])
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, K, size=(16, 4))
+    keys[rng.random(keys.shape) < 0.5] = hot
+    items = jnp.asarray(keys, I32)
+    want_v, want_c = _oracle(app, items)
+
+    bounds = tuple(range(0, K + 1, K // S))
+    mr = MapReduce(app, flow="sort", cache=False)
+    res = mr.run_resilient(items, options=ExecutionOptions(
+        num_hosts=2, num_shards=S,
+        shuffle=ShuffleOptions(boundaries=bounds, hot_keys=(hot,),
+                               hot_ways=(ways,))))
+    assert np.array_equal(np.asarray(res.counts), want_c), reducer
+    assert np.array_equal(np.asarray(res.values), want_v), reducer
+
+
+@pytest.mark.parametrize("reducer", sorted(MONOID_REDUCERS))
+@pytest.mark.parametrize("ways", (2, 4))
+def test_hot_split_recombine_equals_unsplit(reducer, ways):
+    _check_hot_split_recombine(reducer, hot=3, ways=ways, seed=17)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        reducer=st.sampled_from(sorted(MONOID_REDUCERS)),
+        hot=st.integers(0, 15),
+        ways=st.integers(2, 4),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_hot_split_recombine_property(reducer, hot, ways, seed):
+        _check_hot_split_recombine(reducer, hot, ways, seed)
+
+
+# ---------------------------------------------------------------------------
+# resilient recovery under skew boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_resilient_kill_one_of_eight_stays_bitwise(tmp_path):
+    from repro.distributed import fault as flt
+
+    K = 128
+    app = make_app(K, emit=8)
+    keys = np.array(zipf_items(K, 64, 8, seed=5))
+    keys[::3] = 2
+    items = jnp.asarray(keys, I32)
+    opts = ExecutionOptions(num_hosts=8, num_shards=8,
+                            shuffle=ShuffleOptions(skew="auto"))
+    mr = MapReduce(app, flow="sort", cache=False)
+    base = mr.run_resilient(items, options=opts)
+    drill = mr.run_resilient(items, options=dataclasses.replace(
+        opts, ckpt_dir=str(tmp_path),
+        inject=flt.FaultInjection(dead_hosts=(3,), die_after_shards=1)))
+    assert np.array_equal(np.asarray(drill.values),
+                          np.asarray(base.values))
+    assert np.array_equal(np.asarray(drill.counts),
+                          np.asarray(base.counts))
+    assert drill.recovery.restored or drill.recovery.recomputed
+    assert drill.recovery.boundary_epoch != 0
+    assert any("skew" in ln for ln in drill.recovery.summary())
+
+
+def test_stale_boundary_epoch_rejected_at_restore(tmp_path):
+    """A partial checkpointed under DIFFERENT boundaries must not be
+    merged: the epoch stamp rejects it and the shard recomputes."""
+    from repro.distributed import fault as flt
+
+    K = 64
+    app = make_app(K, emit=4)
+    items = zipf_items(K, 32, 4, seed=9)
+    want_v, want_c = _oracle(app, items)
+
+    def run(bounds, inject=None):
+        # explicit boundaries carry no sampled envelope, so provision the
+        # full per-shard pair count (zipf keys overflow the 2x-uniform
+        # legacy floor)
+        mr = MapReduce(app, flow="sort", cache=False)
+        return mr.run_resilient(items, options=ExecutionOptions(
+            num_hosts=4, num_shards=8, ckpt_dir=str(tmp_path),
+            inject=inject,
+            shuffle=ShuffleOptions(boundaries=bounds, capacity=16)))
+
+    # seed checkpoints under layout A (all shards persist their partials)
+    run((0, 8, 16, 24, 32, 40, 48, 56, 64))
+    # now run under layout B with a dead host that completed only its
+    # FIRST shard: the lost second shard's surviving checkpoint is the
+    # layout-A one, which the epoch check must REJECT, then recompute
+    drill = run((0, 4, 12, 20, 28, 36, 44, 52, 64),
+                inject=flt.FaultInjection(dead_hosts=(1,),
+                                          die_after_shards=1))
+    assert np.array_equal(np.asarray(drill.values), want_v)
+    assert np.array_equal(np.asarray(drill.counts), want_c)
+    assert drill.recovery.epoch_rejects, drill.recovery.summary()
+    assert any("stale boundary" in ln for ln in drill.recovery.summary())
+
+
+# ---------------------------------------------------------------------------
+# fake 8-device mesh: the jitted shard_map path (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_mesh_parity_uniform_and_zipf():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "integration"))
+    from _subproc import run_with_devices
+
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp, warnings
+        from jax.sharding import Mesh
+        from repro.core import (MapReduce, MapReduceApp, ExecutionOptions,
+                                ShuffleOptions, LoweringFallbackWarning)
+
+        class WC(MapReduceApp):
+            key_space = 256
+            value_aval = jax.ShapeDtypeStruct((), jnp.int32)
+            max_values_per_key = 4096
+            emit_capacity = 8
+            def map(self, item, emit): emit(item, jnp.ones_like(item))
+            def reduce(self, key, values, count): return jnp.sum(values)
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        rng = np.random.default_rng(0)
+        zipf = (rng.zipf(1.1, size=(128, 8)) % 256).astype(np.int32)
+        zipf[::2] = 7  # hot key past one shard's uniform capacity
+        uni = rng.permutation(np.repeat(np.arange(256), 4)).reshape(
+            128, 8).astype(np.int32)
+        for flow in ("sort", "reduce"):
+            mr = MapReduce(WC(), flow=flow, cache=False)
+            for name, arr in (("uniform", uni), ("zipf", zipf)):
+                items = jnp.asarray(arr)
+                ref = mr.run(items)
+                legacy = mr.run_distributed(items, mesh=mesh)
+                with warnings.catch_warnings(record=True) as w:
+                    warnings.simplefilter("always")
+                    res = mr.run_distributed(
+                        items, mesh=mesh, options=ExecutionOptions(
+                            shuffle=ShuffleOptions(skew="auto")))
+                ovf = [x for x in w if issubclass(
+                    x.category, LoweringFallbackWarning)]
+                assert not ovf, (flow, name, [str(x.message) for x in ovf])
+                assert np.array_equal(np.asarray(res.values),
+                                      np.asarray(ref.values)), (flow, name)
+                assert np.array_equal(np.asarray(res.counts),
+                                      np.asarray(ref.counts)), (flow, name)
+                if name == "uniform":
+                    # identity snap: bitwise the legacy fixed-width run
+                    assert np.array_equal(np.asarray(res.values),
+                                          np.asarray(legacy.values))
+        print("MESH_SKEW_OK")
+    """, n=8)
+    assert "MESH_SKEW_OK" in out
