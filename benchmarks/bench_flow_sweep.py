@@ -476,10 +476,126 @@ def skew_bench():
               f"(gate <=1.5x) overflow_warnings=0 {'; '.join(plan_lines)}"))
 
 
+#: key space of the wire rows: span = K/S = 512 at 16 hosts, so the delta
+#: codec's range residuals pack to 10 bits against 32-bit raw keys.
+WIRE_K = 8192
+#: default fake-host count of the wire rows (--hosts overrides).
+WIRE_S = 16
+
+
+def wire_bench(hosts: int | None = None):
+    """The PR 10 headline rows: the compressed shuffle wire.
+
+    A SORTED Zipf(1.1) key stream (each shard holds a contiguous key
+    range — the worst case for per-destination bucket balance, the best
+    case for a columnar wire) drives the mesh-less resilient sort flow on
+    16 fake hosts with an int16-value app, raw vs delta codec.  Gated:
+
+    * both rows bitwise-equal each other AND the single-host oracle
+      (delta is lossless by construction — ``distributed/wire.py``);
+    * measured wire bytes/shard under delta <= 0.6x raw (the 10-bit key
+      residuals vs 32-bit keys do the work; values ride unchanged);
+    * the cost model's wire term equals the MEASURED bytes exactly
+      (``roofline.shuffle_wire_bytes`` and the real encoded tree are the
+      same arithmetic — asserted, not modeled twice).
+    """
+    S = hosts or WIRE_S
+    K = WIRE_K
+    rng = np.random.default_rng(3)
+    # same floor rationale as skew_bench: keep >=1k pairs/shard in play
+    N = max(1 << 13, int((1 << 14) * bench_scale()))
+    N -= N % (8 * S)
+    keys = np.sort((rng.zipf(1.1, size=N) % K).astype(np.int32))
+    items = jnp.asarray(keys.reshape(-1, 8))
+    # sorted keys concentrate each shard's pairs on few destinations:
+    # provision the full per-shard pair count so neither codec overflows
+    per_pairs = (N // 8 // S) * 8
+
+    app = make_app(K, max(4096, N), dtype=jnp.int16)
+    app.map = lambda item, emit: emit(item, (item % 1000).astype(jnp.int16))
+    app.reduce = lambda k, v, c: jnp.max(v)
+
+    def opts(codec):
+        return ExecutionOptions(
+            num_hosts=S, num_shards=S,
+            shuffle=ShuffleOptions(wire=codec, capacity=per_pairs))
+
+    want = np.full(K, np.iinfo(np.int16).min, np.int64)
+    np.maximum.at(want, keys, keys % 1000)
+    cnt = np.bincount(keys, minlength=K)
+    results = {}
+    for codec in ("raw", "delta"):
+        mr = MapReduce(app, flow="sort", cache=False)
+        res = mr.run_resilient(items, options=opts(codec))
+        got = np.asarray(res.values, np.int64)
+        np.testing.assert_array_equal(np.asarray(res.counts), cnt)
+        np.testing.assert_array_equal(got[cnt > 0], want[cnt > 0])
+        results[codec] = (mr, res)
+    np.testing.assert_array_equal(
+        np.asarray(results["raw"][1].values),
+        np.asarray(results["delta"][1].values))
+
+    # measured wire bytes: encode shard 0's REAL pair stream through the
+    # wire layer and count the tree's bytes (== encoded_nbytes, asserted)
+    from repro.distributed import wire as wirelib
+    stream = eng.map_phase(app, items[: items.shape[0] // S])
+    bytes_shard = {}
+    for codec in ("raw", "delta"):
+        fmt = wirelib.wire_format(
+            key_space=K, num_shards=S, n_pairs=stream.keys.shape[0],
+            value_avals=stream.values, codec=codec, capacity=per_pairs)
+        sk, sv, overflow = wirelib.bucketize(fmt, stream)
+        assert int(overflow) == 0, f"wire row '{codec}' overflowed"
+        measured = wirelib.tree_nbytes(wirelib.encode(fmt, sk, sv))
+        assert measured == wirelib.encoded_nbytes(fmt)
+        bytes_shard[codec] = measured * (S - 1) / S
+        model = roofline.shuffle_wire_bytes(
+            codec, n_pairs=stream.keys.shape[0], key_space=K, num_shards=S,
+            value_bytes=2, value_dtype="int16", capacity=per_pairs)
+        assert model == bytes_shard[codec], (
+            f"cost-model wire bytes diverged from measured for '{codec}': "
+            f"model={model} measured={bytes_shard[codec]}")
+    ratio = bytes_shard["delta"] / bytes_shard["raw"]
+    assert ratio <= 0.6, (
+        f"delta wire bytes left the gate: {bytes_shard['delta']:.0f}B "
+        f"vs raw {bytes_shard['raw']:.0f}B ({ratio:.3f}x > 0.6x)")
+
+    # interleave raw/delta call-by-call (same drift-cancellation argument
+    # as skew_bench: the ratio is what the derived column reports)
+    mr_r, _ = results["raw"]
+    mr_d, _ = results["delta"]
+    for _ in range(2):
+        mr_r.run_resilient(items, options=opts("raw"))
+        mr_d.run_resilient(items, options=opts("delta"))
+    trs, tds = [], []
+    for _ in range(11):
+        t0 = time.perf_counter()
+        mr_r.run_resilient(items, options=opts("raw"))
+        trs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        mr_d.run_resilient(items, options=opts("delta"))
+        tds.append(time.perf_counter() - t0)
+    t_r = float(np.median(trs))
+    t_d = float(np.median(tds))
+    assert t_d <= 3.0 * t_r, (
+        f"delta row left the raw row's wall-clock class: "
+        f"delta={t_d * 1e6:.0f}us raw={t_r * 1e6:.0f}us "
+        f"({t_d / t_r:.2f}x > 3x)")
+    print(row(f"flow_sweep_wire_sort_raw_h{S}", t_r * 1e6,
+              f"S={S} K={K} N={N} sorted-zipf codec=raw"))
+    print(row(f"flow_sweep_wire_sort_delta_h{S}", t_d * 1e6,
+              f"raw={t_r * 1e6:.1f}us ratio={t_d / t_r:.2f}x "
+              f"(class gate <=3x) bitwise=ok"))
+    print(row(f"flow_sweep_wire_bytes_delta_h{S}", bytes_shard["delta"],
+              f"raw={bytes_shard['raw']:.0f}B ratio={ratio:.3f}x "
+              f"(gate <=0.6x) model=exact int16-values"))
+
+
 def main():
     sweep()
     crossover()
     skew_bench()
+    wire_bench()
 
 
 if __name__ == "__main__":
@@ -498,6 +614,12 @@ if __name__ == "__main__":
     ap.add_argument("--skew", action="store_true",
                     help="run only the skew-adaptive shuffle rows (uniform "
                          "vs Zipf(1.1) on the resilient sort flow)")
+    ap.add_argument("--wire", action="store_true",
+                    help="run only the compressed-wire rows (raw vs delta "
+                         "codec on the sorted-Zipf resilient sort flow)")
+    ap.add_argument("--hosts", type=int, default=None, metavar="S",
+                    help=f"fake-host count for the --wire rows "
+                         f"(default {WIRE_S})")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write parsed rows as a BENCH_*.json artifact "
                          "(compare.py-compatible)")
@@ -512,13 +634,15 @@ if __name__ == "__main__":
 
     print("name,us_per_call,derived")
     with contextlib.redirect_stdout(_Tee()):
-        if args.crossover or args.big or args.skew:
+        if args.crossover or args.big or args.skew or args.wire:
             if args.crossover:
                 crossover()
             if args.big:
                 crossover_big()
             if args.skew:
                 skew_bench()
+            if args.wire:
+                wire_bench(hosts=args.hosts)
         else:
             main()
     if args.json:
@@ -526,7 +650,8 @@ if __name__ == "__main__":
 
         mode = "+".join([m for m, on in (("crossover", args.crossover),
                                          ("big", args.big),
-                                         ("skew", args.skew)) if on]) or "full"
+                                         ("skew", args.skew),
+                                         ("wire", args.wire)) if on]) or "full"
         with open(args.json, "w") as f:
             json.dump({"scale": bench_scale(), "preset": mode,
                        "rows": parse_rows(buf.getvalue()), "failures": []},

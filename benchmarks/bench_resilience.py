@@ -147,6 +147,72 @@ def main():
         print(row(f"resilient_{flow}_restart_floor", t_restart * 1e6,
                   f"recovery_saves={t_restart / max(t_kill, 1e-9):.2f}x"))
 
+    wire_recovery()
+
+
+#: host counts of the compressed-wire recovery sweep (PR 10): past the
+#: 8-host rows above, the shuffle fan-out is S^2 buckets and the wire
+#: codec is what bounds the checkpoint + all-to-all bytes.
+WIRE_HOSTS = (16, 64)
+
+
+def wire_recovery(host_counts: tuple[int, ...] = WIRE_HOSTS):
+    """Kill/recovery at 16-64 fake hosts under the shuffle wire codecs.
+
+    The sort flow's checkpointed partial IS the encoded wire tree
+    (``distributed/wire.py``), so the delta codec shrinks what recovery
+    writes and restores, not just the all-to-all.  Rows per host count:
+    raw vs delta clean runs (bitwise-asserted against each other) and the
+    delta restore-from-compressed-checkpoint drill after killing one
+    host.  Wall-clock rows; the bytes gate lives in
+    ``bench_flow_sweep --wire``.
+    """
+    scale = bench_scale()
+    rng = np.random.default_rng(1)
+    app = WC()
+    for hosts in host_counts:
+        n_items = max(2 * hosts, int(2048 * scale))
+        n_items -= n_items % hosts
+        toks = jnp.asarray(
+            rng.integers(0, WC.key_space, (n_items, 8)).astype(np.int32))
+        # at 64 shards the 2x-uniform envelope is a couple of pairs per
+        # destination: provision the full per-shard pair count so the
+        # rows measure the wire, not overflow drops
+        cap = (n_items // hosts) * 8
+
+        def run(wire, inject=None, ckpt_dir=None, hosts=hosts, toks=toks,
+                cap=cap):
+            plan = plan_execution(app, flow="sort")
+            return eng.run_resilient(app, plan, toks, num_hosts=hosts,
+                                     num_shards=hosts, inject=inject,
+                                     ckpt_dir=ckpt_dir, wire=wire,
+                                     shuffle_capacity=cap)
+
+        base = run("raw")
+        delta = run("delta")
+        np.testing.assert_array_equal(np.asarray(base[1]),
+                                      np.asarray(delta[1]))
+        np.testing.assert_array_equal(np.asarray(base[2]),
+                                      np.asarray(delta[2]))
+        t_raw = _time_once(lambda: run("raw"))
+        t_delta = _time_once(lambda: run("delta"))
+        with tempfile.TemporaryDirectory() as d:
+            run("delta", ckpt_dir=d)  # seed COMPRESSED shard partials
+            t_restore = _time_once(
+                lambda: run("delta",
+                            inject=flt.FaultInjection(dead_hosts=(3,)),
+                            ckpt_dir=d))
+        print(row(f"resilient_sort_h{hosts}_wire_raw_clean", t_raw * 1e6,
+                  f"n_items={n_items}"))
+        print(row(f"resilient_sort_h{hosts}_wire_delta_clean",
+                  t_delta * 1e6,
+                  f"raw={t_raw * 1e6:.0f}us "
+                  f"ratio={t_delta / t_raw:.2f}x bitwise=ok"))
+        print(row(f"resilient_sort_h{hosts}_wire_delta_restore1of{hosts}",
+                  t_restore * 1e6,
+                  f"restore_overhead={t_restore / t_delta:.2f}x_clean "
+                  f"(compressed partials)"))
+
 
 if __name__ == "__main__":
     main()

@@ -51,6 +51,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import autotune as at
 from repro.core import collector as col
@@ -504,8 +505,12 @@ class MapReduce:
                          mode: str) -> ExecutionOptions:
         """Lower()-time skew resolution: sample/recall the key histogram
         and return options with the decision baked into ``opts.shuffle``;
-        provenance lands on ``plan.skew`` (shown by ``explain()``)."""
+        provenance lands on ``plan.skew`` (shown by ``explain()``).  A
+        non-raw wire codec additionally lands its modeled
+        encoded-vs-raw bytes on ``plan.wire``."""
         sh = opts.shuffle
+        if sh is not None and sh.wire != "raw":
+            self.plan.wire = self._wire_provenance(opts, items, mode)
         if sh is None or (sh.skew != "auto" and sh.boundaries is None):
             return opts
         leaves = jax.tree.leaves(items)
@@ -533,6 +538,39 @@ class MapReduce:
         if resolved is sh:
             return opts
         return dataclasses.replace(opts, shuffle=resolved)
+
+    def _wire_provenance(self, opts: ExecutionOptions, items,
+                         mode: str) -> tuple[str, ...]:
+        """``explain()`` lines for a non-raw shuffle wire codec: which
+        codec the all-to-all (and the resilient driver's checkpointed
+        partials) ride under, plus the modeled encoded-vs-raw bytes when
+        the item count is known at lower() time."""
+        from repro.roofline import analysis as roofline
+
+        sh = opts.shuffle
+        lines = [f"codec {sh.wire} on the all-to-all + checkpointed "
+                 f"partials (distributed/wire.py)"]
+        S = _shard_count(opts, mode)
+        leaves = jax.tree.leaves(items)
+        if (S and S > 1 and leaves
+                and not any(isinstance(l, jax.ShapeDtypeStruct)
+                            for l in leaves)):
+            n_pairs = int(leaves[0].shape[0]) * self.app.emit_capacity
+            value_bytes = int(
+                jnp.dtype(self.app.value_aval.dtype).itemsize
+                * max(1, int(np.prod(self.app.value_aval.shape))))
+            kw = dict(n_pairs=n_pairs, key_space=self.app.key_space,
+                      num_shards=S, value_bytes=value_bytes,
+                      value_dtype=str(self.app.value_aval.dtype),
+                      capacity=sh.capacity)
+            enc_b = roofline.shuffle_wire_bytes(sh.wire, **kw)
+            raw_b = roofline.shuffle_wire_bytes("raw", **kw)
+            if raw_b > 0:
+                lines.append(
+                    f"modeled wire bytes/shard: {enc_b / 1e3:.1f}kB "
+                    f"({enc_b / raw_b:.2f}x raw {raw_b / 1e3:.1f}kB) "
+                    f"at S={S}")
+        return tuple(lines)
 
     def run(self, items, *, options: ExecutionOptions | None = None,
             **legacy) -> MapReduceResult:
@@ -798,7 +836,9 @@ class Optimized:
                 level_fanouts=knobs["level_fanouts"],
                 shuffle_plan=sk.plan_from_options(
                     mr.app.key_space, S, opts.shuffle, flow=plan.flow,
-                    spec=plan.spec, value_aval=mr.app.value_aval))
+                    spec=plan.spec, value_aval=mr.app.value_aval),
+                wire=(opts.shuffle.wire if opts.shuffle is not None
+                      else "raw"))
             # the persistent jitted shard_map IS the executable: repeat
             # calls hit jit's trace cache instead of rebuilding the
             # shard_map per call like the old run_distributed did
@@ -831,6 +871,8 @@ class Optimized:
                 level_fanouts=opts.level_fanouts,
                 strict_shuffle=opts.strict_shuffle,
                 shuffle_plan=res_plan,
+                wire=(opts.shuffle.wire if opts.shuffle is not None
+                      else "raw"),
                 coord=opts.coord, retry=opts.retry, chaos=opts.chaos,
                 jit_cache=jits)
 

@@ -176,6 +176,10 @@ def estimate_flow_cost(
     max_values_per_key: int | None = None,
     backend: str = "cpu",
     skew_factor: float = 1.0,
+    num_shards: int = 1,
+    wire: str = "raw",
+    shuffle_capacity: int | None = None,
+    value_dtype: str = "int32",
 ) -> FlowCost:
     """Model one flow's cost for a workload (see module docstring).
 
@@ -185,7 +189,13 @@ def estimate_flow_cost(
     their estimate scales by the imbalance — which is how ``flow="auto"``
     prices a skewed all-to-all against the skew-immune stream flow.  The
     table-merge flows are unaffected (their per-shard work is
-    item-partitioned, not key-partitioned)."""
+    item-partitioned, not key-partitioned).
+
+    ``num_shards > 1`` adds the network term for the shuffled flows: the
+    per-shard all-to-all wire bytes under the ``wire`` codec
+    (``roofline.shuffle_wire_bytes``, exact against the wire layer's
+    encoded-tree accounting) over the link bandwidth — which is how
+    ``flow="auto"`` and ``explain()`` price wire compression."""
     n, k = max(int(n_pairs), 1), max(int(key_space), 1)
     lmax = max_values_per_key or max(n // k, 1)
     chunk = chunk_pairs or n
@@ -228,6 +238,17 @@ def estimate_flow_cost(
         est = max(v for _, v in terms)  # overlappable roofline terms
     else:
         raise ValueError(f"unknown backend profile {backend!r}")
+    S = max(int(num_shards), 1)
+    if S > 1 and flow in ("sort", "reduce"):
+        # the all-to-all's link traffic, under the configured wire codec —
+        # added before the skew scaling so a hot destination paces the
+        # wire the same way it paces the compute
+        wire_s = roofline.shuffle_wire_bytes(
+            wire, n_pairs=n, key_space=k, num_shards=S,
+            value_bytes=value_bytes, value_dtype=value_dtype,
+            capacity=shuffle_capacity) / roofline.LINK_BW
+        terms = list(terms) + [("wire", wire_s)]
+        est += wire_s
     sf = max(float(skew_factor), 1.0)
     if sf > 1.0 and flow in ("sort", "reduce"):
         # the all-to-all flows finish when their hottest destination
@@ -258,6 +279,10 @@ def choose_flow(
     candidates: tuple[str, ...] = ("stream", "sort"),
     backend: str | None = None,
     skew_factor: float = 1.0,
+    num_shards: int = 1,
+    wire: str = "raw",
+    shuffle_capacity: int | None = None,
+    value_dtype: str = "int32",
 ) -> CostReport:
     """Rank ``candidates`` by modeled cost and pick the cheapest.
 
@@ -272,7 +297,10 @@ def choose_flow(
                             holder_bytes=holder_bytes,
                             chunk_pairs=chunk_pairs,
                             max_values_per_key=max_values_per_key,
-                            backend=backend, skew_factor=skew_factor)
+                            backend=backend, skew_factor=skew_factor,
+                            num_shards=num_shards, wire=wire,
+                            shuffle_capacity=shuffle_capacity,
+                            value_dtype=value_dtype)
          for f in candidates),
         key=lambda fc: fc.est_s)
     return CostReport(chosen=costs[0].flow, n_pairs=n_pairs,

@@ -41,6 +41,15 @@ posture):
 The contrast is the distributed version of the paper's observation that the
 combiner "minimizes data transfers before the reduce phase" (§2.2.1), and is
 measured by the dry-run collective roofline term.
+
+The all-to-all **wire format** itself lives in ``distributed/wire.py``: a
+``WireFormat`` record (codec + capacity envelope + per-destination key
+layout) with pluggable codecs — ``raw`` (the legacy layout, bitwise),
+``delta`` (range-residual bit-packed keys, exact), ``packed`` (narrow
+int8 values on top, opt-in).  This engine bucketizes/encodes sends and
+decodes receives through that one layer, both around the live
+``lax.all_to_all`` and in the resilient driver's checkpointable
+per-shard partials — the format is defined in exactly one place.
 """
 
 from __future__ import annotations
@@ -55,6 +64,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import collector as col
 from repro.core import combiner as C
+from repro.distributed import wire as wirelib
+from repro.distributed.wire import shuffle_bucket_capacity  # noqa: F401
 
 # ---------------------------------------------------------------------------
 # Emitter + map phase
@@ -659,88 +670,15 @@ def _reapply_merge(app, g_vals, g_cnt):
 # ---------------------------------------------------------------------------
 
 
-def shuffle_bucket_capacity(n_pairs: int, num_shards: int) -> int:
-    """Default per-destination send capacity of the all-to-all shuffle:
-    2x the uniform share, the Phoenix fixed-buffer posture.  A skewed key
-    distribution can exceed it — the shuffle COUNTS what falls past the
-    capacity and the engine surfaces it (``LoweringFallbackWarning``, plan
-    diagnostics, or a hard error under ``strict_shuffle``) instead of the
-    old behaviour of silently dropping the pairs."""
-    return -(-2 * n_pairs // num_shards)
-
-
-def _bucketize_pairs(app, stream: col.PairStream, *, num_shards,
-                     shuffle_capacity, shuffle_plan=None):
-    """Pack a shard's pair stream into per-destination send buckets.
-
-    Range partitioning: key k -> shard ``k // ceil(K/S)`` — the shard key
-    ranges are the top-level radix buckets, which is why the sort flow can
-    reuse this machinery verbatim.  This is the wire format of the
-    all-to-all (``_shuffle_pairs``) AND the checkpointable per-shard
-    partial of the resilient driver (``run_resilient``): the send buckets
-    are a pure function of the shard's items, so a lost shard's
-    contribution to every key range can be deterministically recomputed.
-
-    ``shuffle_plan`` (a ``skew.ShufflePlan``) replaces the fixed-width
-    arithmetic with sampled balanced range boundaries (searchsorted
-    routing) and round-robins each hot key's occurrences over its split
-    destinations; ``None`` keeps the legacy path bitwise.  The default
-    capacity envelope then derives from the plan's sampled p-max
-    destination load instead of the uniform 2x share.
-
-    Returns ``(send_keys [S, B], send_vals [S, B, ...], overflow)`` where
-    ``overflow`` counts the valid pairs that did NOT fit their
-    destination bucket (silently dropped by the pre-PR-5 shuffle).
-    """
-    K = app.key_space
-    S = num_shards
-    K_local = -(-K // S)  # ceil
-    n = stream.keys.shape[0]
-    if shuffle_capacity:
-        B = shuffle_capacity
-    elif shuffle_plan is not None:
-        B = shuffle_plan.capacity_for(n)
-    else:
-        B = shuffle_bucket_capacity(n, S)
-
-    if shuffle_plan is None:
-        tgt = jnp.where(stream.valid, stream.keys // K_local, S)
-    else:
-        cuts = jnp.asarray(shuffle_plan.boundaries[1:-1], jnp.int32)
-        tgt = jnp.searchsorted(cuts, stream.keys, side="right"
-                               ).astype(jnp.int32)
-        if shuffle_plan.hot_keys:
-            hk = jnp.asarray(shuffle_plan.hot_keys, jnp.int32)
-            hw = jnp.asarray(shuffle_plan.hot_ways, jnp.int32)
-            owners = jnp.asarray(
-                [shuffle_plan.hot_owner(k) for k in shuffle_plan.hot_keys],
-                jnp.int32)
-            eq = stream.keys[:, None] == hk[None, :]  # [n, H]
-            is_hot = jnp.any(eq, axis=1)
-            hidx = jnp.argmax(eq, axis=1)
-            # occurrence rank of each hot pair within its key: round-robin
-            # over the split destinations starting at the range owner
-            occ = jnp.take_along_axis(
-                jnp.cumsum(eq.astype(jnp.int32), axis=0),
-                hidx[:, None], axis=1)[:, 0] - 1
-            dest = (owners[hidx] + occ % hw[hidx]) % S
-            tgt = jnp.where(is_hot, dest, tgt)
-        tgt = jnp.where(stream.valid, tgt, S)
-    oh = (tgt[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
-    rank = jnp.take_along_axis(
-        jnp.cumsum(oh, axis=0), jnp.minimum(tgt, S - 1)[:, None],
-        axis=1)[:, 0] - 1
-    ok = stream.valid & (rank < B)
-    overflow = jnp.sum(stream.valid & (rank >= B)).astype(jnp.int32)
-    slot = jnp.where(ok, jnp.minimum(tgt, S - 1) * B + rank, S * B)
-
-    send_keys = jnp.full((S * B,), K, jnp.int32).at[slot].set(
-        stream.keys, mode="drop").reshape(S, B)
-    send_vals = jax.tree.map(
-        lambda v: jnp.zeros((S * B,) + v.shape[1:], v.dtype).at[slot].set(
-            v, mode="drop").reshape((S, B) + v.shape[1:]),
-        stream.values)
-    return send_keys, send_vals, overflow
+def _wire_format_for(app, stream: col.PairStream, *, num_shards,
+                     shuffle_capacity, shuffle_plan=None, wire="raw"):
+    """Resolve the shuffle's :class:`wire.WireFormat` from a (possibly
+    abstract) pair stream — the single capacity/layout resolution both
+    the live all-to-all and the resilient partial builder go through."""
+    return wirelib.wire_format(
+        key_space=app.key_space, num_shards=num_shards,
+        n_pairs=stream.keys.shape[0], value_avals=stream.values,
+        codec=wire, capacity=shuffle_capacity, plan=shuffle_plan)
 
 
 def _localize_recv(app, recv_keys, recv_vals, *, num_shards, shard_index,
@@ -783,29 +721,37 @@ def _localize_recv(app, recv_keys, recv_vals, *, num_shards, shard_index,
 
 
 def _shuffle_pairs(app, stream: col.PairStream, *, axis_name, num_shards,
-                   shuffle_capacity, shuffle_plan=None
+                   shuffle_capacity, shuffle_plan=None, wire="raw"
                    ) -> tuple[col.PairStream, jax.Array, jax.Array,
                               tuple]:
-    """Key-partitioned all-to-all of raw pairs (the reduce-flow shuffle).
+    """Key-partitioned all-to-all of encoded pairs (the reduce-flow
+    shuffle).
+
+    The send buckets are built and encoded by the wire layer
+    (``distributed/wire.py``) under the ``wire`` codec; every encoded
+    leaf keeps a leading destination axis, so the tiled all-to-all
+    routes the compressed tree unchanged and the receive side decodes
+    its own rows back to exact ``(keys, vals)`` buckets.
 
     Returns the received local stream (keys rebased into ``[0, K_local]``),
     this shard's key offset, the shard's overflow count (valid pairs past
-    the per-destination capacity — see :func:`_bucketize_pairs`), and the
-    raw flat received ``(keys, vals)`` — the hot-key split path folds its
-    partial tables from the latter, since hot pairs are routed OUTSIDE
-    their owner's range and dropped by the localization."""
-    send_keys, send_vals, overflow = _bucketize_pairs(
-        app, stream, num_shards=num_shards,
-        shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan)
+    the per-destination capacity — see :func:`wire.bucketize`), and the
+    decoded flat received ``(keys, vals)`` — the hot-key split path folds
+    its partial tables from the latter, since hot pairs are routed
+    OUTSIDE their owner's range and dropped by the localization."""
+    fmt = _wire_format_for(app, stream, num_shards=num_shards,
+                           shuffle_capacity=shuffle_capacity,
+                           shuffle_plan=shuffle_plan, wire=wire)
+    sk, sv, overflow = wirelib.bucketize(fmt, stream, shuffle_plan)
+    enc = wirelib.encode(fmt, sk, sv)
 
-    recv_keys = lax.all_to_all(send_keys, axis_name, split_axis=0,
-                               concat_axis=0, tiled=True)
-    recv_vals = jax.tree.map(
+    recv_enc = jax.tree.map(
         lambda v: lax.all_to_all(v, axis_name, split_axis=0,
                                  concat_axis=0, tiled=True),
-        send_vals)
+        enc)
 
     me = lax.axis_index(axis_name)
+    recv_keys, recv_vals = wirelib.decode(fmt, recv_enc, me)
     lstream, lo = _localize_recv(app, recv_keys, recv_vals,
                                  num_shards=num_shards, shard_index=me,
                                  shuffle_plan=shuffle_plan)
@@ -832,12 +778,13 @@ def _reduce_range(app, lstream: col.PairStream, lo):
 
 
 def _reduce_shard_fn(app, *, axis_name, num_shards, shuffle_capacity,
-                     shuffle_plan=None):
+                     shuffle_plan=None, wire="raw"):
     def fn(local_items):
         stream = map_phase(app, local_items)
         lstream, lo, overflow, _ = _shuffle_pairs(
             app, stream, axis_name=axis_name, num_shards=num_shards,
-            shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan)
+            shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan,
+            wire=wire)
         return _reduce_range(app, lstream, lo) + (overflow[None],)
 
     return fn
@@ -882,7 +829,8 @@ def _patch_hot_rows(spec, tables, counts, hot_tables, hot_counts,
 
 def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
                    use_kernels, chunk_pairs, bucket_size=None,
-                   level_fanouts=None, on_fallback=None, shuffle_plan=None):
+                   level_fanouts=None, on_fallback=None, shuffle_plan=None,
+                   wire="raw"):
     """Sort flow per shard: the reduce-flow key-partitioned all-to-all
     (bucket boundaries == shard key ranges, O(N) traffic), then the local
     sort collector folds the received presorted-by-range segment in
@@ -906,7 +854,8 @@ def _sort_shard_fn(app, spec, *, axis_name, num_shards, shuffle_capacity,
         stream = map_phase(app, local_items)
         lstream, lo, overflow, flat_recv = _shuffle_pairs(
             app, stream, axis_name=axis_name, num_shards=num_shards,
-            shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan)
+            shuffle_capacity=shuffle_capacity, shuffle_plan=shuffle_plan,
+            wire=wire)
         hot_patch = None
         if shuffle_plan is not None and shuffle_plan.hot_keys:
             ht, hc = _fold_hot_tables(app, spec, flat_recv[0],
@@ -1133,6 +1082,7 @@ def run_distributed(
     level_fanouts: tuple[int, ...] | None = None,
     strict_shuffle: bool = False,
     shuffle_plan=None,
+    wire: str = "raw",
 ):
     """shard_map the chosen flow over ``data_axis`` of ``mesh``.
 
@@ -1166,7 +1116,7 @@ def run_distributed(
         scatter_output=scatter_output, shuffle_capacity=shuffle_capacity,
         chunk_pairs=chunk_pairs, key_block=key_block,
         bucket_size=bucket_size, level_fanouts=level_fanouts,
-        shuffle_plan=shuffle_plan)
+        shuffle_plan=shuffle_plan, wire=wire)
     return post(jitted(items), strict_shuffle=strict_shuffle)
 
 
@@ -1185,6 +1135,7 @@ def build_distributed_fn(
     bucket_size: int | None = None,
     level_fanouts: tuple[int, ...] | None = None,
     shuffle_plan=None,
+    wire: str = "raw",
 ):
     """Build the persistent distributed executable for one (plan, mesh).
 
@@ -1220,7 +1171,7 @@ def build_distributed_fn(
                             bucket_size=bucket_size,
                             level_fanouts=level_fanouts,
                             on_fallback=_plan_fallback_cb(plan),
-                            shuffle_plan=shuffle_plan)
+                            shuffle_plan=shuffle_plan, wire=wire)
         out_spec = (P(data_axis), P(data_axis), P(data_axis), P(data_axis))
     else:
         if shuffle_plan is not None and shuffle_plan.hot_keys:
@@ -1229,7 +1180,7 @@ def build_distributed_fn(
                 "the reduce flow takes boundary rebalancing only")
         fn = _reduce_shard_fn(app, axis_name=data_axis, num_shards=S,
                               shuffle_capacity=shuffle_capacity,
-                              shuffle_plan=shuffle_plan)
+                              shuffle_plan=shuffle_plan, wire=wire)
         out_spec = (P(data_axis), P(data_axis), P(data_axis), P(data_axis))
     if (shuffle_plan is not None
             and plan.flow in ("reduce", "sort")
@@ -1340,6 +1291,7 @@ def run_resilient(
     level_fanouts: tuple[int, ...] | None = None,
     strict_shuffle: bool = False,
     shuffle_plan=None,
+    wire: str = "raw",
     coord=None,
     retry=None,
     chaos=None,
@@ -1445,7 +1397,7 @@ def run_resilient(
     _jits = jit_cache if jit_cache is not None else {}
     _jkey = (flow, H, S, per, chunk_pairs, key_block, use_kernels,
              combine_impl, shuffle_capacity, strict_shuffle, bucket_size,
-             level_fanouts,
+             level_fanouts, wire,
              shuffle_plan.epoch if shuffle_plan is not None else None)
 
     def _cached_jit(name, fn):
@@ -1480,23 +1432,30 @@ def run_resilient(
             raise ValueError(
                 f"shuffle_plan was derived for {shuffle_plan.num_shards} "
                 f"shards but run_resilient partitions into {S}")
-        # the boundary epoch rides in the checkpointable wire format:
-        # a durable partial bucketized under DIFFERENT boundaries must
-        # never be merged with this run's (the send buckets mean
-        # different key ranges) — restore rejects on mismatch and falls
-        # back to the deterministic recompute, keeping recovery bitwise
-        plan_epoch = (shuffle_plan.epoch if shuffle_plan is not None
-                      else 0)
+        # the wire epoch rides in the checkpointable partial: it
+        # fingerprints the FULL wire layout (codec, capacity envelope,
+        # boundary/hot ranges via the skew plan's epoch, value dtypes),
+        # so a durable partial bucketized under DIFFERENT boundaries or
+        # encoded by a different codec is never merged with this run's —
+        # restore rejects on mismatch and falls back to the
+        # deterministic recompute, keeping recovery bitwise
+        wire_fmt = _jits.get(("wire_fmt",) + _jkey)
+        if wire_fmt is None:
+            ak, av = jax.eval_shape(
+                lambda it: (lambda st: (st.keys, st.values))(
+                    map_phase(app, it)), shard_slice(0))
+            wire_fmt = _jits[("wire_fmt",) + _jkey] = wirelib.wire_format(
+                key_space=app.key_space, num_shards=S,
+                n_pairs=ak.shape[0], value_avals=av,
+                codec=wire, capacity=shuffle_capacity, plan=shuffle_plan)
 
         def _partial(local_items):
-            send_keys, send_vals, overflow = _bucketize_pairs(
-                app, map_phase(app, local_items), num_shards=S,
-                shuffle_capacity=shuffle_capacity,
-                shuffle_plan=shuffle_plan)
-            return {"send_keys": send_keys, "send_vals": send_vals,
+            sk, sv, overflow = wirelib.bucketize(
+                wire_fmt, map_phase(app, local_items), shuffle_plan)
+            return {"wire": wirelib.encode(wire_fmt, sk, sv),
                     "overflow": overflow,
-                    "boundary_epoch": jnp.full((1,), plan_epoch,
-                                               jnp.uint32)}
+                    "wire_epoch": jnp.full((1,), wire_fmt.epoch,
+                                           jnp.uint32)}
 
     partial_fn = _cached_jit("partial", _partial)
     partial_example = _jits.get(("partial_example",) + _jkey)
@@ -1542,16 +1501,27 @@ def run_resilient(
                 f"({e.reason}); quarantined, falling back to "
                 f"deterministic recompute")
             return None
+        except (ValueError, KeyError):
+            # the npz leaf structure no longer matches this run's wire
+            # layout (e.g. the codec changed between runs): the partial
+            # is stale by construction, treat like an epoch mismatch
+            log.epoch_rejects.append(s)
+            events.append(
+                f"checkpoint: shard {s} partial has a different wire "
+                f"layout than this run (codec/shape mismatch); discarded "
+                f"and the deterministic recompute takes over")
+            return None
         if flow in ("reduce", "sort"):
-            got = int(np.asarray(tree["boundary_epoch"]).reshape(-1)[0])
-            if got != plan_epoch:
+            got = int(np.asarray(tree["wire_epoch"]).reshape(-1)[0])
+            if got != wire_fmt.epoch:
                 log.epoch_rejects.append(s)
                 events.append(
-                    f"checkpoint: shard {s} partial carries boundary "
-                    f"epoch {got} != this run's {plan_epoch} (the skew "
-                    f"boundaries changed between runs); discarded — its "
-                    f"send buckets mean different key ranges — and the "
-                    f"deterministic recompute takes over")
+                    f"checkpoint: shard {s} partial carries wire epoch "
+                    f"{got} != this run's {wire_fmt.epoch} (the skew "
+                    f"boundaries or wire codec changed between runs); "
+                    f"discarded — its send buckets mean different key "
+                    f"ranges or bits — and the deterministic recompute "
+                    f"takes over")
                 return None
         return tree
 
@@ -1783,15 +1753,16 @@ def run_resilient(
         _surface_overflow(plan, overflow, strict=strict_shuffle,
                           shuffle_capacity=shuffle_capacity)
 
-        def _assemble(sk, sv):
+        def _assemble(*encs):
             # the host-side transpose of the tiled all-to-all: destination
-            # r receives every source's r-th bucket, in source order —
-            # swapaxes turns the stacked (source, dest, B) sends into a
-            # (dest, source, B) batch the vmapped phase B consumes whole
-            recv_keys = jnp.swapaxes(jnp.stack(sk), 0, 1)
-            recv_vals = jax.tree.map(
-                lambda *leaves: jnp.swapaxes(jnp.stack(leaves), 0, 1), *sv)
-            return recv_keys, recv_vals
+            # r receives every source's r-th encoded row, in source order —
+            # swapaxes turns the stacked (source, dest, ...) sends into a
+            # (dest, source, ...) batch the vmapped phase B consumes
+            # whole.  Works on the ENCODED tree, so checkpointed partials
+            # stay compressed all the way to the per-range decode.
+            return jax.tree.map(
+                lambda *leaves: jnp.swapaxes(jnp.stack(leaves), 0, 1),
+                *encs)
 
         def _flatten(stacked):
             # (S, W) range batches, flattened in shard order — identical
@@ -1805,14 +1776,14 @@ def run_resilient(
                     keys, values, counts, shuffle_plan)
             return keys, values, counts
 
-        send_keys = [partials[s]["send_keys"] for s in range(S)]
-        send_vals = [partials[s]["send_vals"] for s in range(S)]
+        encs = [partials[s]["wire"] for s in range(S)]
         ranks = jnp.arange(S, dtype=jnp.int32)
 
         skew_hot = (shuffle_plan is not None and shuffle_plan.hot_keys
                     and flow == "sort")
         if not skew_hot:
-            def _range_out(r, recv_keys, recv_vals):
+            def _range_out(r, renc):
+                recv_keys, recv_vals = wirelib.decode(wire_fmt, renc, r)
                 lstream, lo = _localize_recv(
                     app, recv_keys, recv_vals, num_shards=S,
                     shard_index=r, shuffle_plan=shuffle_plan)
@@ -1828,13 +1799,12 @@ def run_resilient(
             # one dispatch for the whole phase B: it is embarrassingly
             # parallel over destinations, so vmap batches the S per-range
             # calls and the assemble/flatten/densify glue fuses alongside
-            def _phase_b(sk, sv):
-                recv_keys, recv_vals = _assemble(sk, sv)
-                stacked = jax.vmap(_range_out)(ranks, recv_keys, recv_vals)
+            def _phase_b(encs):
+                renc = _assemble(*encs)
+                stacked = jax.vmap(_range_out)(ranks, renc)
                 return _flatten(stacked)
 
-            keys, values, counts = _cached_jit("phase_b", _phase_b)(
-                send_keys, send_vals)
+            keys, values, counts = _cached_jit("phase_b", _phase_b)(encs)
         else:
             # hot-split recombine, host-driven in two passes: (1) each
             # range folds its un-finalized tables AND its slice of the
@@ -1843,7 +1813,8 @@ def run_resilient(
             # monoid merge); (3) each range patches the merged hot rows
             # into the owner's table and finalizes — bitwise the
             # all-to-all shard fn's answer by the monoid merge argument.
-            def _range_tabs(r, recv_keys, recv_vals):
+            def _range_tabs(r, renc):
+                recv_keys, recv_vals = wirelib.decode(wire_fmt, renc, r)
                 lstream, _ = _localize_recv(
                     app, recv_keys, recv_vals, num_shards=S,
                     shard_index=r, shuffle_plan=shuffle_plan)
@@ -1876,17 +1847,16 @@ def run_resilient(
                 mc = jnp.sum(hc, axis=0).astype(hc.dtype)
                 return mt, mc
 
-            def _phase_b_hot(sk, sv):
-                recv_keys, recv_vals = _assemble(sk, sv)
-                tables, counts, ht, hc = jax.vmap(_range_tabs)(
-                    ranks, recv_keys, recv_vals)
+            def _phase_b_hot(encs):
+                renc = _assemble(*encs)
+                tables, counts, ht, hc = jax.vmap(_range_tabs)(ranks, renc)
                 mt, mc = _hot_merge(ht, hc)
                 stacked = jax.vmap(_range_fin, in_axes=(0, 0, 0, None, None))(
                     ranks, tables, counts, mt, mc)
                 return _flatten(stacked)
 
             keys, values, counts = _cached_jit("phase_b_hot", _phase_b_hot)(
-                send_keys, send_vals)
+                encs)
 
     if shuffle_plan is not None and flow in ("reduce", "sort"):
         log.skew_plan = shuffle_plan.describe()

@@ -67,6 +67,10 @@ class ExecutionPlan:
     #: histogram summary (heavy hitters, imbalance factor, sample-vs-cache
     #: source), the balanced range boundaries, and any hot-key splits.
     skew: tuple[str, ...] = ()
+    #: shuffle wire-codec provenance (distributed/wire.py): the codec the
+    #: all-to-all + checkpointed partials ride under and its modeled
+    #: encoded-vs-raw bytes.
+    wire: tuple[str, ...] = ()
 
     @property
     def optimized(self) -> bool:
@@ -105,6 +109,8 @@ class ExecutionPlan:
             lines.append(f"fusion: {decision}")
         for line in self.skew:
             lines.append(f"skew: {line}")
+        for line in self.wire:
+            lines.append(f"wire: {line}")
         for diag in self.diagnostics:
             lines.append(f"diagnostic: {diag}")
         for event in self.recovery:
@@ -127,12 +133,17 @@ def _cost_candidates(spec: C.CombinerSpec) -> tuple[str, ...]:
 
 
 def flow_cost_report(app, spec: C.CombinerSpec, n_pairs_hint: int,
-                     *, skew_factor: float = 1.0) -> cm.CostReport:
+                     *, skew_factor: float = 1.0, num_shards: int = 1,
+                     wire: str = "raw",
+                     shuffle_capacity: int | None = None) -> cm.CostReport:
     """Rank the eligible flows for ``app``/``spec`` at a workload size.
 
     The planner calls this under ``flow="auto"``; benchmarks use it
     directly to check the model's verdict against measured winners without
-    re-running combiner derivation (the spec is already in hand)."""
+    re-running combiner derivation (the spec is already in hand).
+
+    ``num_shards > 1`` prices the shuffled flows' all-to-all link traffic
+    under the ``wire`` codec (see ``cost_model.estimate_flow_cost``)."""
     value_bytes = int(jnp.dtype(app.value_aval.dtype).itemsize *
                       max(1, int(np.prod(app.value_aval.shape))))
     d, holder_bytes = spec.holder_width(app.value_aval)
@@ -140,7 +151,10 @@ def flow_cost_report(app, spec: C.CombinerSpec, n_pairs_hint: int,
         n_pairs=n_pairs_hint, key_space=app.key_space, d=d,
         value_bytes=value_bytes, holder_bytes=holder_bytes,
         max_values_per_key=getattr(app, "max_values_per_key", None),
-        candidates=_cost_candidates(spec), skew_factor=skew_factor)
+        candidates=_cost_candidates(spec), skew_factor=skew_factor,
+        num_shards=num_shards, wire=wire,
+        shuffle_capacity=shuffle_capacity,
+        value_dtype=str(app.value_aval.dtype))
 
 
 def plan_execution(app, *, flow: str = "auto",

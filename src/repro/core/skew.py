@@ -127,6 +127,11 @@ class ShuffleOptions:
     #: max destination shards one hot key may be split over (>=2 enables
     #: splitting; the monoid-merge gate still applies).
     hot_key_split_max: int = 4
+    #: shuffle wire codec ("raw" | "delta" | "packed") — see
+    #: ``distributed/wire.py``.  "delta" is lossless (bit-packed key
+    #: residuals); "packed" additionally narrows values to int8 and is an
+    #: explicit opt-in because it can change bits.
+    wire: str = "raw"
     # -- resolved planning state -------------------------------------------
     #: S+1 ascending key cuts (boundaries[j] <= k < boundaries[j+1] ->
     #: shard j); None means fixed-width legacy ranges.
@@ -146,6 +151,12 @@ class ShuffleOptions:
         if self.skew not in ("auto", "off"):
             raise ValueError(f"ShuffleOptions.skew must be 'auto' or 'off', "
                              f"got {self.skew!r}")
+        from repro.distributed import wire as wirelib
+
+        if self.wire not in wirelib.CODECS:
+            raise ValueError(
+                f"ShuffleOptions.wire must be one of {wirelib.CODECS}, "
+                f"got {self.wire!r}")
         if self.boundaries is not None:
             object.__setattr__(self, "boundaries",
                                tuple(int(b) for b in self.boundaries))

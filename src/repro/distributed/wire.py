@@ -1,0 +1,418 @@
+"""The shuffle wire layer: one owner for the all-to-all wire format.
+
+Three layers used to hard-code the same undocumented format — the
+``lax.all_to_all`` send buckets in ``core/engine.py``, the resilient
+driver's checkpointable per-shard partials, and the npz trees
+``checkpoint/ckpt.py`` persists.  This module is now the single source
+of truth: a :class:`WireFormat` record (codec + capacity envelope +
+per-destination key layout, resolved once by :func:`wire_format`) and
+pluggable codecs that encode/decode around the collective AND around
+the checkpoint store, so a compressed wire compresses recovery traffic
+for free.
+
+Codecs (``ShuffleOptions.wire``):
+
+``raw``
+    The legacy layout, bit for bit: ``keys [S, B] int32`` + the value
+    tree ``[S, B, ...]`` per destination bucket.
+``delta``
+    Exact/lossless key compression.  The framework *knows* each
+    destination bucket holds keys from one shard's key range (the sort
+    flow's send buckets are the top-level radix buckets), so every key
+    is stored as its delta from the destination's range base — a
+    residual in ``[0, span)`` — bit-packed at the static width
+    ``ceil(log2(span + n_hot + 1))`` instead of 32 bits.  Hot split
+    keys and the pad sentinel get reserved symbols past the span.
+    Slot order is untouched, so decode reproduces the raw bucket
+    bitwise and every downstream flow is bit-identical.
+``packed``
+    ``delta`` keys plus narrow value packing — explicit opt-in, since
+    it can change bits: integer value leaves are cast to int8 (exact
+    iff every value fits [-128, 127] — the int-exact-monoid contract is
+    the caller's), and float leaves reuse the
+    ``distributed/compression.py`` int8 quantization per destination
+    row (bounded error ≤ scale/2, with a per-row f32 scale riding the
+    wire as one extra scalar per destination).
+
+The encoded tree is what rides the wire and what the resilient driver
+checkpoints; ``WireFormat.epoch`` fingerprints the full layout (codec,
+capacity, ranges, value dtypes, skew-plan epoch) so a stale or
+foreign-codec partial is rejected at restore instead of silently
+merged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CODECS = ("raw", "delta", "packed")
+
+
+def shuffle_bucket_capacity(n_pairs: int, num_shards: int) -> int:
+    """Default per-destination send capacity of the all-to-all shuffle:
+    2x the uniform share, the Phoenix fixed-buffer posture.  A skewed key
+    distribution can exceed it — the shuffle COUNTS what falls past the
+    capacity and the engine surfaces it (``LoweringFallbackWarning``, plan
+    diagnostics, or a hard error under ``strict_shuffle``) instead of the
+    old behaviour of silently dropping the pairs."""
+    return -(-2 * n_pairs // num_shards)
+
+
+def resolve_capacity(n_pairs: int, num_shards: int, *,
+                     capacity: int | None = None, plan=None) -> int:
+    """The one capacity-resolution chain (explicit -> sampled envelope ->
+    legacy 2x uniform) — previously duplicated between the live shuffle
+    and the resilient partial builder."""
+    if capacity:
+        return int(capacity)
+    if plan is not None:
+        return int(plan.capacity_for(n_pairs))
+    return shuffle_bucket_capacity(n_pairs, num_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Static description of one shuffle's wire layout.
+
+    Frozen and tuple-valued so it hashes into jit closures; everything
+    here is resolved host-side (from static shapes and the skew plan),
+    never from traced values."""
+
+    codec: str
+    num_shards: int
+    #: per-destination bucket capacity B (slots, pairs).
+    capacity: int
+    key_space: int
+    #: per-destination key-range base (len ``num_shards``).
+    lo: tuple[int, ...]
+    #: widest destination range width — every non-hot key's residual
+    #: ``k - lo[dest]`` lives in ``[0, span)``.
+    span: int
+    #: hot split keys (routed outside their owner's range; they get
+    #: reserved symbols past the span).
+    hot_keys: tuple[int, ...] = ()
+    #: ``skew.ShufflePlan.epoch`` of the routing plan (0 = fixed-width).
+    plan_epoch: int = 0
+    #: value-leaf layout in flatten order: (dtype name, elements/pair).
+    value_leaves: tuple[tuple[str, int], ...] = (("int32", 1),)
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(
+                f"unknown wire codec {self.codec!r}; expected one of "
+                f"{CODECS}")
+        if len(self.lo) != self.num_shards:
+            raise ValueError(
+                f"need one range base per destination "
+                f"({self.num_shards}), got {len(self.lo)}")
+
+    @property
+    def n_hot(self) -> int:
+        return len(self.hot_keys)
+
+    @property
+    def n_symbols(self) -> int:
+        """Residuals [0, span) + one symbol per hot key + the pad
+        sentinel."""
+        return self.span + self.n_hot + 1
+
+    @property
+    def delta_bits(self) -> int:
+        """Static bit width of one packed key symbol."""
+        return max(1, math.ceil(math.log2(self.n_symbols)))
+
+    @property
+    def packed_row_bytes(self) -> int:
+        """Bytes of one destination's bit-packed key lane."""
+        return -(-self.capacity * self.delta_bits // 8)
+
+    @property
+    def epoch(self) -> int:
+        """Content fingerprint of the full wire layout — stamped into
+        checkpointed partials so restore can reject stale boundaries,
+        foreign codecs, resized capacity envelopes, or changed value
+        layouts (all of which change the meaning of the stored bytes)."""
+        return zlib.crc32(repr((
+            self.codec, self.num_shards, self.capacity, self.key_space,
+            self.lo, self.span, self.hot_keys, self.plan_epoch,
+            self.value_leaves)).encode())
+
+
+def wire_format(*, key_space: int, num_shards: int, n_pairs: int,
+                value_avals, codec: str = "raw",
+                capacity: int | None = None, plan=None) -> WireFormat:
+    """Resolve the wire layout for one shuffle.
+
+    ``value_avals`` is the value pytree of one shard's pair stream (or
+    shape/dtype structs of it); ``plan`` a ``skew.ShufflePlan`` or None
+    for the legacy fixed-width ranges.  ``capacity=None`` derives the
+    envelope (:func:`resolve_capacity`)."""
+    S = num_shards
+    B = resolve_capacity(n_pairs, S, capacity=capacity, plan=plan)
+    if plan is None:
+        k_local = -(-key_space // S)
+        lo = tuple(d * k_local for d in range(S))
+        span = k_local
+        hot: tuple[int, ...] = ()
+        plan_epoch = 0
+    else:
+        lo = tuple(plan.boundaries[:-1])
+        span = plan.width
+        hot = tuple(plan.hot_keys)
+        plan_epoch = plan.epoch
+    leaves = tuple(
+        (str(jnp.dtype(l.dtype)), int(np.prod(l.shape[1:], dtype=np.int64)))
+        for l in jax.tree.leaves(value_avals))
+    return WireFormat(codec=codec, num_shards=S, capacity=B,
+                      key_space=key_space, lo=lo, span=span, hot_keys=hot,
+                      plan_epoch=plan_epoch, value_leaves=leaves)
+
+
+# ---------------------------------------------------------------------------
+# Bucketize: pair stream -> per-destination send buckets
+# ---------------------------------------------------------------------------
+
+
+def bucketize(fmt: WireFormat, stream, plan=None):
+    """Pack a shard's pair stream into per-destination send buckets.
+
+    Range partitioning: key k -> shard ``k // ceil(K/S)`` — the shard key
+    ranges are the top-level radix buckets, which is why the sort flow can
+    reuse this machinery verbatim.  This is the wire format of the
+    all-to-all (``engine._shuffle_pairs``) AND the checkpointable
+    per-shard partial of the resilient driver (``engine.run_resilient``):
+    the send buckets are a pure function of the shard's items, so a lost
+    shard's contribution to every key range can be deterministically
+    recomputed.
+
+    ``plan`` (a ``skew.ShufflePlan``) replaces the fixed-width arithmetic
+    with sampled balanced range boundaries (searchsorted routing) and
+    round-robins each hot key's occurrences over its split destinations;
+    ``None`` keeps the legacy path bitwise.  It must be the plan ``fmt``
+    was resolved from.
+
+    Returns ``(send_keys [S, B], send_vals [S, B, ...], overflow)`` where
+    ``overflow`` counts the valid pairs that did NOT fit their
+    destination bucket (silently dropped by the pre-PR-5 shuffle).
+    """
+    K = fmt.key_space
+    S = fmt.num_shards
+    B = fmt.capacity
+    plan_epoch = plan.epoch if plan is not None else 0
+    if plan_epoch != fmt.plan_epoch:
+        raise ValueError(
+            f"shuffle plan (epoch {plan_epoch}) is not the one this "
+            f"WireFormat was resolved from (epoch {fmt.plan_epoch})")
+
+    if plan is None:
+        k_local = -(-K // S)
+        tgt = jnp.where(stream.valid, stream.keys // k_local, S)
+    else:
+        cuts = jnp.asarray(plan.boundaries[1:-1], jnp.int32)
+        tgt = jnp.searchsorted(cuts, stream.keys,
+                               side="right").astype(jnp.int32)
+        if plan.hot_keys:
+            hk = jnp.asarray(plan.hot_keys, jnp.int32)
+            hw = jnp.asarray(plan.hot_ways, jnp.int32)
+            owners = jnp.asarray(
+                [plan.hot_owner(k) for k in plan.hot_keys], jnp.int32)
+            eq = stream.keys[:, None] == hk[None, :]  # [n, H]
+            is_hot = jnp.any(eq, axis=1)
+            hidx = jnp.argmax(eq, axis=1)
+            # occurrence rank of each hot pair within its key: round-robin
+            # over the split destinations starting at the range owner
+            occ = jnp.take_along_axis(
+                jnp.cumsum(eq.astype(jnp.int32), axis=0),
+                hidx[:, None], axis=1)[:, 0] - 1
+            dest = (owners[hidx] + occ % hw[hidx]) % S
+            tgt = jnp.where(is_hot, dest, tgt)
+        tgt = jnp.where(stream.valid, tgt, S)
+    oh = (tgt[:, None] == jnp.arange(S)[None, :]).astype(jnp.int32)
+    rank = jnp.take_along_axis(
+        jnp.cumsum(oh, axis=0), jnp.minimum(tgt, S - 1)[:, None],
+        axis=1)[:, 0] - 1
+    ok = stream.valid & (rank < B)
+    overflow = jnp.sum(stream.valid & (rank >= B)).astype(jnp.int32)
+    slot = jnp.where(ok, jnp.minimum(tgt, S - 1) * B + rank, S * B)
+
+    send_keys = jnp.full((S * B,), K, jnp.int32).at[slot].set(
+        stream.keys, mode="drop").reshape(S, B)
+    send_vals = jax.tree.map(
+        lambda v: jnp.zeros((S * B,) + v.shape[1:], v.dtype).at[slot].set(
+            v, mode="drop").reshape((S, B) + v.shape[1:]),
+        stream.values)
+    return send_keys, send_vals, overflow
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed key lane (delta/packed codecs)
+# ---------------------------------------------------------------------------
+
+
+def _pack_symbols(sym, w: int):
+    """``[R, B] int32`` symbols < 2**w -> ``[R, ceil(B*w/8)] uint8``,
+    little-endian within and across bytes (jit-compatible, static
+    shapes)."""
+    R, B = sym.shape
+    bits = (sym[:, :, None] >> jnp.arange(w, dtype=jnp.int32)) & 1
+    flat = bits.reshape(R, B * w)
+    pad = (-(B * w)) % 8
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    grouped = flat.reshape(R, -1, 8)
+    return jnp.sum(grouped << jnp.arange(8, dtype=jnp.int32),
+                   axis=-1).astype(jnp.uint8)
+
+
+def _unpack_symbols(packed, capacity: int, w: int):
+    """Inverse of :func:`_pack_symbols`: ``[R, P] uint8`` ->
+    ``[R, capacity] int32``."""
+    R = packed.shape[0]
+    bits = (packed[:, :, None].astype(jnp.int32)
+            >> jnp.arange(8, dtype=jnp.int32)) & 1
+    flat = bits.reshape(R, -1)[:, :capacity * w]
+    grouped = flat.reshape(R, capacity, w)
+    return jnp.sum(grouped << jnp.arange(w, dtype=jnp.int32),
+                   axis=-1).astype(jnp.int32)
+
+
+def _symbols_of(fmt: WireFormat, send_keys):
+    """Keys ``[S, B]`` -> bounded symbols: range residual, hot index past
+    the span, or the pad sentinel ``span + n_hot``."""
+    lo = jnp.asarray(fmt.lo, jnp.int32)[:, None]
+    sym = send_keys - lo
+    if fmt.hot_keys:
+        hk = jnp.asarray(fmt.hot_keys, jnp.int32)
+        eq = send_keys[:, :, None] == hk
+        sym = jnp.where(jnp.any(eq, axis=-1),
+                        fmt.span + jnp.argmax(eq, axis=-1).astype(jnp.int32),
+                        sym)
+    return jnp.where(send_keys >= fmt.key_space, fmt.span + fmt.n_hot, sym)
+
+
+def _keys_of(fmt: WireFormat, sym, dest_index):
+    """Symbols ``[R, B]`` (received rows, one source per row) -> exact
+    keys for destination ``dest_index`` (traceable)."""
+    lo = jnp.asarray(fmt.lo, jnp.int32)[dest_index]
+    # hot symbols + the sentinel decode through one static table
+    tail = jnp.asarray(fmt.hot_keys + (fmt.key_space,), jnp.int32)
+    hot_i = jnp.clip(sym - fmt.span, 0, fmt.n_hot)
+    return jnp.where(sym < fmt.span, lo + sym, tail[hot_i]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Codecs: encode (send side) / decode (receive side)
+# ---------------------------------------------------------------------------
+
+
+def _float_leaf(dt) -> bool:
+    return jnp.issubdtype(jnp.dtype(dt), jnp.floating)
+
+
+def encode(fmt: WireFormat, send_keys, send_vals) -> dict:
+    """Bucketized sends -> the encoded tree that rides the all-to-all
+    (every leaf keeps a leading destination axis of ``num_shards``) and
+    lands in checkpointed partials."""
+    if fmt.codec == "raw":
+        return {"keys": send_keys, "vals": send_vals}
+    bits = _pack_symbols(_symbols_of(fmt, send_keys), fmt.delta_bits)
+    if fmt.codec == "delta":
+        return {"bits": bits, "vals": send_vals}
+    # packed: narrow every value leaf to int8; float leaves quantize per
+    # destination row with the compression.py path (scale rides along)
+    from repro.distributed import compression as comp
+
+    leaves, treedef = jax.tree.flatten(send_vals)
+    out, scales = [], []
+    for leaf in leaves:
+        if _float_leaf(leaf.dtype):
+            q, s = jax.vmap(comp.quant_int8)(leaf)
+            out.append(q)
+            scales.append(s)
+        elif leaf.dtype.itemsize > 1:
+            out.append(leaf.astype(jnp.int8))
+        else:
+            out.append(leaf)
+    enc = {"bits": bits, "vals": jax.tree.unflatten(treedef, out)}
+    if scales:
+        enc["scales"] = tuple(scales)
+    return enc
+
+
+def decode(fmt: WireFormat, enc: dict, dest_index):
+    """Encoded rows (one source per row, the all-to-all receive layout or
+    the resilient driver's host-side assembly of the same buckets) ->
+    ``(recv_keys [R, B], recv_vals [R, B, ...])`` for destination
+    ``dest_index`` (static or traced)."""
+    if fmt.codec == "raw":
+        return enc["keys"], enc["vals"]
+    sym = _unpack_symbols(enc["bits"], fmt.capacity, fmt.delta_bits)
+    keys = _keys_of(fmt, sym, dest_index)
+    if fmt.codec == "delta":
+        return keys, enc["vals"]
+    leaves, treedef = jax.tree.flatten(enc["vals"])
+    scales = list(enc.get("scales", ()))
+    out = []
+    for leaf, (dt, _) in zip(leaves, fmt.value_leaves):
+        dt = jnp.dtype(dt)
+        if _float_leaf(dt):
+            s = scales.pop(0)
+            out.append(leaf.astype(dt)
+                       * s.reshape((-1,) + (1,) * (leaf.ndim - 1)))
+        else:
+            out.append(leaf.astype(dt))
+    return keys, jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (cost model / roofline / benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of a pytree of arrays (or shape/dtype structs)."""
+    return int(sum(int(np.prod(l.shape, dtype=np.int64))
+                   * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def encoded_nbytes(fmt: WireFormat) -> int:
+    """Exact bytes of one source shard's encoded tree (all S destination
+    buckets) — matches ``tree_nbytes(encode(...))`` leaf for leaf."""
+    S, B = fmt.num_shards, fmt.capacity
+    if fmt.codec == "raw":
+        key_b = S * B * 4
+    else:
+        key_b = S * fmt.packed_row_bytes
+    val_b = 0
+    for dt, elems in fmt.value_leaves:
+        itemsize = jnp.dtype(dt).itemsize
+        if fmt.codec == "packed":
+            per = 1 if itemsize > 1 else itemsize
+            val_b += S * B * elems * per
+            if _float_leaf(dt):
+                val_b += S * 4  # the per-destination f32 scale
+        else:
+            val_b += S * B * elems * itemsize
+    return key_b + val_b
+
+
+def raw_nbytes(fmt: WireFormat) -> int:
+    """Bytes the same buckets take under the ``raw`` codec."""
+    return encoded_nbytes(dataclasses.replace(fmt, codec="raw"))
+
+
+def wire_bytes_per_shard(fmt: WireFormat) -> float:
+    """Per-shard bytes actually crossing links in the tiled all-to-all:
+    each shard keeps its own bucket, so ``(S-1)/S`` of the encoded tree
+    is wire traffic (the standard all-to-all algorithmic factor)."""
+    S = fmt.num_shards
+    if S <= 1:
+        return 0.0
+    return encoded_nbytes(fmt) * (S - 1) / S

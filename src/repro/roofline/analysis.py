@@ -356,3 +356,43 @@ def model_flops_estimate(cfg, shape_kind: str, seq: int, batch: int,
     if shape_kind == "prefill":
         return 2.0 * n * tokens
     return 2.0 * n * batch  # decode: one token per sequence
+
+
+def shuffle_wire_bytes(
+    codec: str = "raw",
+    *,
+    n_pairs: int,
+    key_space: int,
+    num_shards: int,
+    value_bytes: int = 4,
+    value_dtype: str = "int32",
+    capacity: int | None = None,
+    plan=None,
+) -> float:
+    """Per-shard link bytes of one tiled all-to-all shuffle under a wire
+    codec (``distributed/wire.py``).
+
+    ``n_pairs`` is the GLOBAL pair count (the model splits it uniformly
+    over the shards, matching the engine's data-axis partition);
+    ``capacity``/``plan`` follow the engine's envelope-resolution chain.
+    The encoded-tree bytes come from the wire layer's own accounting —
+    ``wire.encoded_nbytes`` matches ``tree_nbytes(encode(...))`` leaf for
+    leaf — times the standard all-to-all ``(S-1)/S`` factor, so the cost
+    model's wire term is assertable against measured wire bytes
+    (``bench_flow_sweep --wire``)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed import wire as wirelib
+
+    S = max(int(num_shards), 1)
+    if S <= 1:
+        return 0.0
+    per = -(-max(int(n_pairs), 1) // S)
+    itemsize = jnp.dtype(value_dtype).itemsize
+    elems = max(1, int(value_bytes) // itemsize)
+    fmt = wirelib.wire_format(
+        key_space=int(key_space), num_shards=S, n_pairs=per,
+        value_avals=jax.ShapeDtypeStruct((per, elems), value_dtype),
+        codec=codec, capacity=capacity, plan=plan)
+    return wirelib.wire_bytes_per_shard(fmt)

@@ -29,31 +29,48 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 #       histogram shuffle planner (bitwise-parity guarantees make this a
 #       pure routing change).  Tests that assert the fixed-width shuffle
 #       arithmetic itself mark themselves `fixed_shuffle` and skip.
+#   REPRO_TEST_WIRE=delta
+#       flips the ShuffleOptions.wire default, so every distributed/
+#       resilient shuffle encodes its all-to-all + checkpointed partials
+#       under the given wire codec (delta is lossless and bitwise —
+#       another pure routing change).  Tests that assert the raw wire
+#       layout itself mark themselves `raw_wire` and skip.
 # ---------------------------------------------------------------------------
 
-FLOW_OVERRIDE = os.environ.get("REPRO_TEST_FLOW", "").strip().lower() or None
+def _env_override(name: str) -> str | None:
+    """Matrix override value, with the ci.yml "off" default (the matrix
+    sets ``REPRO_TEST_*: ${{ matrix.x || 'off' }}``) parsed as absent."""
+    v = os.environ.get(name, "").strip().lower()
+    return None if v in ("", "off", "0", "false", "no") else v
+
+
+FLOW_OVERRIDE = _env_override("REPRO_TEST_FLOW")
 KERNELS_OVERRIDE = (os.environ.get("REPRO_TEST_KERNELS", "").strip().lower()
                     not in ("", "0", "false", "no"))
-SKEW_OVERRIDE = os.environ.get("REPRO_TEST_SKEW", "").strip().lower() or None
+SKEW_OVERRIDE = _env_override("REPRO_TEST_SKEW")
+WIRE_OVERRIDE = _env_override("REPRO_TEST_WIRE")
 
 
-def _apply_skew_override() -> None:
-    if SKEW_OVERRIDE is None:
+def _apply_shuffle_overrides() -> None:
+    if SKEW_OVERRIDE is None and WIRE_OVERRIDE is None:
         return
     import dataclasses
 
     from repro.core import skew
 
-    # flip only the DEFAULT of the frozen options record: every field has
+    # flip only the DEFAULTS of the frozen options record: every field has
     # a default, so __init__.__defaults__ lines up with the field order
     fields = [f.name for f in dataclasses.fields(skew.ShuffleOptions)]
     defaults = list(skew.ShuffleOptions.__init__.__defaults__)
-    defaults[fields.index("skew")] = "auto"
+    if SKEW_OVERRIDE is not None:
+        defaults[fields.index("skew")] = "auto"
+    if WIRE_OVERRIDE is not None:
+        defaults[fields.index("wire")] = WIRE_OVERRIDE
     skew.ShuffleOptions.__init__.__defaults__ = tuple(defaults)
 
-    # ExecutionOptions(shuffle=None) must also route through the planner:
-    # materialize the (now skew="auto") record where None would have
-    # kept the legacy fixed-width arithmetic
+    # ExecutionOptions(shuffle=None) must also route through the planner/
+    # codec: materialize the overridden record where None would have kept
+    # the legacy fixed-width arithmetic / raw wire
     from repro.core import api
 
     orig_post = api.ExecutionOptions.__post_init__
@@ -67,7 +84,7 @@ def _apply_skew_override() -> None:
 
 
 def _apply_matrix_overrides() -> None:
-    _apply_skew_override()
+    _apply_shuffle_overrides()
     if FLOW_OVERRIDE is None and not KERNELS_OVERRIDE:
         return
     from repro.core import api
@@ -126,6 +143,9 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "fixed_shuffle: asserts the fixed-width shuffle "
         "arithmetic/overflow behaviour (skipped under REPRO_TEST_SKEW)")
+    config.addinivalue_line(
+        "markers", "raw_wire: asserts the raw wire layout / bucket bytes "
+        "(skipped under REPRO_TEST_WIRE)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -139,6 +159,9 @@ def pytest_collection_modifyitems(config, items):
     skip_skew = pytest.mark.skip(
         reason="asserts the fixed-width shuffle arithmetic; "
                "REPRO_TEST_SKEW routes through the skew planner")
+    skip_wire = pytest.mark.skip(
+        reason="asserts the raw wire layout; REPRO_TEST_WIRE re-encodes "
+               "the shuffle wire")
     for item in items:
         if FLOW_OVERRIDE is not None and "auto_flow" in item.keywords:
             item.add_marker(skip_flow)
@@ -146,3 +169,5 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip_kern)
         if SKEW_OVERRIDE is not None and "fixed_shuffle" in item.keywords:
             item.add_marker(skip_skew)
+        if WIRE_OVERRIDE is not None and "raw_wire" in item.keywords:
+            item.add_marker(skip_wire)
